@@ -1,0 +1,42 @@
+"""Batch-size policy vs simulation (Challenge #6 closed-loop check).
+
+``repro.core.policies.optimal_batch_size`` is the analytical makespan
+model behind the paper's batch-sizing discussion; here we validate it
+against the simulator: the batch the model picks must be within 15 % of
+the empirically best batch's makespan, for both context modes.
+"""
+from __future__ import annotations
+
+from repro.core import PARTIAL, PERVASIVE, optimal_batch_size
+
+from .common import Report, run_experiment
+
+CANDIDATES = (1, 100, 1000, 3000, 7500)
+
+
+def main(n_total: int = 150_000):
+    rep = Report("Batch policy vs sim",
+                 ["mode", "policy_pick", "sim_best", "policy_pick_s",
+                  "sim_best_s", "regret"])
+    ok = True
+    for mode in (PARTIAL, PERVASIVE):
+        sims = {}
+        for b in CANDIDATES:
+            r = run_experiment(f"{mode.name}_{b}", mode=mode, batch=b,
+                               n_total=n_total)
+            sims[b] = r.makespan_s
+        pick = optimal_batch_size(
+            n_total, 20, infer_s=0.27, init_s=55.0, mode=mode,
+            slowdown_max=0.675 / 0.27, candidates=CANDIDATES)
+        best = min(sims, key=sims.get)
+        regret = sims[pick] / sims[best] - 1
+        rep.add(mode.name, pick, best, f"{sims[pick]:.0f}",
+                f"{sims[best]:.0f}", f"{100*regret:.1f}%")
+        ok &= regret <= 0.15
+    rep.print()
+    assert ok, "policy regret exceeded 15%"
+    print("batch policy validated")
+
+
+if __name__ == "__main__":
+    main()

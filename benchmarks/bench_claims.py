@@ -1,0 +1,69 @@
+"""Headline-claim validation: the paper's quantitative claims, asserted.
+
+  C1  98.1 % execution-time reduction (pv0 → pv6): ours must be ≥ 95 %.
+  C2  an inattentive solution DEGRADES execution by 245.3 % (pv3_1 vs pv0):
+      ours must degrade by ≥ 150 %.
+  C3  best 20-GPU speedup ≈ 13.9× (pv4_100): ours in [11, 17]×.
+  C4  batch-size sensitivity collapses 4306 % → 12.3 %: ours must show
+      partial ≥ 20× and pervasive ≤ 1.25× across batch 1..1000.
+  C5  busy-cluster drain: pervasive completes more work than partial
+      (paper: +36.7 %): ours must be ≥ +5 % with ≤ ¼ the evicted work.
+"""
+from __future__ import annotations
+
+from repro.core import PARTIAL, PERVASIVE
+
+from . import bench_fig4_scaling_efforts as fig4
+from . import bench_fig6_busy_cluster as fig6
+from .common import Report
+
+
+def main(n_total: int = 150_000, res=None, drain=None):
+    # claims are calibrated to the paper's 150k-scale experiments
+    res = res or fig4.run_all(n_total)
+    drain = drain or fig6.run_pair(n_total)
+    pv0 = res["pv0"][0]
+
+    reduction = 1 - res["pv6"][0] / pv0
+    degradation = res["pv3_1"][0] / pv0 - 1
+    speedup = pv0 / res["pv4_100"][0]
+    sens_partial = max(res[f"pv3_{t}"][0] for t in ("1", "100", "1k")) / \
+        min(res[f"pv3_{t}"][0] for t in ("1", "100", "1k"))
+    sens_perv = max(res[f"pv4_{t}"][0] for t in ("1", "100", "1k")) / \
+        min(res[f"pv4_{t}"][0] for t in ("1", "100", "1k"))
+    drain_gain = drain["pv5s"].completed / max(drain["pv5p"].completed,
+                                               1) - 1
+    evict_ratio = drain["pv5s"].evicted_inferences / \
+        max(drain["pv5p"].evicted_inferences, 1)
+
+    rep = Report("Headline claims — sim vs paper",
+                 ["claim", "paper", "sim", "pass"])
+    checks = [
+        ("C1 exec-time reduction", "98.1%", f"{100*reduction:.1f}%",
+         reduction >= 0.95),
+        ("C2 inattentive degradation", "+245.3%", f"+{100*degradation:.1f}%",
+         degradation >= 1.5),
+        ("C3 20-GPU speedup", "13.9x", f"{speedup:.1f}x",
+         11 <= speedup <= 17),
+        ("C4a partial batch sensitivity", "4306%",
+         f"{100*(sens_partial-1):.0f}%", sens_partial >= 20),
+        ("C4b pervasive batch sensitivity", "12.3%",
+         f"{100*(sens_perv-1):.1f}%", sens_perv <= 1.25),
+        ("C5a drain completed-work gain", "+36.7%",
+         f"+{100*drain_gain:.1f}%", drain_gain >= 0.05),
+        ("C5b drain evicted-work ratio", "2k vs 20k (0.10)",
+         f"{evict_ratio:.2f}", evict_ratio <= 0.25),
+    ]
+    ok = True
+    for name, paper, sim, passed in checks:
+        rep.add(name, paper, sim, "OK" if passed else "FAIL")
+        ok &= passed
+    rep.print()
+    if not ok:
+        raise SystemExit("headline claim validation FAILED")
+    print("all headline claims validated")
+    return checks
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Fig 4: the 21-experiment incremental-scaling sweep (pv0 → pv6).
+
+Reproduces the paper's full evaluation narrative on the SimExecutor and
+compares each experiment against the published execution time.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+from repro.core import NAIVE, PARTIAL, PERVASIVE
+from repro.cluster import opportunistic_supply, traces
+
+from .common import Report, run_experiment
+
+# exp id -> (mode, batch, published_seconds or None)
+PAPER_S: Dict[str, Optional[float]] = {
+    "pv0": 40_900, "pv1": 10_400, "pv2": 5_300,
+    "pv3_1": 141_100, "pv3_100": None, "pv3_1k": None, "pv3_3k": None,
+    "pv3_7.5k": None,
+    "pv4_1": None, "pv4_100": 2_900, "pv4_1k": None, "pv4_3k": None,
+    "pv4_7.5k": None,
+    "pv6_10a": None, "pv6_1p": None, "pv6_2p": 1_211, "pv6_6p": None,
+    "pv6_11p": None, "pv6": 783,
+}
+
+BATCHES = {"1": 1, "100": 100, "1k": 1000, "3k": 3000, "7.5k": 7500}
+
+
+def run_all(n_total: int = 150_000) -> Dict[str, Tuple[float, float, int]]:
+    out: Dict[str, Tuple[float, float, int]] = {}
+
+    r = run_experiment("pv0", mode=PERVASIVE, batch=100, n_workers=1,
+                       n_total=n_total,
+                       devices=[__import__("repro.cluster",
+                                           fromlist=["GPU_CATALOG"])
+                                .GPU_CATALOG["NVIDIA A10"]])
+    out["pv0"] = (r.makespan_s, r.avg_workers, r.evicted_inferences)
+
+    r = run_experiment("pv1", mode=NAIVE, batch=100, n_total=n_total)
+    out["pv1"] = (r.makespan_s, r.avg_workers, r.evicted_inferences)
+
+    r = run_experiment("pv2", mode=PARTIAL, batch=100, n_total=n_total)
+    out["pv2"] = (r.makespan_s, r.avg_workers, r.evicted_inferences)
+
+    for tag, b in BATCHES.items():
+        r = run_experiment(f"pv3_{tag}", mode=PARTIAL, batch=b,
+                           n_total=n_total)
+        out[f"pv3_{tag}"] = (r.makespan_s, r.avg_workers,
+                             r.evicted_inferences)
+    for tag, b in BATCHES.items():
+        r = run_experiment(f"pv4_{tag}", mode=PERVASIVE, batch=b,
+                           n_total=n_total)
+        out[f"pv4_{tag}"] = (r.makespan_s, r.avg_workers,
+                             r.evicted_inferences)
+
+    for exp, hour in [("pv6_10a", 10), ("pv6_1p", 13), ("pv6_2p", 14),
+                      ("pv6_6p", 18), ("pv6_11p", 23)]:
+        r = run_experiment(exp, mode=PERVASIVE, batch=100, n_total=n_total,
+                           devices=opportunistic_supply(200),
+                           trace=traces.diurnal(hour))
+        out[exp] = (r.makespan_s, r.avg_workers, r.evicted_inferences)
+    r = run_experiment("pv6", mode=PERVASIVE, batch=100, n_total=n_total,
+                       devices=opportunistic_supply(200),
+                       trace=traces.quiet_day())
+    out["pv6"] = (r.makespan_s, r.avg_workers, r.evicted_inferences)
+    return out
+
+
+def main(n_total: int = 150_000, res=None) -> Dict[str, Tuple[float, float, int]]:
+    res = res or run_all(n_total)
+    pv0 = res["pv0"][0]
+    rep = Report("Fig 4 — scaling efforts (sim vs paper)",
+                 ["exp", "sim_s", "paper_s", "speedup", "avg_workers",
+                  "evicted_inf"])
+    for exp, (t, w, ev) in res.items():
+        paper = PAPER_S.get(exp)
+        rep.add(exp, f"{t:.0f}", f"{paper:.0f}" if paper else "-",
+                f"{pv0 / t:.1f}x", f"{w:.1f}", ev)
+    rep.print()
+    return res
+
+
+if __name__ == "__main__":
+    main()

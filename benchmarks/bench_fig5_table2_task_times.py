@@ -1,0 +1,59 @@
+"""Fig 5 + Table 2: task execution-time distributions, pv[3,4]_[1,100].
+
+Pervasive context must give lower and more stable task times at small
+batch sizes; Table 2 reports mean/std/min/max against the paper's values.
+"""
+from __future__ import annotations
+
+import statistics
+from typing import Dict, List
+
+from repro.core import PARTIAL, PERVASIVE
+
+from .common import Report, run_experiment
+
+# paper Table 2: exp -> (mean, std, min, max)
+PAPER = {
+    "pv3_1": (15.10, 27.26, 5.55, 390.03),
+    "pv4_1": (0.32, 0.13, 0.0008, 15.25),
+    "pv3_100": (46.78, 32.88, 5.93, 195.89),
+    "pv4_100": (31.91, 9.3, 0.0008, 79.05),
+}
+
+
+def task_time_stats(n_total: int = 150_000) -> Dict[str, List[float]]:
+    out = {}
+    for exp, mode, batch in [("pv3_1", PARTIAL, 1),
+                             ("pv4_1", PERVASIVE, 1),
+                             ("pv3_100", PARTIAL, 100),
+                             ("pv4_100", PERVASIVE, 100)]:
+        r = run_experiment(exp, mode=mode, batch=batch, n_total=n_total)
+        out[exp] = [rec.exec_s for rec in r.records]
+    return out
+
+
+def main(n_total: int = 150_000):
+    stats = task_time_stats(n_total)
+    rep = Report("Table 2 — task exec time stats (sim | paper)",
+                 ["exp", "mean", "std", "min", "max",
+                  "paper_mean", "paper_std", "paper_min", "paper_max"])
+    for exp, xs in stats.items():
+        pm = PAPER[exp]
+        rep.add(exp, f"{statistics.mean(xs):.2f}",
+                f"{statistics.pstdev(xs):.2f}",
+                f"{min(xs):.2f}", f"{max(xs):.2f}",
+                *(f"{v}" for v in pm))
+    rep.print()
+
+    # Fig 5's qualitative claims, asserted:
+    import statistics as st
+    assert st.mean(stats["pv4_1"]) < st.mean(stats["pv3_1"]) / 5, \
+        "pervasive must collapse batch-1 task times"
+    assert st.pstdev(stats["pv4_100"]) < st.pstdev(stats["pv3_100"]), \
+        "pervasive must stabilise task times"
+    print("fig5 qualitative checks: OK")
+    return stats
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Roofline table: reads the dry-run jsonl artifacts (launch/dryrun.py).
+
+Per (arch × shape × mesh): the three roofline terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS (useful-compute fraction), and HBM fit.
+Regenerate inputs with:
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out experiments/dryrun_single.jsonl
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod --out experiments/dryrun_multipod.jsonl
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+from .common import Report
+
+EXP_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments")
+FILES = ["dryrun_single_opt.jsonl", "dryrun_multipod_opt.jsonl",
+         "dryrun_single_baseline2.jsonl"]
+
+V5E_HBM_GB = 16.0
+
+
+def load(path: Optional[str] = None) -> List[Dict]:
+    recs = []
+    for fname in ([path] if path else FILES):
+        p = fname if os.path.isabs(fname) else os.path.join(EXP_DIR, fname)
+        if not os.path.exists(p):
+            continue
+        with open(p) as f:
+            for line in f:
+                recs.append(json.loads(line))
+    return recs
+
+
+def main():
+    recs = load()
+    if not recs:
+        print("no dry-run artifacts found — run repro.launch.dryrun first")
+        return []
+    rep = Report("Roofline — per (arch × shape × mesh), terms in seconds",
+                 ["arch", "shape", "mesh", "compute_s", "memory_s",
+                  "collective_s", "bottleneck", "useful_flops",
+                  "hbm_gb/chip", "fits"])
+    n_fail = 0
+    for r in recs:
+        if "error" in r:
+            rep.add(r["arch"], r["shape"], r.get("mesh", "?"), "-", "-",
+                    "-", "ERROR", "-", "-", "-")
+            n_fail += 1
+            continue
+        hbm_gb = (r.get("mem_argument_size_in_bytes", 0)
+                  + r.get("mem_temp_size_in_bytes", 0)) / 1e9
+        rep.add(r["arch"], r["shape"],
+                r["mesh"] + ("/base" if r.get("variant") == "baseline"
+                             else ""),
+                f"{r['compute_s']:.2e}", f"{r['memory_s']:.2e}",
+                f"{r['collective_s']:.2e}", r["bottleneck"],
+                f"{r['useful_flops_frac']:.2f}", f"{hbm_gb:.1f}",
+                "y" if hbm_gb <= V5E_HBM_GB else "OVER")
+    rep.print()
+    single = [r for r in recs if r.get("mesh") == "16x16" and "error" not in r
+              and r.get("variant", "optimized") == "optimized"]
+    print(f"\ncombos: {len(recs)} ({n_fail} errors); single-pod optimized: "
+          f"{len(single)}")
+    by_bn = {}
+    for r in single:
+        by_bn[r["bottleneck"]] = by_bn.get(r["bottleneck"], 0) + 1
+    print("single-pod bottleneck distribution:", by_bn)
+    # baseline vs optimized deltas on the dominant term
+    base = {(r["arch"], r["shape"]): r for r in recs
+            if r.get("variant") == "baseline" and "error" not in r}
+    if base and single:
+        print("\nbaseline -> optimized (dominant-term seconds):")
+        rows = []
+        for r in single:
+            b = base.get((r["arch"], r["shape"]))
+            if not b:
+                continue
+            b_dom = max(b["compute_s"], b["memory_s"], b["collective_s"])
+            o_dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
+            if b_dom > 0 and b_dom / max(o_dom, 1e-12) >= 1.05:
+                rows.append((b_dom / o_dom, r["arch"], r["shape"], b_dom,
+                             o_dom))
+        for x, a, sh, bd, od in sorted(rows, reverse=True):
+            print(f"  {a:22s} {sh:12s} {bd:9.3g} -> {od:9.3g}  ({x:.1f}x)")
+    return recs
+
+
+if __name__ == "__main__":
+    main()

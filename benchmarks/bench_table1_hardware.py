@@ -1,0 +1,32 @@
+"""Table 1: the heterogeneous GPU catalog + calibration constants."""
+from __future__ import annotations
+
+from repro.cluster import GPU_CATALOG, TPU_CATALOG, pool_rate
+from repro.cluster.hardware import IDLE_PROPENSITY, REF_ACTIVE_PARAMS
+
+from .common import Report
+
+
+def main():
+    rep = Report("Table 1 — GPU catalog (counts are the paper's; infer_s "
+                 "calibrated from §6)",
+                 ["device", "year", "count", "infer_s", "mem_gb",
+                  "idle_propensity"])
+    for m in GPU_CATALOG.values():
+        rep.add(m.name, m.year, m.count, f"{m.infer_s:.3f}", m.mem_gb,
+                IDLE_PROPENSITY.get(m.name, 1.0))
+    rep.print()
+    total = sum(m.count for m in GPU_CATALOG.values())
+    print(f"catalogued GPUs: {total} (paper: 567 total, 8 majors = 75%)")
+
+    rep2 = Report("TPU analogue catalog (fleet mode)",
+                  ["device", "year", "count", "infer_s", "compile_s"])
+    for m in TPU_CATALOG.values():
+        rep2.add(m.name, m.year, m.count, f"{m.infer_s:.3f}",
+                 m.compile_base_s)
+    rep2.print()
+    return GPU_CATALOG
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Shared benchmark harness utilities."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.configs import get_config
+from repro.core import (ContextMode, MODES, NAIVE, PARTIAL, PERVASIVE,
+                        model_context_recipe)
+from repro.cluster import make_sim, opportunistic_supply, GPU_CATALOG
+
+CFG = get_config("smollm2-1.7b")
+RECIPE = model_context_recipe(CFG, include_compile=False)
+ACTIVE_PARAMS = CFG.n_active_params()
+N_INFERENCES = 150_000        # the paper's 150k FEVER claims
+
+
+@dataclass
+class ExpResult:
+    exp_id: str
+    makespan_s: float
+    avg_workers: float
+    completed: int
+    evicted_inferences: int
+    records: list = field(repr=False, default_factory=list)
+    sched: object = field(repr=False, default=None)
+
+
+def run_experiment(exp_id: str, *, mode: ContextMode, batch: int,
+                   n_workers: int = 20, n_total: int = N_INFERENCES,
+                   devices=None, trace=None, evict_priority=None,
+                   until: Optional[float] = None) -> ExpResult:
+    sched, ex, fac = make_sim(devices=devices, trace=trace,
+                              evict_priority=evict_priority)
+    key = sched.register_context(RECIPE)
+    sched.submit_sweep(key, n_total, batch, mode,
+                       active_params=ACTIVE_PARAMS)
+    if trace is None:
+        fac.reconcile(n_workers)
+    ex.pump()
+    ex.loop.run(until=until, stop=lambda: sched.done)
+    return ExpResult(exp_id, sched.makespan(), sched.avg_connected_workers(),
+                     sched.completed_inferences, sched.evicted_inferences,
+                     sched.records, sched)
+
+
+class Report:
+    """Collects rows; prints an aligned table + a machine-readable CSV."""
+
+    def __init__(self, title: str, columns: List[str]):
+        self.title = title
+        self.columns = columns
+        self.rows: List[List[str]] = []
+
+    def add(self, *values) -> None:
+        self.rows.append([str(v) for v in values])
+
+    def print(self) -> None:
+        widths = [max(len(c), *(len(r[i]) for r in self.rows)) if self.rows
+                  else len(c) for i, c in enumerate(self.columns)]
+        print(f"\n== {self.title} ==")
+        print("  ".join(c.ljust(w) for c, w in zip(self.columns, widths)))
+        for r in self.rows:
+            print("  ".join(v.ljust(w) for v, w in zip(r, widths)))
+        print("-- csv --")
+        print(",".join(self.columns))
+        for r in self.rows:
+            print(",".join(r))
+
+
+def fmt_s(x: float) -> str:
+    return f"{x:,.0f}s"

@@ -1,0 +1,42 @@
+"""Benchmark driver: one module per paper table/figure + roofline.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick]
+
+--quick runs the sims at 15k inferences instead of the paper's 150k
+(identical code paths, ~10x faster; claim tolerances unchanged).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+    n_total = 15_000 if args.quick else 150_000
+
+    from . import (bench_table1_hardware, bench_fig4_scaling_efforts,
+                   bench_fig5_table2_task_times, bench_fig6_busy_cluster,
+                   bench_fig7_resilience, bench_claims, bench_roofline,
+                   bench_batch_policy)
+
+    t0 = time.time()
+    bench_table1_hardware.main()
+    res4 = bench_fig4_scaling_efforts.run_all(150_000)   # claims need paper scale
+    bench_fig4_scaling_efforts.main(res=res4)
+    bench_fig5_table2_task_times.main(n_total)
+    res6 = bench_fig6_busy_cluster.run_pair(150_000)
+    bench_fig6_busy_cluster.main(res=res6)
+    bench_fig7_resilience.main(n_total)
+    bench_claims.main(res=res4, drain=res6)
+    bench_batch_policy.main(n_total)
+    bench_roofline.main()
+    print(f"\nall benchmarks done in {time.time()-t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,24 @@
+"""Eviction resilience (paper Fig 6): a cluster that turns busy mid-run.
+
+20 GPUs for 15 minutes, then 1 reclaimed per minute (A10s first, no grace
+period).  Compares partial vs pervasive context management on completed
+work and evicted work.
+
+  PYTHONPATH=src python examples/busy_cluster_drain.py
+"""
+import os
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main():
+    from benchmarks import bench_fig6_busy_cluster as fig6
+    res = fig6.main(150_000)
+    s, p = res["pv5s"], res["pv5p"]
+    print(f"\npervasive kept {s.completed - p.completed:,} more inferences "
+          f"alive through the drain; evicted work "
+          f"{s.evicted_inferences:,} vs {p.evicted_inferences:,}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Prompt-template search — the actual purpose of the PfF application.
+
+Sweeps all prompt templates against the same (reduced) LLM, reusing one
+hosted context per template (template text is a *context input*, so each
+template is its own recipe), and reports the accuracy leaderboard the
+paper's users are after.
+
+  PYTHONPATH=src python examples/template_search.py [--claims 48]
+"""
+import argparse
+import os
+import sys
+import time
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import get_smoke_config
+from repro.data import TEMPLATES, accuracy, generate_claims
+from repro.inference import sweep_accuracy
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--claims", type=int, default=48)
+    ap.add_argument("--arch", default="smollm2-1.7b")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    claims = generate_claims(args.claims, seed=5)
+    board = []
+    for name in TEMPLATES:
+        t0 = time.perf_counter()
+        acc = sweep_accuracy(cfg, name, claims, batch=8)
+        board.append((acc, name, time.perf_counter() - t0))
+        print(f"  {name:15s} accuracy {acc:.3f}  ({board[-1][2]:.1f}s)")
+    board.sort(reverse=True)
+    print(f"\nbest (LLM, template) pair: ({args.arch}, {board[0][1]}) "
+          f"at {board[0][0]:.3f}")
+    print("note: the reduced model is untrained — accuracies hover around "
+          "chance; at paper scale this sweep is exactly what the "
+          "opportunistic cluster runs 150k times per pair.")
+
+
+if __name__ == "__main__":
+    main()

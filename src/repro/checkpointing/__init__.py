@@ -1,0 +1,98 @@
+"""Checkpointing: pytree save/restore with sharded device placement.
+
+Weights-on-disk is the largest context element; this module is the staging
+format behind ``ContextElement("weights")``.  Storage is a single ``.npz``
+(one entry per flattened pytree path) plus a json manifest capturing dtypes
+and the tree structure, so restore can place each leaf directly onto its
+:class:`NamedSharding` without materialising the full tree on one host.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+_SEP = "||"
+
+
+def _flatten(params) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save_checkpoint(path: str, params, *, step: int = 0) -> int:
+    """Write params; returns total bytes written.
+
+    numpy's npz cannot round-trip ml_dtypes (bfloat16 etc.) — those leaves
+    are stored as raw uint views and re-viewed on restore per the manifest.
+    """
+    os.makedirs(path, exist_ok=True)
+    flat = {k: np.asarray(v) for k, v in _flatten(params).items()}
+    stored = {}
+    for k, v in flat.items():
+        if v.dtype.kind not in "fiub" or str(v.dtype) == "bfloat16":
+            stored[k] = v.view(np.uint16 if v.dtype.itemsize == 2
+                               else np.uint8)
+        else:
+            stored[k] = v
+    np.savez(os.path.join(path, "params.npz"), **stored)
+    manifest = {
+        "step": step,
+        "leaves": {k: {"dtype": str(v.dtype), "shape": list(v.shape)}
+                   for k, v in flat.items()},
+    }
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return int(sum(v.nbytes for v in flat.values()))
+
+
+def restore_checkpoint(path: str, like, *, shardings=None):
+    """Restore into the structure of ``like`` (a params pytree or its spec).
+
+    ``shardings`` (optional pytree matching ``like``) places each leaf via
+    ``jax.device_put`` directly onto its NamedSharding — host memory never
+    holds more than one leaf beyond the mmap'd npz.
+    """
+    data = np.load(os.path.join(path, "params.npz"), mmap_mode="r")
+    with open(os.path.join(path, "manifest.json")) as f:
+        leaves_meta = json.load(f)["leaves"]
+    flat_like = _flatten(like)
+    flat_shard = _flatten(shardings) if shardings is not None else {}
+    out = {}
+    for key, leaf in flat_like.items():
+        arr = data[key]
+        saved_dtype = leaves_meta[key]["dtype"]
+        if str(arr.dtype) != saved_dtype:      # stored as a raw uint view
+            import ml_dtypes
+            arr = np.asarray(arr).view(np.dtype(
+                getattr(ml_dtypes, saved_dtype)))
+        if list(arr.shape) != list(np.shape(leaf)):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {np.shape(leaf)}")
+        tgt_dtype = getattr(leaf, "dtype", arr.dtype)
+        arr = arr.astype(tgt_dtype)
+        sh = flat_shard.get(key)
+        out[key] = jax.device_put(arr, sh) if sh is not None else \
+            jax.numpy.asarray(arr)
+    # rebuild the tree
+    leaves_order = [
+        _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        for path, _ in jax.tree_util.tree_flatten_with_path(like)[0]]
+    treedef = jax.tree_util.tree_structure(like)
+    return jax.tree_util.tree_unflatten(treedef,
+                                        [out[k] for k in leaves_order])
+
+
+def checkpoint_step(path: str) -> Optional[int]:
+    m = os.path.join(path, "manifest.json")
+    if not os.path.exists(m):
+        return None
+    with open(m) as f:
+        return json.load(f)["step"]

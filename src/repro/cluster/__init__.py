@@ -1,0 +1,21 @@
+"""Cluster runtime: DES engine, hardware catalog, workers, scheduler,
+factory, availability traces, and the dual (sim/live) executors."""
+from .events import EventLoop
+from .hardware import (GPU_CATALOG, TPU_CATALOG, PAPER_CLUSTER, ClusterSpec,
+                       DeviceModel, cluster_sample, paper_20gpu_pool,
+                       pool_rate, REF_ACTIVE_PARAMS)
+from .worker import Worker
+from .scheduler import Assignment, Scheduler, Task, TaskRecord
+from .executors import LiveExecutor, SimExecutor
+from .factory import Factory, make_sim, opportunistic_supply
+from .observability import ProgressMonitor, Snapshot, format_snapshot
+from . import traces
+
+__all__ = [
+    "Assignment", "ClusterSpec", "DeviceModel", "EventLoop", "Factory",
+    "GPU_CATALOG", "LiveExecutor", "PAPER_CLUSTER", "REF_ACTIVE_PARAMS",
+    "Scheduler", "SimExecutor", "TPU_CATALOG", "Task", "TaskRecord",
+    "Worker", "cluster_sample", "make_sim", "opportunistic_supply",
+    "paper_20gpu_pool", "pool_rate", "traces",
+    "ProgressMonitor", "Snapshot", "format_snapshot",
+]

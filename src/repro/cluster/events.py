@@ -1,0 +1,58 @@
+"""Minimal discrete-event engine for the cluster simulator.
+
+A classic calendar-queue DES: a heap of (time, seq, callback).  The same
+scheduler/registry/transfer/cache code runs under this engine (SimExecutor)
+and under wall-clock time (LiveExecutor); only task execution time differs
+(DESIGN.md §3, dual execution backend).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Callable, List, Optional, Tuple
+
+
+class EventLoop:
+    def __init__(self):
+        self._heap: List[Tuple[float, int, Callable[[], None]]] = []
+        self._seq = itertools.count()
+        self._now = 0.0
+
+    @property
+    def now(self) -> float:
+        return self._now
+
+    def at(self, t: float, fn: Callable[[], None]) -> None:
+        if t < self._now:
+            raise ValueError(f"scheduling into the past: {t} < {self._now}")
+        heapq.heappush(self._heap, (t, next(self._seq), fn))
+
+    def after(self, delay: float, fn: Callable[[], None]) -> None:
+        self.at(self._now + max(delay, 0.0), fn)
+
+    def step(self) -> bool:
+        if not self._heap:
+            return False
+        t, _, fn = heapq.heappop(self._heap)
+        self._now = t
+        fn()
+        return True
+
+    def run(self, *, until: Optional[float] = None,
+            stop: Optional[Callable[[], bool]] = None,
+            max_events: int = 50_000_000) -> float:
+        """Run until the heap drains, ``until`` time passes, or ``stop()``."""
+        n = 0
+        while self._heap:
+            if stop is not None and stop():
+                break
+            t = self._heap[0][0]
+            if until is not None and t > until:
+                self._now = until
+                break
+            if not self.step():
+                break
+            n += 1
+            if n >= max_events:
+                raise RuntimeError(f"event budget exceeded ({max_events})")
+        return self._now

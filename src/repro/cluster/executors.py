@@ -1,0 +1,245 @@
+"""Task-execution backends: discrete-event simulation and live JAX.
+
+Both executors drive the SAME :class:`~repro.cluster.scheduler.Scheduler`
+(routing, registry, cache, policies).  Only the source of task duration
+differs:
+
+* :class:`SimExecutor` — durations from the calibrated hardware catalog
+  (paper-scale runs: 150 k inferences, 186 GPUs);
+* :class:`LiveExecutor` — really materialises contexts (device_put, jit)
+  and runs forward passes on this container's device, measuring wall time.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Optional
+
+from ..core import ContextMode, NAIVE, PARTIAL, PERVASIVE, Tier
+from .events import EventLoop
+from .hardware import ClusterSpec
+from .scheduler import Assignment, Scheduler
+
+
+class SimExecutor:
+    """Discrete-event executor with the calibrated cluster time model.
+
+    ``prestage=True`` enables proactive spanning-tree context distribution
+    (paper §5.3.1): when workers join and a context already has ready
+    hosts, the scheduler plans a fanout-capped tree over the joiners and
+    stages them immediately, instead of lazily on first task dispatch.
+    """
+
+    def __init__(self, scheduler: Scheduler, loop: Optional[EventLoop] = None,
+                 *, prestage: bool = False, fanout_cap: int = 3):
+        self.sched = scheduler
+        self.loop = loop or EventLoop()
+        self.cluster: ClusterSpec = scheduler.cluster
+        self.prestage_enabled = prestage
+        self.fanout_cap = fanout_cap
+        self._manager_free = 0.0
+        self._fs_streams = 0
+        self._peer_streams: Dict[str, int] = {}   # outbound per source
+
+    # -- proactive spanning-tree distribution (§5.3.1) ---------------------
+    def prestage(self, recipe_key: str) -> int:
+        """Stage ``recipe_key`` onto every context-less idle worker via a
+        topology-aware spanning tree. Returns the number of targets."""
+        from ..core import Peer, plan_spanning_tree
+        reg = self.sched.registry
+        recipe = reg.recipes[recipe_key]
+        ready = reg.ready_workers(recipe_key)
+        if not ready:
+            return 0
+        have = reg.workers_with(recipe_key)
+        c = self.cluster
+        mk = lambda w: Peer(w.worker_id, w.zone, bw_local=c.peer_bw_local,
+                            bw_cross=c.peer_bw_cross)
+        sources = [mk(self.sched.workers[wid]) for wid in ready
+                   if wid in self.sched.workers]
+        targets = [mk(w) for w in self.sched.workers.values()
+                   if w.worker_id not in have and w.idle]
+        if not targets or not sources:
+            return 0
+        plan = plan_spanning_tree(recipe.transfer_bytes, sources, targets,
+                                  fanout_cap=self.fanout_cap,
+                                  t0=self.loop.now)
+        for edge in plan.edges:
+            w = self.sched.workers.get(edge.dst)
+            if w is None:
+                continue
+            w.staging = True
+            reg.mark_staging(recipe_key, edge.dst)
+
+            def arrive(wid=edge.dst):
+                w = self.sched.workers.get(wid)
+                if w is None:
+                    return                      # evicted while in flight
+                lib = w.library_for(recipe)
+                cost = lib.materialize_cost(w.device, already_local=False,
+                                            fetch_bw=float("inf"))
+
+                def ready_cb(wid=wid):
+                    w = self.sched.workers.get(wid)
+                    if w is None:
+                        return
+                    w.staging = False
+                    reg.mark_ready(recipe_key, wid)
+                    self.pump()
+
+                self.loop.after(cost.total_s, ready_cb)
+
+            self.loop.at(edge.end_s, arrive)
+        return len(targets)
+
+    # -- shared-filesystem contention (Challenge #5) -----------------------
+    def _fs_bw(self) -> float:
+        c = self.cluster
+        return min(c.shared_fs_stream_bw,
+                   c.shared_fs_bw / max(1, self._fs_streams + 1))
+
+    def _with_fs_stream(self, duration: float) -> None:
+        self._fs_streams += 1
+        self.loop.after(duration, self._end_fs_stream)
+
+    def _end_fs_stream(self) -> None:
+        self._fs_streams = max(0, self._fs_streams - 1)
+
+    # -- staging time model -------------------------------------------------
+    def _staging_cost(self, a: Assignment) -> float:
+        """Seconds of context staging for a cold dispatch (0 when warm)."""
+        task, w = a.task, a.worker
+        recipe = self.sched.registry.recipes[task.recipe_key]
+        mode = task.mode
+        lib = w.library_for(recipe)
+        if mode is NAIVE:
+            # sandbox-per-task: deps via shared fs, weights re-downloaded
+            # from the model hub, nothing reused (pv1).
+            deps = recipe.element("deps")
+            weights = recipe.element("weights")
+            fs_bw = self._fs_bw()
+            fetch = deps.nbytes_disk / fs_bw
+            self._with_fs_stream(fetch)
+            fetch += weights.nbytes_disk / self.cluster.internet_bw
+            load = weights.nbytes(Tier.HOST) / w.device.disk_bw
+            h2d = weights.nbytes(Tier.DEVICE) / w.device.h2d_bw
+            return fetch + load + h2d + recipe.activation_s
+        # partial / pervasive: the library stages against the local cache
+        if a.peer_source is not None:
+            base = (self.cluster.peer_bw_cross if a.cross_zone
+                    else self.cluster.peer_bw_local)
+            # source NIC is shared by its concurrent outbound transfers
+            n = self._peer_streams.get(a.peer_source, 0)
+            fetch_bw = base / (n + 1)
+        else:
+            fetch_bw = self._fs_bw()
+        cost = lib.materialize_cost(w.device, fetch_bw=fetch_bw)
+        if cost.fetch_s > 0:
+            if a.peer_source is not None:
+                src = a.peer_source
+                self._peer_streams[src] = self._peer_streams.get(src, 0) + 1
+                self.loop.after(cost.fetch_s, lambda s=src: (
+                    self._peer_streams.__setitem__(
+                        s, max(0, self._peer_streams.get(s, 1) - 1))))
+            else:
+                self._with_fs_stream(cost.fetch_s)
+        return cost.total_s
+
+    def _post_exec(self, a: Assignment) -> None:
+        """Mode-dependent teardown after a task finishes (paper §5.2 obs 3)."""
+        task, w = a.task, a.worker
+        recipe = self.sched.registry.recipes[task.recipe_key]
+        if task.mode is PERVASIVE:
+            return                      # library stays resident
+        lib = w.libraries.get(recipe.key)
+        if lib is not None:
+            lib.teardown()
+        if task.mode is PARTIAL:
+            # sandbox destroyed but registered disk artefacts survive
+            for e in recipe.elements:
+                if w.cache.tier_of(e.key) is not None:
+                    w.cache.put(e, Tier.DISK)
+        else:                           # naive: nothing survives
+            for e in recipe.elements:
+                w.cache.drop(e.key)
+
+    # -- dispatch loop --------------------------------------------------------
+    def pump(self) -> None:
+        while True:
+            a = self.sched.route()
+            if a is None:
+                return
+            self._start(a)
+
+    def _start(self, a: Assignment) -> None:
+        # the manager is serial: one dispatch per manager_dispatch_s
+        t0 = max(self.loop.now, self._manager_free) \
+            + self.cluster.manager_dispatch_s
+        self._manager_free = t0
+        self.sched.on_start(a)
+        task, w = a.task, a.worker
+        staging_s = 0.0 if a.warm else self._staging_cost(a)
+        infer_s = task.n_inferences * w.device.infer_time(task.active_params)
+        wid, tid = w.worker_id, task.task_id
+
+        def staged():
+            if wid in self.sched.workers and tid in self.sched.running:
+                self.sched.on_staged(a)
+
+        def complete():
+            if tid not in self.sched.running:
+                return                  # evicted mid-run; already requeued
+            self.sched.on_complete(a, t0, self.loop.now)
+            self._post_exec(a)
+            self.pump()
+
+        if not a.warm:
+            self.loop.at(t0 + staging_s, staged)
+        self.loop.at(t0 + staging_s + infer_s, complete)
+
+    # -- run ------------------------------------------------------------------
+    def run(self, *, until: Optional[float] = None) -> float:
+        self.pump()
+        self.loop.run(until=until, stop=lambda: self.sched.done)
+        return self.sched.makespan()
+
+
+class LiveExecutor:
+    """Synchronous wall-clock executor: contexts and tasks really run.
+
+    ``fns[recipe_key]`` is the bound function ``fn(payloads, task_payload)``
+    executed inside the library's address space (paper Fig 3's
+    ``infer_model``).  All simulated workers share this container's device;
+    what is real is the context lifecycle — import, weight materialisation,
+    jit compile on first use, and reuse on subsequent invocations.
+    """
+
+    def __init__(self, scheduler: Scheduler,
+                 fns: Dict[str, Callable[..., Any]]):
+        self.sched = scheduler
+        self.fns = fns
+        self.results: Dict[int, Any] = {}
+        self._t0 = time.perf_counter()
+
+    def _now(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def run(self) -> float:
+        while not self.sched.done:
+            a = self.sched.route()
+            if a is None:
+                raise RuntimeError("deadlock: tasks queued but no idle worker")
+            task, w = a.task, a.worker
+            recipe = self.sched.registry.recipes[task.recipe_key]
+            t_start = self._now()
+            self.sched.on_start(a)
+            lib = w.library_for(recipe)
+            if not lib.ready:
+                lib.materialize()
+            self.sched.on_staged(a)
+            out = lib.invoke(self.fns[task.recipe_key], task.payload)
+            self.results[task.task_id] = out
+            t_end = self._now()
+            self.sched.on_complete(a, t_start, t_end)
+            if task.mode is not PERVASIVE:
+                lib.teardown()          # pay init again next task
+        return self.sched.makespan()

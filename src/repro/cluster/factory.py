@@ -1,0 +1,86 @@
+"""The factory: reconciles the worker pool against an availability trace.
+
+Paper §5.1: "The pool of resources is maintained by the TaskVine factory,
+a daemon-like process that monitors the current resource pool and adjusts
+it based on a given resource policy and the current load of the cluster."
+
+In the sim, cluster load is exogenous (a :mod:`traces` trace of target
+worker counts); the factory submits or evicts pilot jobs to track it.
+Joins draw devices from a supply iterator (heterogeneous, Table-1
+proportioned); evictions pick victims by ``evict_priority`` (pv5 drains
+A10s first) — the *scheduler* then requeues any running task.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Callable, Iterable, Iterator, List, Optional
+
+from .events import EventLoop
+from .executors import SimExecutor
+from .hardware import DeviceModel, cluster_sample, paper_20gpu_pool
+from .scheduler import Scheduler
+from .traces import Trace
+from .worker import Worker
+
+
+class Factory:
+    def __init__(self, scheduler: Scheduler, executor: SimExecutor,
+                 device_supply: Iterable[DeviceModel],
+                 *, workers_per_zone: int = 8,
+                 evict_priority: Optional[Callable[[Worker], float]] = None):
+        self.sched = scheduler
+        self.ex = executor
+        self.loop: EventLoop = executor.loop
+        self._supply: Iterator[DeviceModel] = itertools.cycle(device_supply)
+        self._zone_counter = itertools.count()
+        self.workers_per_zone = workers_per_zone
+        # higher priority value = evicted first (default: newest joiner)
+        self.evict_priority = evict_priority or (lambda w: w.joined_s)
+
+    def _next_zone(self) -> str:
+        return f"z{next(self._zone_counter) // self.workers_per_zone}"
+
+    # ------------------------------------------------------------------
+    def reconcile(self, target: int) -> None:
+        now = self.loop.now
+        cur = len(self.sched.workers)
+        if target > cur:
+            for _ in range(target - cur):
+                w = Worker(next(self._supply), zone=self._next_zone())
+                self.sched.add_worker(w, now)
+            if getattr(self.ex, "prestage_enabled", False):
+                for key in self.sched.registry.recipes:
+                    self.ex.prestage(key)
+            self.ex.pump()
+        elif target < cur:
+            victims = sorted(self.sched.workers.values(),
+                             key=self.evict_priority, reverse=True)
+            for w in victims[:cur - target]:
+                self.sched.on_evict(w.worker_id, now)
+            self.ex.pump()
+
+    def apply_trace(self, trace: Trace) -> None:
+        for t, n in trace:
+            self.loop.at(t, lambda n=n: self.reconcile(n))
+
+
+# ---------------------------------------------------------------------------
+# Convenience: assemble the whole sim for one experiment
+# ---------------------------------------------------------------------------
+
+def make_sim(devices: Optional[List[DeviceModel]] = None,
+             trace: Optional[Trace] = None,
+             *, evict_priority=None, workers_per_zone: int = 8):
+    """Returns (scheduler, executor, factory) wired together."""
+    sched = Scheduler()
+    ex = SimExecutor(sched)
+    devices = devices if devices is not None else paper_20gpu_pool()
+    fac = Factory(sched, ex, devices, workers_per_zone=workers_per_zone,
+                  evict_priority=evict_priority)
+    if trace:
+        fac.apply_trace(trace)
+    return sched, ex, fac
+
+
+def opportunistic_supply(n: int = 256, seed: int = 0):
+    return cluster_sample(n, seed=seed)

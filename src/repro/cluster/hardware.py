@@ -1,0 +1,140 @@
+"""Hardware catalog: the paper's Table 1 GPU mix + TPU-fleet analogues.
+
+Calibration (documented derivations — all from the paper's own numbers):
+
+* ``infer_s`` is seconds per inference of the paper's workload (SmolLM2-1.7B
+  fact-verification prompt) on each device.  Anchors:
+    - pv0: 150 k inferences on one dedicated A10 in 40.9 ks
+      → infer_s(A10) = 0.27 s.
+    - pv4_100 (pervasive, batch 100, 10×A10 + 10×TITAN X Pascal) = 2.9 ks
+      → pool rate 51.7 inf/s → infer_s(TITAN X Pascal) ≈ 0.675 s.
+  Other models are scaled by their published LLM inference throughput
+  relative to these two anchors.
+* ``disk_bw`` / ``h2d_bw`` set the *partial-context* warm overhead
+  (weights deserialise + host→device each task):
+    - pv3_1 (batch 1, partial) = 141.1 ks over 150 k tasks
+      → mean per-task overhead ≈ 15-25 s depending on device
+      → A10: 7.4 GB host bytes / 500 MB/s + 3.7 GB / 8 GB/s ≈ 15.7 s.
+* ``internet_bw`` reproduces pv1 (naive): every task re-downloads the
+  3.7 GB model → per-task ≈ 80-105 s → 45 MB/s effective.
+* shared filesystem: Panasas ActiveStor-16, 84 Gb/s aggregate read
+  → 10.5 GB/s cluster-wide, ~1 GB/s per-stream cap.
+
+Scaling to other architectures: per-inference time scales with active
+parameter bytes (decode is memory-bound), ``infer_s(cfg) ∝ n_active``.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+REF_ACTIVE_PARAMS = 1.71e9          # SmolLM2-1.7B (the calibration anchor)
+
+
+@dataclass(frozen=True)
+class DeviceModel:
+    name: str
+    year: int
+    count: int                      # population in the cluster (Table 1)
+    infer_s: float                  # s/inference of the anchor workload
+    mem_gb: int
+    disk_bw: float                  # local SSD read, bytes/s
+    h2d_bw: float                   # host->device, bytes/s
+    compile_base_s: float = 0.0     # jit/compile cost (TPU analogue)
+
+    def infer_time(self, active_params: float) -> float:
+        return self.infer_s * (active_params / REF_ACTIVE_PARAMS)
+
+    def compile_s(self, recipe) -> float:
+        return self.compile_base_s
+
+
+# --- Table 1: the 8 major GPU models (75 % of the 567-GPU cluster) --------
+GPU_CATALOG: Dict[str, DeviceModel] = {m.name: m for m in [
+    DeviceModel("NVIDIA Quadro RTX 6000", 2018, 106, 0.34, 24, 450e6, 6e9),
+    DeviceModel("NVIDIA A10", 2021, 78, 0.27, 24, 500e6, 8e9),
+    DeviceModel("NVIDIA TITAN X (Pascal)", 2016, 69, 0.675, 12, 300e6, 4e9),
+    DeviceModel("NVIDIA GeForce GTX 1080 Ti", 2017, 63, 0.60, 11, 300e6, 4e9),
+    DeviceModel("NVIDIA RTX 6000 Ada Generation", 2022, 36, 0.16, 48, 900e6, 12e9),
+    DeviceModel("NVIDIA GeForce GTX TITAN X", 2015, 34, 0.85, 12, 250e6, 3e9),
+    DeviceModel("NVIDIA A40", 2020, 26, 0.22, 48, 700e6, 8e9),
+    DeviceModel("NVIDIA H100 80GB HBM3", 2023, 15, 0.08, 80, 2e9, 26e9),
+]}
+
+# --- TPU analogues (fleet mode; compile cost is first-class context) ------
+TPU_CATALOG: Dict[str, DeviceModel] = {m.name: m for m in [
+    DeviceModel("TPU v4", 2021, 64, 0.24, 32, 800e6, 12e9, compile_base_s=45),
+    DeviceModel("TPU v5e", 2023, 256, 0.30, 16, 800e6, 12e9, compile_base_s=35),
+    DeviceModel("TPU v5p", 2023, 64, 0.12, 95, 1.2e9, 20e9, compile_base_s=50),
+    DeviceModel("TPU v6e", 2024, 128, 0.10, 32, 1.2e9, 20e9, compile_base_s=40),
+]}
+
+
+@dataclass(frozen=True)
+class ClusterSpec:
+    """Cluster-level constants shared by all workers."""
+    shared_fs_bw: float = 10.5e9        # Panasas aggregate read bytes/s
+    shared_fs_stream_bw: float = 1.0e9  # per-stream cap
+    internet_bw: float = 45e6           # per-stream model-hub download
+    peer_bw_local: float = 12.5e9       # worker<->worker, same zone
+    peer_bw_cross: float = 3.0e9        # cross-zone (DCN analogue)
+    manager_dispatch_s: float = 0.02    # scheduler RTT + arg/result staging
+
+
+PAPER_CLUSTER = ClusterSpec()
+
+
+def paper_20gpu_pool() -> List[DeviceModel]:
+    """The controlled pool: 10× A10 + 10× TITAN X (Pascal)."""
+    a10 = GPU_CATALOG["NVIDIA A10"]
+    titan = GPU_CATALOG["NVIDIA TITAN X (Pascal)"]
+    return [a10] * 10 + [titan] * 10
+
+
+# How often each model is *idle* and thus opportunistically reachable:
+# new/fast devices are almost always claimed by static allocations, old
+# ones sit free — availability anti-correlates with desirability.  These
+# factors are calibrated so pv6's effective pool rate lands near the
+# paper's 150 k / 783 s ≈ 191 inf/s at ~157 connected workers.
+IDLE_PROPENSITY: Dict[str, float] = {
+    "NVIDIA Quadro RTX 6000": 1.0,
+    "NVIDIA A10": 0.5,
+    "NVIDIA TITAN X (Pascal)": 2.2,
+    "NVIDIA GeForce GTX 1080 Ti": 2.2,
+    "NVIDIA RTX 6000 Ada Generation": 0.15,
+    "NVIDIA GeForce GTX TITAN X": 2.5,
+    "NVIDIA A40": 0.35,
+    "NVIDIA H100 80GB HBM3": 0.05,
+}
+
+
+def cluster_sample(n: int, seed: int = 0,
+                   catalog: Optional[Dict[str, DeviceModel]] = None,
+                   weighted_by_idleness: bool = True) -> List[DeviceModel]:
+    """Sample ``n`` devices ∝ Table-1 population × idle propensity."""
+    cat = list((catalog or GPU_CATALOG).values())
+
+    def w(m: DeviceModel) -> float:
+        f = IDLE_PROPENSITY.get(m.name, 1.0) if weighted_by_idleness else 1.0
+        return m.count * f
+
+    total = sum(w(m) for m in cat)
+    out: List[DeviceModel] = []
+    # deterministic largest-remainder apportionment, then rotate by seed
+    quotas = [(m, n * w(m) / total) for m in cat]
+    base = [(m, int(q)) for m, q in quotas]
+    out = [m for m, k in base for _ in range(k)]
+    rem = sorted(quotas, key=lambda mq: mq[1] - int(mq[1]), reverse=True)
+    i = 0
+    while len(out) < n:
+        out.append(rem[i % len(rem)][0])
+        i += 1
+    k = seed % max(len(out), 1)
+    return out[k:] + out[:k]
+
+
+def pool_rate(devices: List[DeviceModel],
+              active_params: float = REF_ACTIVE_PARAMS) -> float:
+    """Aggregate inferences/s of a pool (work-stealing steady state)."""
+    return sum(1.0 / d.infer_time(active_params) for d in devices)

@@ -1,0 +1,87 @@
+"""Observability: progress/throughput reporting (paper Challenge #2).
+
+"Availability of opportunistic resources is generally unpredictable ...
+This can only be alleviated by observability tools that transparently
+inform users of the current rate of throughput and the overall progress."
+
+The :class:`ProgressMonitor` turns a scheduler's event streams into the
+rate/progress/ETA view Parsl+TaskVine give their users; it works for both
+executors since it only reads scheduler state.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from .scheduler import Scheduler
+
+
+@dataclass
+class Snapshot:
+    t: float
+    completed: int
+    submitted_inferences: int
+    workers: int
+    rate_inf_s: float            # over the trailing window
+    eta_s: Optional[float]
+    warm_fraction: float         # of completed tasks so far
+    evicted_inferences: int
+
+
+class ProgressMonitor:
+    def __init__(self, sched: Scheduler, *, window_s: float = 60.0):
+        self.sched = sched
+        self.window_s = window_s
+        self.snapshots: List[Snapshot] = []
+
+    def _total_submitted_inferences(self) -> int:
+        done = self.sched.completed_inferences
+        queued = sum(t.n_inferences for t in self.sched.queue)
+        running = sum(t.n_inferences for t, _ in self.sched.running.values())
+        return done + queued + running
+
+    def snapshot(self, now: float) -> Snapshot:
+        s = self.sched
+        prog = s.progress_events
+        # trailing-window rate
+        lo = now - self.window_s
+        done_now = prog[-1][1] if prog else 0
+        done_lo = 0
+        for t, n in reversed(prog):
+            if t <= lo:
+                done_lo = n
+                break
+        rate = (done_now - done_lo) / max(min(now, self.window_s),
+                                          self.window_s * 1e-3)
+        total = self._total_submitted_inferences()
+        remaining = total - done_now
+        eta = remaining / rate if rate > 0 else None
+        n_tasks = max(len(s.records), 1)
+        snap = Snapshot(
+            t=now, completed=done_now, submitted_inferences=total,
+            workers=len(s.workers), rate_inf_s=rate, eta_s=eta,
+            warm_fraction=sum(r.warm for r in s.records) / n_tasks,
+            evicted_inferences=s.evicted_inferences)
+        self.snapshots.append(snap)
+        return snap
+
+    def attach(self, loop, *, every_s: float = 60.0,
+               printer=None) -> None:
+        """Sample on a cadence inside a DES loop (sim executor)."""
+        def tick():
+            snap = self.snapshot(loop.now)
+            if printer:
+                printer(format_snapshot(snap))
+            if not self.sched.done:
+                loop.after(every_s, tick)
+        loop.after(every_s, tick)
+
+
+def format_snapshot(s: Snapshot) -> str:
+    pct = 100.0 * s.completed / max(s.submitted_inferences, 1)
+    eta = f"{s.eta_s:,.0f}s" if s.eta_s is not None else "—"
+    return (f"[{s.t:8.0f}s] {s.completed:>8,}/{s.submitted_inferences:,} "
+            f"({pct:5.1f}%)  {s.workers:>3} workers  "
+            f"{s.rate_inf_s:7.1f} inf/s  eta {eta}  "
+            f"warm {100*s.warm_fraction:.0f}%  "
+            f"evicted {s.evicted_inferences:,}")

@@ -1,0 +1,227 @@
+"""The manager: TaskVine-style scheduler with context-aware routing.
+
+The :class:`Scheduler` is *time-free*: it owns the ready queue, the worker
+pool, the context registry, and all placement decisions, but never looks at
+a clock.  The executors (sim: discrete-event; live: wall clock) pump
+:meth:`route` and feed back :meth:`on_complete` / :meth:`on_evict`, so the
+paper's management layer — the contribution under test — is byte-for-byte
+identical in both backends.
+
+Routing policy (paper §5.1/§5.3.2):
+  * tasks run 1-per-worker (work stealing across heterogeneous devices);
+  * a task prefers a worker whose library for its context is READY;
+  * otherwise it takes any idle cold worker and stages the context there,
+    fetching from an in-zone ready peer when one exists (spanning-tree
+    distribution emerges from many such decisions);
+  * an evicted worker's running task is requeued at the queue head and its
+    registry residencies are dropped (no grace period).
+"""
+from __future__ import annotations
+
+import itertools
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Deque, Dict, List, Optional, Tuple
+
+from ..core import (ContextRegistry, ContextRecipe, ContextMode, PERVASIVE,
+                    Peer, pick_sources)
+from .hardware import ClusterSpec, PAPER_CLUSTER, REF_ACTIVE_PARAMS
+from .worker import Worker
+
+_task_ids = itertools.count()
+
+
+@dataclass
+class Task:
+    recipe_key: str
+    n_inferences: int
+    mode: ContextMode = PERVASIVE
+    active_params: float = REF_ACTIVE_PARAMS
+    payload: Any = None               # live mode: callable args
+    task_id: int = field(default_factory=lambda: next(_task_ids))
+    attempts: int = 0
+
+
+@dataclass
+class Assignment:
+    task: Task
+    worker: Worker
+    warm: bool                        # library READY on this worker
+    peer_source: Optional[str]        # ready peer to fetch from (cold only)
+    cross_zone: bool = False
+
+
+@dataclass
+class TaskRecord:
+    task_id: int
+    worker_id: str
+    device: str
+    t_start: float
+    t_end: float
+    exec_s: float                     # on-worker execution (incl. staging)
+    n_inferences: int
+    warm: bool
+    attempts: int
+
+
+class Scheduler:
+    def __init__(self, cluster: ClusterSpec = PAPER_CLUSTER):
+        self.cluster = cluster
+        self.registry = ContextRegistry()
+        self.queue: Deque[Task] = deque()
+        self.workers: Dict[str, Worker] = {}
+        self.running: Dict[int, Tuple[Task, str]] = {}
+        # -- metrics -------------------------------------------------
+        self.records: List[TaskRecord] = []
+        self.progress_events: List[Tuple[float, int]] = [(0.0, 0)]
+        self.worker_events: List[Tuple[float, int]] = [(0.0, 0)]
+        self.completed_inferences = 0
+        self.evicted_tasks = 0
+        self.evicted_inferences = 0
+        self.submitted = 0
+
+    # ------------------------------------------------------------------
+    # registration
+    # ------------------------------------------------------------------
+    def register_context(self, recipe: ContextRecipe) -> str:
+        return self.registry.register(recipe)
+
+    def submit(self, task: Task) -> None:
+        self.queue.append(task)
+        self.submitted += 1
+
+    def submit_sweep(self, recipe_key: str, n_total: int, batch: int,
+                     mode: ContextMode = PERVASIVE,
+                     active_params: float = REF_ACTIVE_PARAMS) -> int:
+        """Split ``n_total`` inferences into batch-sized tasks (the PfF app)."""
+        n_tasks = 0
+        left = n_total
+        while left > 0:
+            b = min(batch, left)
+            self.submit(Task(recipe_key, b, mode, active_params))
+            left -= b
+            n_tasks += 1
+        return n_tasks
+
+    # ------------------------------------------------------------------
+    # pool membership (driven by the factory / eviction processes)
+    # ------------------------------------------------------------------
+    def add_worker(self, worker: Worker, now: float = 0.0) -> None:
+        worker.joined_s = now
+        self.workers[worker.worker_id] = worker
+        self.worker_events.append((now, len(self.workers)))
+
+    def on_evict(self, worker_id: str, now: float = 0.0) -> List[Task]:
+        """Worker reclaimed with no grace period. Returns requeued tasks."""
+        worker = self.workers.pop(worker_id, None)
+        if worker is None:
+            return []
+        self.worker_events.append((now, len(self.workers)))
+        self.registry.drop_worker(worker_id)
+        requeued = []
+        for tid, (task, wid) in list(self.running.items()):
+            if wid == worker_id:
+                del self.running[tid]
+                task.attempts += 1
+                self.evicted_tasks += 1
+                self.evicted_inferences += task.n_inferences
+                self.queue.appendleft(task)     # retry first (paper: requeue)
+                requeued.append(task)
+        return requeued
+
+    # ------------------------------------------------------------------
+    # routing
+    # ------------------------------------------------------------------
+    def _idle_workers(self) -> List[Worker]:
+        return [w for w in self.workers.values() if w.idle]
+
+    def route(self) -> Optional[Assignment]:
+        """Match the head-most routable task with the best idle worker."""
+        if not self.queue:
+            return None
+        idle = self._idle_workers()
+        if not idle:
+            return None
+        task = self.queue[0]
+        key = task.recipe_key
+        ready = self.registry.ready_workers(key)
+        warm = [w for w in idle if w.worker_id in ready
+                and w.has_ready(key)]
+        if warm:
+            # fastest warm device first (work stealing does the rest)
+            w = min(warm, key=lambda w: w.device.infer_s)
+            self.queue.popleft()
+            self.running[task.task_id] = (task, w.worker_id)
+            return Assignment(task, w, warm=True, peer_source=None)
+        # cold placement: any idle worker; prefer the fastest device
+        w = min(idle, key=lambda w: w.device.infer_s)
+        src, cross = self._pick_peer(key, w)
+        self.queue.popleft()
+        self.running[task.task_id] = (task, w.worker_id)
+        return Assignment(task, w, warm=False, peer_source=src,
+                          cross_zone=cross)
+
+    def _pick_peer(self, key: str, dst: Worker) -> Tuple[Optional[str], bool]:
+        ready = self.registry.ready_workers(key) - {dst.worker_id}
+        if not ready:
+            return None, False
+        peers = [Peer(wid, self.workers[wid].zone) for wid in ready
+                 if wid in self.workers]
+        if not peers:
+            return None, False
+        chosen = pick_sources(peers, dst.zone, max_sources=1)[0]
+        return chosen.worker_id, chosen.zone != dst.zone
+
+    # ------------------------------------------------------------------
+    # completion bookkeeping (executors call these)
+    # ------------------------------------------------------------------
+    def on_start(self, assignment: Assignment) -> None:
+        w = assignment.worker
+        w.running += 1
+        if not assignment.warm:
+            w.staging = True
+            self.registry.mark_staging(assignment.task.recipe_key,
+                                       w.worker_id)
+
+    def on_staged(self, assignment: Assignment) -> None:
+        w = assignment.worker
+        w.staging = False
+        self.registry.mark_ready(assignment.task.recipe_key, w.worker_id)
+
+    def on_complete(self, assignment: Assignment, t_start: float,
+                    t_end: float) -> None:
+        task, w = assignment.task, assignment.worker
+        if task.task_id not in self.running:
+            return                          # stale (worker evicted mid-run)
+        del self.running[task.task_id]
+        w.running -= 1
+        w.tasks_done += 1
+        w.inferences_done += task.n_inferences
+        self.completed_inferences += task.n_inferences
+        self.progress_events.append((t_end, self.completed_inferences))
+        self.records.append(TaskRecord(
+            task.task_id, w.worker_id, w.device.name, t_start, t_end,
+            t_end - t_start, task.n_inferences, assignment.warm,
+            task.attempts))
+
+    # ------------------------------------------------------------------
+    @property
+    def done(self) -> bool:
+        return not self.queue and not self.running
+
+    def makespan(self) -> float:
+        return max((r.t_end for r in self.records), default=0.0)
+
+    def avg_connected_workers(self) -> float:
+        """Time-weighted mean worker count over the run."""
+        ev = sorted(self.worker_events)
+        end = self.makespan() or (ev[-1][0] if ev else 0.0)
+        if end <= 0:
+            return float(ev[-1][1]) if ev else 0.0
+        area, prev_t, prev_n = 0.0, 0.0, 0
+        for t, n in ev:
+            t = min(t, end)
+            area += prev_n * (t - prev_t)
+            prev_t, prev_n = t, n
+        area += prev_n * (end - prev_t)
+        return area / end

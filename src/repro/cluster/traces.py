@@ -1,0 +1,72 @@
+"""Opportunistic-availability traces (paper §6 scenarios).
+
+A trace is a sorted list of ``(t_seconds, target_worker_count)`` pairs the
+factory reconciles against.  Three families, mirroring the evaluation:
+
+* ``constant``          — the controlled 20-GPU pool (pv0-pv4);
+* ``drain``             — pv5: 15 min stable, then -1 GPU/min to zero;
+* ``diurnal``           — pv6: availability follows the cluster's daily
+                          load curve, noisy, time-of-day dependent.
+"""
+from __future__ import annotations
+
+import math
+import random
+from typing import List, Tuple
+
+Trace = List[Tuple[float, int]]
+
+
+def constant(n: int) -> Trace:
+    return [(0.0, n)]
+
+
+def drain(n: int = 20, stable_s: float = 900.0,
+          rate_per_s: float = 1 / 60.0) -> Trace:
+    """pv5: stable for ``stable_s``, then reclaim 1 worker per minute."""
+    out: Trace = [(0.0, n)]
+    for i in range(1, n + 1):
+        out.append((stable_s + i / rate_per_s, n - i))
+    return out
+
+
+# Hourly availability fractions of the ~186 opportunistically reachable
+# GPUs, shaped like the paper's Fig 4/7 narrative: mornings busy, early
+# afternoon freest, overnight jobs soak the cluster.
+_DIURNAL_FRAC = {
+    0: 0.12, 1: 0.10, 2: 0.09, 3: 0.08, 4: 0.08, 5: 0.10,
+    6: 0.12, 7: 0.15, 8: 0.18, 9: 0.20, 10: 0.24, 11: 0.28,
+    12: 0.30, 13: 0.33, 14: 0.34, 15: 0.30, 16: 0.26, 17: 0.22,
+    18: 0.20, 19: 0.18, 20: 0.16, 21: 0.14, 22: 0.12, 23: 0.06,
+}
+
+
+def diurnal(start_hour: int, *, max_gpus: int = 186,
+            duration_s: float = 14_400.0, step_s: float = 120.0,
+            noise: float = 0.15, seed: int = 0) -> Trace:
+    """pv6: noisy availability around the cluster's daily load curve."""
+    rng = random.Random(seed * 1009 + start_hour)
+    out: Trace = []
+    t = 0.0
+    while t <= duration_s:
+        hour = (start_hour + t / 3600.0) % 24
+        h0, h1 = int(hour) % 24, (int(hour) + 1) % 24
+        frac = _DIURNAL_FRAC[h0] + (hour - int(hour)) * (
+            _DIURNAL_FRAC[h1] - _DIURNAL_FRAC[h0])
+        jitter = 1.0 + noise * (2 * rng.random() - 1.0)
+        out.append((t, max(1, int(max_gpus * frac * jitter))))
+        t += step_s
+    return out
+
+
+def quiet_day(*, max_gpus: int = 186, duration_s: float = 3_600.0,
+              step_s: float = 120.0, seed: int = 7) -> Trace:
+    """pv6 (different, less busy day): ~85 % of the pool reachable."""
+    rng = random.Random(seed)
+    out: Trace = []
+    t = 0.0
+    while t <= duration_s:
+        frac = 0.85 + 0.1 * math.sin(t / 600.0) * rng.random()
+        out.append((t, max(1, int(max_gpus * min(frac, 1.0)))))
+        t += step_s
+    return out

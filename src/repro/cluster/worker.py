@@ -1,0 +1,61 @@
+"""A TaskVine-style worker: pilot job + tiered local cache + libraries.
+
+One worker = the base unit of resource acquisition (paper §5.3.2): a small
+pilot job holding (cores, memory, disk, 1 accelerator) that runs at most
+``shape.concurrency`` tasks at a time and keeps a byte-accounted local
+cache of context elements plus the library processes hosting materialised
+contexts.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from ..core import ContextCache, Library, WorkerShape, PAPER_WORKER_SHAPE
+from .hardware import DeviceModel
+
+_ids = itertools.count()
+
+
+@dataclass
+class Worker:
+    device: DeviceModel
+    zone: str = "z0"
+    shape: WorkerShape = PAPER_WORKER_SHAPE
+    worker_id: str = field(default_factory=lambda: f"w{next(_ids)}")
+    joined_s: float = 0.0
+
+    def __post_init__(self):
+        self.cache = ContextCache(
+            disk_bytes=self.shape.disk_gb * 10**9,
+            host_bytes=self.shape.memory_gb * 10**9,
+            device_bytes=self.device.mem_gb * 10**9,
+        )
+        self.libraries: Dict[str, Library] = {}
+        self.running: int = 0                 # tasks in flight
+        self.staging: bool = False            # context materialising
+        self.tasks_done: int = 0
+        self.inferences_done: int = 0
+
+    # -- capacity ---------------------------------------------------------
+    @property
+    def idle(self) -> bool:
+        return self.running < self.shape.concurrency and not self.staging
+
+    # -- context hosting ----------------------------------------------------
+    def library_for(self, recipe) -> Library:
+        lib = self.libraries.get(recipe.key)
+        if lib is None:
+            lib = Library(recipe, self.cache)
+            self.libraries[recipe.key] = lib
+        return lib
+
+    def has_ready(self, recipe_key: str) -> bool:
+        lib = self.libraries.get(recipe_key)
+        return bool(lib and lib.ready)
+
+    def drop_library(self, recipe_key: str) -> None:
+        lib = self.libraries.pop(recipe_key, None)
+        if lib is not None:
+            lib.teardown()

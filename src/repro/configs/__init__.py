@@ -1,0 +1,123 @@
+"""Architecture registry: ``get_config(arch_id)`` / ``--arch <id>`` lookup."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from .base import (
+    INPUT_SHAPES,
+    TRAIN_4K,
+    PREFILL_32K,
+    DECODE_32K,
+    LONG_500K,
+    InputShape,
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    ParallelConfig,
+    SSMConfig,
+    smoke_variant,
+)
+
+from . import (
+    llava_next_34b,
+    granite_3_8b,
+    llama3_405b,
+    qwen3_1p7b,
+    hymba_1p5b,
+    xlstm_350m,
+    whisper_small,
+    phi35_moe_42b,
+    deepseek_v3_671b,
+    olmo_1b,
+    smollm2_1p7b,
+)
+
+# The 10 assigned architectures (+ the paper's own model, smollm2-1.7b).
+ARCH_REGISTRY: Dict[str, ModelConfig] = {
+    m.CONFIG.arch_id: m.CONFIG
+    for m in (
+        llava_next_34b,
+        granite_3_8b,
+        llama3_405b,
+        qwen3_1p7b,
+        hymba_1p5b,
+        xlstm_350m,
+        whisper_small,
+        phi35_moe_42b,
+        deepseek_v3_671b,
+        olmo_1b,
+        smollm2_1p7b,
+    )
+}
+
+ASSIGNED_ARCHS: List[str] = [
+    "llava-next-34b",
+    "granite-3-8b",
+    "llama3-405b",
+    "qwen3-1.7b",
+    "hymba-1.5b",
+    "xlstm-350m",
+    "whisper-small",
+    "phi3.5-moe-42b-a6.6b",
+    "deepseek-v3-671b",
+    "olmo-1b",
+]
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    try:
+        return ARCH_REGISTRY[arch_id]
+    except KeyError:
+        raise KeyError(
+            f"unknown arch {arch_id!r}; available: {sorted(ARCH_REGISTRY)}"
+        ) from None
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    return smoke_variant(get_config(arch_id))
+
+
+def serving_variant(cfg: ModelConfig) -> ModelConfig:
+    """Parallelism for decode: FSDP is a *training* optimisation — at
+    decode the embed-dim weight shards force an all-gather of the weights
+    every token step (llama3-405b decode_32k: 2.0 s collective term,
+    §Perf G4). Serving shards params over 'model' only."""
+    import dataclasses
+    if not cfg.parallel.fsdp:
+        return cfg
+    return cfg.with_(parallel=dataclasses.replace(cfg.parallel, fsdp=False))
+
+
+def long_context_variant(cfg: ModelConfig) -> ModelConfig:
+    """Variant used for the long_500k shape.
+
+    SSM/hybrid archs are natively sub-quadratic; pure-attention archs get a
+    sliding-window (w=8192) variant per the assignment carve-out (DESIGN.md
+    §Arch-applicability).
+    """
+    if cfg.family in ("ssm", "hybrid"):
+        return cfg
+    if cfg.attn_window:
+        return cfg
+    return cfg.with_(attn_window=8192)
+
+
+__all__ = [
+    "ARCH_REGISTRY",
+    "ASSIGNED_ARCHS",
+    "INPUT_SHAPES",
+    "TRAIN_4K",
+    "PREFILL_32K",
+    "DECODE_32K",
+    "LONG_500K",
+    "InputShape",
+    "MLAConfig",
+    "ModelConfig",
+    "MoEConfig",
+    "ParallelConfig",
+    "SSMConfig",
+    "get_config",
+    "get_smoke_config",
+    "long_context_variant",
+    "smoke_variant",
+]

@@ -1,0 +1,41 @@
+"""deepseek-v3-671b — MLA + 256-expert top-8 MoE + MTP. [arXiv:2412.19437]
+
+61L d_model=7168 128H (kv=128 — MLA shares the latent) d_ff=2048(expert),
+vocab=129280; 1 shared + 256 routed experts, top-8; first 3 layers dense
+(d_ff=18432); multi-token-prediction depth 1.
+
+Stress config (violates paper Condition #1) — see DESIGN.md. Uses the
+sort_scatter MoE dispatch (E=256 makes GShard one-hot masks prohibitive) and
+bf16 optimizer moments + FSDP to fit 256 chips.
+"""
+from .base import ModelConfig, MoEConfig, MLAConfig, ParallelConfig
+
+CONFIG = ModelConfig(
+    arch_id="deepseek-v3-671b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=128,
+    n_kv_heads=128,
+    head_dim=128,                     # v_head_dim; qk dims come from MLA
+    d_ff=18432,                       # dense-FFN dim for the first_k_dense layers
+    vocab_size=129280,
+    rope_theta=10_000.0,
+    mla=MLAConfig(q_lora_rank=1536, kv_lora_rank=512,
+                  qk_nope_head_dim=128, qk_rope_head_dim=64, v_head_dim=128),
+    # §Perf D2: shard_map all-to-all dispatch. The pjit sort_scatter path
+    # forces a full (E*C, D) buffer all-reduce per layer (110 TB/step);
+    # a2a moves only the routed tokens: collective term 2202 s -> 61 s.
+    moe=MoEConfig(n_experts=256, top_k=8, d_ff_expert=2048,
+                  n_shared_experts=1, d_ff_shared=2048,
+                  dispatch="a2a"),
+    first_k_dense=3,
+    mtp_depth=1,
+    parallel=ParallelConfig(
+        fsdp=True,
+        microbatch=4,
+        optimizer_moment_dtype="bfloat16",
+        seq_parallel=False,              # §Perf E4/D3 (same as llama3-405b)
+    ),
+    source="[arXiv:2412.19437]",
+)

@@ -1,0 +1,22 @@
+"""granite-3-8b — dense GQA decoder.
+
+[hf:ibm-granite/granite-3.0-2b-base] (family); assigned dims:
+40L d_model=4096 32H (GQA kv=8) d_ff=12800 vocab=49155.
+"""
+from .base import ModelConfig, ParallelConfig
+
+CONFIG = ModelConfig(
+    arch_id="granite-3-8b",
+    family="dense",
+    n_layers=40,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=12800,
+    vocab_size=49155,
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+    parallel=ParallelConfig(train_dp_only=True),
+    source="[hf:ibm-granite/granite-3.0-2b-base]",
+)

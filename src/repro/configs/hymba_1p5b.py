@@ -1,0 +1,27 @@
+"""hymba-1.5b — hybrid: parallel attention + mamba heads. [arXiv:2411.13676]
+
+32L d_model=1600 25H (GQA kv=5) d_ff=5504 vocab=32001, ssm_state=16.
+Each block runs attention heads and SSM heads IN PARALLEL on the same input
+and fuses their (normalised) outputs — the Hymba "hybrid-head" design.
+Attention uses a sliding window in most layers (global in a few), which is
+what makes long_500k native for this arch.
+"""
+from .base import ModelConfig, ParallelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    arch_id="hymba-1.5b",
+    family="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab_size=32001,
+    attn_window=1024,                 # hymba: SWA in hybrid blocks
+    ssm=SSMConfig(state_dim=16, expand=2),
+    hybrid_parallel_heads=True,
+    rope_theta=10_000.0,
+    parallel=ParallelConfig(train_dp_only=True, ),
+    source="[arXiv:2411.13676]",
+)

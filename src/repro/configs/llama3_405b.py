@@ -1,0 +1,34 @@
+"""llama3-405b — dense GQA decoder, 128k vocab. [arXiv:2407.21783]
+
+126L d_model=16384 128H (GQA kv=8) d_ff=53248 vocab=128256.
+
+Stress config: violates the paper's Condition #1 (<= a dozen B params) — kept
+for the dry-run/roofline per the assignment; noted in DESIGN.md
+§Arch-applicability. Trains on 256 v5e only with FSDP + bf16 optimizer
+moments + microbatching (see ParallelConfig below and EXPERIMENTS.md §Dry-run).
+"""
+from .base import ModelConfig, ParallelConfig
+
+CONFIG = ModelConfig(
+    arch_id="llama3-405b",
+    family="dense",
+    n_layers=126,
+    d_model=16384,
+    n_heads=128,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=53248,
+    vocab_size=128256,
+    rope_theta=500_000.0,
+    parallel=ParallelConfig(
+        fsdp=True,
+        microbatch=8,
+        optimizer_moment_dtype="bfloat16",
+        # §Perf E4: with FSDP over 'data', sequence-sharding the residual
+        # stream makes every per-layer dW reduction span both mesh axes;
+        # XLA resolves it with replicated stacked grads + full-size f32
+        # all-reduces (53 TB/step -> 6.8 TB/step, 7.8x). See EXPERIMENTS.md.
+        seq_parallel=False,
+    ),
+    source="[arXiv:2407.21783]",
+)

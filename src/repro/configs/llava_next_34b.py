@@ -1,0 +1,27 @@
+"""llava-next-34b — VLM backbone with anyres tiling.
+
+[hf:llava-hf/llava-v1.6-mistral-7b-hf] (family); backbone dims per assignment:
+60L d_model=7168 56H (GQA kv=8) d_ff=20480 vocab=64000.
+
+The ViT/SigLIP vision tower + projector is a STUB: ``input_specs`` provides
+precomputed patch embeddings of shape (batch, n_vision_patches, d_model) —
+the anyres tiling of a 672x672 image into 5 tiles of 24x24 patches => 2880
+patch embeddings per request.
+"""
+from .base import ModelConfig, ParallelConfig
+
+CONFIG = ModelConfig(
+    arch_id="llava-next-34b",
+    family="vlm",
+    n_layers=60,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=20480,
+    vocab_size=64000,
+    rope_theta=5_000_000.0,
+    n_vision_patches=2880,            # anyres: 5 tiles x 576 patches
+    parallel=ParallelConfig(fsdp=True),
+    source="[hf:llava-hf/llava-v1.6-mistral-7b-hf]",
+)

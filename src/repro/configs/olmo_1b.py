@@ -1,0 +1,22 @@
+"""olmo-1b — dense decoder with non-parametric LayerNorm. [arXiv:2402.00838]
+
+16L d_model=2048 16H (kv=16) d_ff=8192 vocab=50304.
+"""
+from .base import ModelConfig, ParallelConfig
+
+CONFIG = ModelConfig(
+    arch_id="olmo-1b",
+    family="dense",
+    n_layers=16,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=50304,
+    nonparametric_norm=True,
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+    parallel=ParallelConfig(train_dp_only=True, ),
+    source="[arXiv:2402.00838]",
+)

@@ -1,0 +1,24 @@
+"""phi3.5-moe-42b-a6.6b — 16-expert top-2 MoE. [hf:microsoft/Phi-3.5-MoE-instruct]
+
+32L d_model=4096 32H (GQA kv=8) d_ff=6400 vocab=32064, MoE 16e top-2.
+"""
+from .base import ModelConfig, MoEConfig, ParallelConfig
+
+CONFIG = ModelConfig(
+    arch_id="phi3.5-moe-42b-a6.6b",
+    family="moe",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=6400,
+    vocab_size=32064,
+    rope_theta=10_000.0,
+    # §Perf P1: a2a dispatch — dense_onehot's (B,S,E,C) masks cost E/K = 8x
+    # useful compute (train_4k compute term 10.5 s -> 0.33 s, 32x).
+    moe=MoEConfig(n_experts=16, top_k=2, d_ff_expert=6400,
+                  dispatch="a2a"),
+    parallel=ParallelConfig(fsdp=True),
+    source="[hf:microsoft/Phi-3.5-MoE-instruct]",
+)

@@ -1,0 +1,23 @@
+"""smollm2-1.7b — the paper's own model (PfF fact verifier). [arXiv:2502.02737]
+
+24L d_model=2048 32H (GQA kv=32) d_ff=8192 vocab=49152 — the SmolLM2-1.7B
+card. This is the model the paper's evaluation (§6) serves; it anchors the
+live examples and the Prompt-for-Fact application.
+"""
+from .base import ModelConfig, ParallelConfig
+
+CONFIG = ModelConfig(
+    arch_id="smollm2-1.7b",
+    family="dense",
+    n_layers=24,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=49152,
+    rope_theta=130_000.0,
+    tie_embeddings=True,
+    parallel=ParallelConfig(),
+    source="[arXiv:2502.02737]",
+)

@@ -1,0 +1,30 @@
+"""whisper-small — encoder-decoder audio transformer. [arXiv:2212.04356]
+
+12L (decoder) d_model=768 12H (kv=12) d_ff=3072 vocab=51865; 12 encoder
+layers. The mel-spectrogram + conv frontend is a STUB: ``input_specs``
+provides precomputed frame embeddings (batch, n_audio_frames, d_model).
+Decode shapes exercise the DECODER (self-attn KV cache + cross-attn over the
+encoder output, which is itself a reusable per-request context).
+"""
+from .base import ModelConfig, ParallelConfig
+
+CONFIG = ModelConfig(
+    arch_id="whisper-small",
+    family="audio",
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    head_dim=64,
+    d_ff=3072,
+    vocab_size=51865,
+    encoder_layers=12,
+    n_audio_frames=1500,
+    rope_theta=0.0,                   # whisper uses learned/sinusoidal pos
+    tie_embeddings=True,
+    # §Perf W1: small d_model (768) makes seq-parallel's per-layer
+    # activation gathers cost more than they save: dominant train term
+    # 1.28 s -> 0.49 s with it off (EXPERIMENTS.md §Perf, E4 generalization)
+    parallel=ParallelConfig(seq_parallel=False),
+    source="[arXiv:2212.04356]",
+)

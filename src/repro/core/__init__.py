@@ -1,0 +1,33 @@
+"""Pervasive context management — the paper's primary contribution.
+
+Layers:
+  context.py   recipes, keys, tiers, materialised state
+  cache.py     per-worker tiered byte-accounted LRU
+  library.py   per-context hosting process (materialise once, invoke many)
+  registry.py  scheduler-side global residency view
+  transfer.py  topology-aware spanning-tree peer distribution
+  policies.py  worker sizing, context modes, batch-size selection
+"""
+from .context import (ContextElement, ContextRecipe, MaterializedContext,
+                      Tier, content_hash, model_context_recipe,
+                      partial_context_recipe)
+from .cache import CacheFullError, ContextCache
+from .library import Library, StagingCost
+from .registry import ContextRegistry, HostState
+from .transfer import (Peer, TransferEdge, TransferPlan, pick_sources,
+                       plan_spanning_tree)
+from .policies import (MODES, NAIVE, PARTIAL, PERVASIVE, PAPER_TASK_SHAPE,
+                       PAPER_WORKER_SHAPE, ContextMode, WorkerShape,
+                       eviction_loss, expected_task_time, optimal_batch_size,
+                       worker_sizing)
+
+__all__ = [
+    "CacheFullError", "ContextCache", "ContextElement", "ContextMode",
+    "ContextRecipe", "ContextRegistry", "HostState", "Library",
+    "MaterializedContext", "MODES", "NAIVE", "PARTIAL", "PERVASIVE",
+    "PAPER_TASK_SHAPE", "PAPER_WORKER_SHAPE", "Peer", "StagingCost", "Tier",
+    "TransferEdge", "TransferPlan", "WorkerShape", "content_hash",
+    "eviction_loss", "expected_task_time", "model_context_recipe",
+    "optimal_batch_size", "partial_context_recipe", "pick_sources",
+    "plan_spanning_tree", "worker_sizing",
+]

@@ -1,0 +1,149 @@
+"""Tiered, byte-accounted context cache — one per worker.
+
+The paper's worker keeps context elements in a local cache spanning disk,
+host memory, and the accelerator (§5.2: "a context ... can materialize in
+any format (disk, memory, GPU)").  This class does the byte accounting and
+LRU eviction per tier; the :class:`~repro.core.library.Library` decides
+*what* to promote.
+
+Invariants (property-tested in tests/test_core_properties.py):
+  * per-tier used bytes == sum of resident element bytes, always;
+  * used bytes never exceed capacity after any operation;
+  * pinned entries are never evicted;
+  * an element resident at tier T keeps its staging copies below T.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from .context import ContextElement, Tier
+
+
+class CacheFullError(RuntimeError):
+    pass
+
+
+@dataclass
+class _Entry:
+    element: ContextElement
+    tier: Tier
+    pinned: bool = False
+
+
+class ContextCache:
+    """Byte-accounted LRU over (element-key -> resident tier)."""
+
+    def __init__(self, *, disk_bytes: int, host_bytes: int,
+                 device_bytes: int):
+        self.capacity: Dict[Tier, int] = {
+            Tier.DISK: disk_bytes, Tier.HOST: host_bytes,
+            Tier.DEVICE: device_bytes,
+        }
+        self._entries: "OrderedDict[str, _Entry]" = OrderedDict()
+        self.evictions: int = 0
+        self.hits: int = 0
+        self.misses: int = 0
+
+    # -- accounting ------------------------------------------------------
+    def used(self, tier: Tier) -> int:
+        total = 0
+        for e in self._entries.values():
+            if tier.order <= e.tier.order:
+                total += e.element.nbytes(tier)
+        return total
+
+    def free(self, tier: Tier) -> int:
+        return self.capacity[tier] - self.used(tier)
+
+    # -- queries ---------------------------------------------------------
+    def tier_of(self, key: str) -> Optional[Tier]:
+        e = self._entries.get(key)
+        return e.tier if e else None
+
+    def lookup(self, key: str) -> Optional[Tier]:
+        """Tier of ``key`` with LRU touch + hit/miss accounting."""
+        e = self._entries.get(key)
+        if e is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        self._entries.move_to_end(key)
+        return e.tier
+
+    def keys(self) -> Set[str]:
+        return set(self._entries)
+
+    # -- mutation --------------------------------------------------------
+    def _bytes_at(self, element: ContextElement, tier: Tier,
+                  at: Tier) -> int:
+        """Bytes ``element`` occupies at tier ``at`` if resident at ``tier``."""
+        return element.nbytes(at) if at.order <= tier.order else 0
+
+    def _ensure_room(self, element: ContextElement, tier: Tier,
+                     exclude: str) -> None:
+        for at in (Tier.DISK, Tier.HOST, Tier.DEVICE):
+            need = self._bytes_at(element, tier, at)
+            if need == 0:
+                continue
+            if need > self.capacity[at]:
+                raise CacheFullError(
+                    f"{element.name} needs {need} B at {at.value}, capacity "
+                    f"{self.capacity[at]} B")
+            # account for the entry's current footprint being replaced
+            cur = self._entries.get(exclude)
+            cur_b = self._bytes_at(cur.element, cur.tier, at) if cur else 0
+            while self.used(at) - cur_b + need > self.capacity[at]:
+                if not self._evict_one(at, exclude):
+                    raise CacheFullError(
+                        f"cannot free {need} B at {at.value} "
+                        f"(used {self.used(at)}/{self.capacity[at]}, "
+                        f"all remaining entries pinned)")
+
+    def _evict_one(self, tier: Tier, exclude: str) -> bool:
+        """Evict/demote the LRU unpinned entry occupying ``tier``."""
+        for key, e in self._entries.items():   # OrderedDict = LRU order
+            if key == exclude or e.pinned:
+                continue
+            if self._bytes_at(e.element, e.tier, tier) == 0:
+                continue
+            if tier is Tier.DISK or e.tier is tier is Tier.HOST or \
+                    (tier is Tier.HOST and not e.element.nbytes_disk):
+                del self._entries[key]          # fully evicted
+            elif e.tier.order > tier.order:
+                e.tier = tier                   # shouldn't happen, demote
+            else:
+                # demote one level: DEVICE->HOST, HOST->DISK
+                e.tier = Tier(("disk", "host")[e.tier.order - 1])
+            self.evictions += 1
+            return True
+        return False
+
+    def put(self, element: ContextElement, tier: Tier,
+            *, pinned: bool = False) -> None:
+        """Insert or promote/demote ``element`` to residency ``tier``."""
+        self._ensure_room(element, tier, exclude=element.key)
+        cur = self._entries.pop(element.key, None)
+        self._entries[element.key] = _Entry(element, tier,
+                                            pinned or (cur.pinned if cur
+                                                       else False))
+
+    def pin(self, key: str, pinned: bool = True) -> None:
+        self._entries[key].pinned = pinned
+
+    def drop(self, key: str) -> None:
+        self._entries.pop(key, None)
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+    # -- introspection ---------------------------------------------------
+    def stats(self) -> Dict[str, float]:
+        total = self.hits + self.misses
+        return {
+            "hits": self.hits, "misses": self.misses,
+            "hit_rate": self.hits / total if total else 0.0,
+            "evictions": self.evictions,
+            **{f"used_{t.value}": self.used(t) for t in Tier},
+        }

@@ -1,0 +1,69 @@
+"""Scheduler-side context registry: the globally consistent view.
+
+The TaskVine scheduler "keeps a globally consistent view of the
+application" (paper §5.1): which recipe is hosted where, which workers are
+warming up, and which tasks are waiting on which context.  The scheduler
+consults this registry to (a) route tasks to warm workers first and (b)
+pick peer-transfer sources for cold workers.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Dict, List, Optional, Set
+
+from .context import ContextRecipe
+
+
+class HostState(str, Enum):
+    STAGING = "staging"       # recipe en route / materialising
+    READY = "ready"           # library ack'd, invocations may be routed
+    LOST = "lost"             # worker evicted while hosting
+
+
+@dataclass
+class ContextRegistry:
+    recipes: Dict[str, ContextRecipe] = field(default_factory=dict)
+    # recipe key -> worker id -> state
+    hosts: Dict[str, Dict[str, HostState]] = field(
+        default_factory=lambda: defaultdict(dict))
+
+    def register(self, recipe: ContextRecipe) -> str:
+        self.recipes[recipe.key] = recipe
+        return recipe.key
+
+    # -- host-state transitions (driven by scheduler events) -------------
+    def mark_staging(self, key: str, worker_id: str) -> None:
+        assert key in self.recipes, f"unregistered recipe {key}"
+        self.hosts[key][worker_id] = HostState.STAGING
+
+    def mark_ready(self, key: str, worker_id: str) -> None:
+        self.hosts[key][worker_id] = HostState.READY
+
+    def drop_worker(self, worker_id: str) -> List[str]:
+        """Worker evicted: forget all its residencies. Returns lost keys."""
+        lost = []
+        for key, hosts in self.hosts.items():
+            if worker_id in hosts:
+                del hosts[worker_id]
+                lost.append(key)
+        return lost
+
+    # -- queries ----------------------------------------------------------
+    def ready_workers(self, key: str) -> Set[str]:
+        return {w for w, s in self.hosts.get(key, {}).items()
+                if s is HostState.READY}
+
+    def staging_workers(self, key: str) -> Set[str]:
+        return {w for w, s in self.hosts.get(key, {}).items()
+                if s is HostState.STAGING}
+
+    def workers_with(self, key: str) -> Set[str]:
+        return set(self.hosts.get(key, {}))
+
+    def state(self, key: str, worker_id: str) -> Optional[HostState]:
+        return self.hosts.get(key, {}).get(worker_id)
+
+    def replication(self, key: str) -> int:
+        return len(self.ready_workers(key))

@@ -1,0 +1,122 @@
+"""Spanning-tree peer-transfer planner (paper §5.3.1).
+
+"the scheduler first sends the context to an arbitrary worker, and this
+worker sends the context to N other workers, and so on until the context is
+fully distributed" — with each worker capped at N concurrent outbound
+transfers.
+
+TPU-fleet adaptation (DESIGN.md §2): links are not uniform.  Workers carry
+a ``zone`` (pod / rack); the planner builds the tree **topology-aware** —
+it always prefers an in-zone source over a cross-zone one, so each zone is
+crossed by (ideally) a single edge and fan-out happens over the fast local
+links (ICI analogue) rather than the slow cross-pod DCN.
+
+The planner is pure: given sources, targets and a fan-out cap it returns a
+schedule of :class:`TransferEdge`s with start/end times; the sim executes
+the schedule, live mode uses the edge order.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclass(frozen=True)
+class Peer:
+    worker_id: str
+    zone: str = "z0"
+    # outbound bandwidth in bytes/s for in-zone and cross-zone edges
+    bw_local: float = 12.5e9        # ~100 Gb/s node NIC
+    bw_cross: float = 3.0e9
+
+
+@dataclass(frozen=True)
+class TransferEdge:
+    src: str
+    dst: str
+    nbytes: int
+    start_s: float
+    end_s: float
+    cross_zone: bool
+
+
+@dataclass
+class TransferPlan:
+    edges: List[TransferEdge] = field(default_factory=list)
+
+    @property
+    def makespan_s(self) -> float:
+        return max((e.end_s for e in self.edges), default=0.0)
+
+    @property
+    def cross_zone_edges(self) -> int:
+        return sum(e.cross_zone for e in self.edges)
+
+    def arrival(self, worker_id: str) -> Optional[float]:
+        for e in self.edges:
+            if e.dst == worker_id:
+                return e.end_s
+        return None
+
+
+def plan_spanning_tree(nbytes: int, sources: Sequence[Peer],
+                       targets: Sequence[Peer], *, fanout_cap: int = 3,
+                       t0: float = 0.0) -> TransferPlan:
+    """Greedy earliest-finish spanning tree with per-node fan-out cap.
+
+    Event-driven: a min-heap of (time a source slot frees, peer).  Each
+    ready source claims the next target, preferring in-zone targets; a
+    target that finishes becomes a source itself.  ``fanout_cap`` bounds
+    *concurrent* outbound transfers per node (paper's N); we model it by
+    giving each node ``fanout_cap`` sequential slots (bandwidth-fair:
+    concurrent transfers would each get bw/N — identical finish time for
+    equal sizes, so sequential slots are the conservative equivalent that
+    also matches TaskVine's real behaviour of queueing beyond the cap).
+    """
+    if not targets:
+        return TransferPlan()
+    remaining: Dict[str, Peer] = {p.worker_id: p for p in targets}
+    for s in sources:
+        remaining.pop(s.worker_id, None)
+    plan = TransferPlan()
+    # heap entries: (time_slot_free, seq, peer)
+    heap: List[Tuple[float, int, Peer]] = []
+    seq = 0
+    for s in sources:
+        for _ in range(max(1, fanout_cap)):
+            heapq.heappush(heap, (t0, seq, s)); seq += 1
+    if not heap:
+        raise ValueError("no sources to transfer from")
+    seeded = {s.zone for s in sources}    # zones with a (future) source
+    while remaining:
+        t_free, _, src = heapq.heappop(heap)
+        # prefer an in-zone target; else SEED one unseeded zone (a zone
+        # already seeded will be served over its own fast local links by
+        # the in-flight copy whose slots are in the heap).
+        dst = next((p for p in remaining.values() if p.zone == src.zone),
+                   None)
+        cross = dst is None
+        if cross:
+            dst = next((p for p in remaining.values()
+                        if p.zone not in seeded), None)
+            if dst is None:
+                continue            # this slot is useless; drop it
+            seeded.add(dst.zone)
+        del remaining[dst.worker_id]
+        bw = src.bw_cross if cross else src.bw_local
+        t_end = t_free + nbytes / bw
+        plan.edges.append(TransferEdge(src.worker_id, dst.worker_id,
+                                       nbytes, t_free, t_end, cross))
+        heapq.heappush(heap, (t_end, seq, src)); seq += 1
+        for _ in range(max(1, fanout_cap)):
+            heapq.heappush(heap, (t_end, seq, dst)); seq += 1
+    return plan
+
+
+def pick_sources(ready_workers: Sequence[Peer], dst_zone: str,
+                 *, max_sources: int = 1) -> List[Peer]:
+    """Scheduler policy: in-zone ready hosts first, then any."""
+    local = [p for p in ready_workers if p.zone == dst_zone]
+    rest = [p for p in ready_workers if p.zone != dst_zone]
+    return (local + rest)[:max_sources]

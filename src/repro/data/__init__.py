@@ -1,0 +1,9 @@
+"""Data substrate: synthetic claims, tokenizer, prompt zoo, loaders."""
+from .claims import Claim, LABELS, generate_claims, label_id
+from .loader import TokenStream, claim_batches
+from .prompts import TEMPLATES, PromptTemplate, accuracy, parse_verdict
+from .tokenizer import BOS, EOS, PAD, SEP, ByteTokenizer
+
+__all__ = ["BOS", "ByteTokenizer", "Claim", "EOS", "LABELS", "PAD",
+           "PromptTemplate", "SEP", "TEMPLATES", "TokenStream", "accuracy",
+           "claim_batches", "generate_claims", "label_id", "parse_verdict"]

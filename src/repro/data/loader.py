@@ -1,0 +1,46 @@
+"""Data pipeline: deterministic synthetic token streams + claim batching.
+
+Training uses an infinite packed-sequence stream (synthetic text rendered
+from the claims db and tokenized), so the end-to-end train example runs
+without external datasets.  Inference uses claim batches for the PfF app.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, List, Optional
+
+import numpy as np
+
+from .claims import Claim, generate_claims
+from .prompts import TEMPLATES
+from .tokenizer import ByteTokenizer, PAD
+
+
+class TokenStream:
+    """Infinite (batch, seq) int32 stream of packed tokenized claims."""
+
+    def __init__(self, tokenizer: ByteTokenizer, *, batch: int,
+                 seq_len: int, seed: int = 0, n_claims: int = 4096):
+        self.tok = tokenizer
+        self.batch, self.seq_len = batch, seq_len
+        claims = generate_claims(n_claims, seed=seed)
+        tmpl = TEMPLATES["with_evidence"]
+        ids: List[int] = []
+        for c in claims:
+            ids.extend(self.tok.encode(tmpl.render(c) + " " + c.label.lower(),
+                                       eos=True))
+        self._ids = np.asarray(ids, dtype=np.int32)
+        self._rng = np.random.default_rng(seed)
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        return self
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        n = self.batch * self.seq_len
+        starts = self._rng.integers(0, len(self._ids) - self.seq_len - 1,
+                                    size=self.batch)
+        tok = np.stack([self._ids[s:s + self.seq_len] for s in starts])
+        return {"tokens": tok.astype(np.int32)}
+
+
+def claim_batches(claims: List[Claim], batch: int) -> List[List[Claim]]:
+    return [claims[i:i + batch] for i in range(0, len(claims), batch)]

@@ -1,0 +1,69 @@
+"""Prompt-template zoo for the Prompt-for-Fact application (paper §6.1).
+
+PfF searches over (LLM, prompt template) pairs; each template renders a
+claim (+ evidence) into model input and parses the generation back into a
+FEVER label.  The rendered template string is part of the *context inputs*
+element of the recipe — identical across a sweep, so it is staged once.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict
+
+from .claims import Claim, LABELS
+
+
+@dataclass(frozen=True)
+class PromptTemplate:
+    name: str
+    render: Callable[[Claim], str]
+
+
+def _zero_shot(c: Claim) -> str:
+    return (f"verify the claim {c.text} . answer supported refuted or "
+            f"not enough info . answer")
+
+
+def _with_evidence(c: Claim) -> str:
+    return (f"evidence {c.evidence} . claim {c.text} . is the claim "
+            f"supported refuted or not enough info . answer")
+
+
+def _few_shot(c: Claim) -> str:
+    shots = ("claim the capital of France is Paris . answer supported . "
+             "claim the capital of Japan is Oslo . answer refuted . ")
+    return shots + f"claim {c.text} . answer"
+
+
+def _cot(c: Claim) -> str:
+    return (f"claim {c.text} . evidence {c.evidence} . think step by step "
+            f"then answer supported refuted or not enough info . answer")
+
+
+TEMPLATES: Dict[str, PromptTemplate] = {
+    t.name: t for t in [
+        PromptTemplate("zero_shot", _zero_shot),
+        PromptTemplate("with_evidence", _with_evidence),
+        PromptTemplate("few_shot", _few_shot),
+        PromptTemplate("cot", _cot),
+    ]
+}
+
+
+def parse_verdict(generated: str) -> str:
+    """Map free-form generation to a FEVER label (first match wins)."""
+    g = generated.lower()
+    first, best = len(g) + 1, "NOT ENOUGH INFO"
+    for label, needles in [("SUPPORTED", ("supported", "true")),
+                           ("REFUTED", ("refuted", "false")),
+                           ("NOT ENOUGH INFO", ("not enough", "unknown"))]:
+        for n in needles:
+            i = g.find(n)
+            if 0 <= i < first:
+                first, best = i, label
+    return best
+
+
+def accuracy(predictions, claims) -> float:
+    ok = sum(p == c.label for p, c in zip(predictions, claims))
+    return ok / max(len(claims), 1)

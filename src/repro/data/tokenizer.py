@@ -1,0 +1,82 @@
+"""Byte-fallback tokenizer: deterministic, reversible, vocab-size aware.
+
+Real enough for the live executor (round-trips arbitrary UTF-8) without
+shipping a trained BPE: frequent ASCII words get single ids from a fixed
+wordlist ("merges"), everything else falls back to byte ids.  All ids are
+stable across processes — a property the context-management layer relies on
+(the tokenizer is part of the *context inputs* element).
+"""
+from __future__ import annotations
+
+from typing import Iterable, List
+
+import numpy as np
+
+PAD, BOS, EOS, SEP = 0, 1, 2, 3
+_N_SPECIAL = 8          # room for future specials
+
+# a small "merge table" of frequent words in the PfF prompt distribution
+_WORDS = [
+    "the", "a", "is", "was", "of", "in", "to", "and", "claim", "true",
+    "false", "evidence", "supported", "refuted", "not", "enough", "info",
+    "verify", "fact", "statement", "answer", "label", "wikipedia", "born",
+    "year", "city", "country", "film", "directed", "by", "released",
+    "population", "capital", "author", "wrote", "album", "band", "played",
+]
+
+
+class ByteTokenizer:
+    """ids: [0..7] specials | [8..8+W) words | [8+W..8+W+256) bytes."""
+
+    def __init__(self, vocab_size: int = 512):
+        need = _N_SPECIAL + len(_WORDS) + 256
+        if vocab_size < need:
+            # shrink the word table to fit tiny vocab configs
+            n_words = max(0, vocab_size - _N_SPECIAL - 256)
+            if n_words < 0 or vocab_size < _N_SPECIAL + 256:
+                raise ValueError(f"vocab_size {vocab_size} < {_N_SPECIAL+256}")
+            self.words = _WORDS[:n_words]
+        else:
+            self.words = list(_WORDS)
+        self.vocab_size = vocab_size
+        self._word_to_id = {w: _N_SPECIAL + i for i, w in enumerate(self.words)}
+        self._byte_base = _N_SPECIAL + len(self.words)
+
+    # -- encode ------------------------------------------------------------
+    def encode(self, text: str, *, bos: bool = True,
+               eos: bool = False) -> List[int]:
+        ids: List[int] = [BOS] if bos else []
+        for tok in text.split(" "):
+            wid = self._word_to_id.get(tok)     # exact match: reversible
+            if wid is not None:
+                ids.append(wid)
+            else:
+                ids.extend(self._byte_base + b for b in tok.encode("utf-8"))
+            ids.append(self._byte_base + ord(" "))
+        if text:
+            ids.pop()                   # trailing space
+        if eos:
+            ids.append(EOS)
+        return ids
+
+    def encode_batch(self, texts: Iterable[str], seq_len: int,
+                     *, pad_id: int = PAD) -> np.ndarray:
+        rows = []
+        for t in texts:
+            ids = self.encode(t)[:seq_len]
+            rows.append(ids + [pad_id] * (seq_len - len(ids)))
+        return np.asarray(rows, dtype=np.int32)
+
+    # -- decode ------------------------------------------------------------
+    def decode(self, ids: Iterable[int]) -> str:
+        out: List[bytes] = []
+        for i in ids:
+            i = int(i)
+            if i < _N_SPECIAL:
+                continue
+            if i < self._byte_base:
+                out.append((" " + self.words[i - _N_SPECIAL] + " ").encode())
+            elif i < self._byte_base + 256:
+                out.append(bytes([i - self._byte_base]))
+        txt = b"".join(out).decode("utf-8", errors="replace")
+        return " ".join(txt.split())

@@ -1,0 +1,7 @@
+"""Inference: batched engine + the Prompt-for-Fact application."""
+from .engine import GenerationResult, InferenceEngine
+from .pff import (MAX_NEW, PROMPT_LEN, build_context_recipe, infer_claims,
+                  sweep_accuracy)
+
+__all__ = ["GenerationResult", "InferenceEngine", "MAX_NEW", "PROMPT_LEN",
+           "build_context_recipe", "infer_claims", "sweep_accuracy"]

@@ -1,0 +1,70 @@
+"""Batched inference engine: jitted prefill + decode loop, KV cache managed.
+
+The engine is the computational payload the context-management layer hosts:
+``params`` (device-resident weights), the jitted ``prefill``/``decode_step``
+executables, and the tokenizer together form the *pervasive context*; an
+:class:`InferenceEngine` instance is exactly what a library process keeps
+alive between tasks.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import model as M
+
+
+@dataclass
+class GenerationResult:
+    tokens: np.ndarray            # (B, n_new)
+    n_prefill: int
+    n_new: int
+
+
+class InferenceEngine:
+    def __init__(self, cfg, params, *, max_len: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        # the compiled executables are part of the context (DESIGN.md §2)
+        self._prefill = jax.jit(
+            functools.partial(M.prefill, cfg, max_len=max_len))
+        self._decode = jax.jit(functools.partial(M.decode_step, cfg))
+
+    # ------------------------------------------------------------------
+    def generate(self, batch: Dict[str, Any], *, max_new: int = 16,
+                 temperature: float = 0.0,
+                 seed: int = 0) -> GenerationResult:
+        """Greedy (or sampled) continuation of ``batch['tokens']``."""
+        tokens = jnp.asarray(batch["tokens"])
+        B, S = tokens.shape
+        assert S + max_new <= self.max_len, (S, max_new, self.max_len)
+        logits, cache = self._prefill(self.params, batch)
+        key = jax.random.PRNGKey(seed)
+        out: List[jnp.ndarray] = []
+        tok = self._select(logits[:, -1], temperature, key)
+        out.append(tok)
+        for i in range(max_new - 1):
+            logits, cache = self._decode(self.params, cache, tok[:, None])
+            key = jax.random.fold_in(key, i)
+            tok = self._select(logits[:, -1], temperature, key)
+            out.append(tok)
+        return GenerationResult(np.asarray(jnp.stack(out, axis=1)), S,
+                                max_new)
+
+    @staticmethod
+    def _select(logits, temperature: float, key) -> jnp.ndarray:
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / temperature,
+                                      axis=-1).astype(jnp.int32)
+
+    # ------------------------------------------------------------------
+    def warmup(self, batch: Dict[str, Any]) -> None:
+        """Force compilation (the xla_executable context element)."""
+        self.generate(batch, max_new=2)

@@ -1,0 +1,95 @@
+"""Prompt-for-Fact: the paper's evaluation application (§6.1).
+
+PfF takes (LLM, prompt template) and returns fact-verification accuracy
+over a claim set.  This module provides:
+
+* :func:`build_context_loaders` — the *context code* of Fig 3's
+  ``load_model``: loaders that materialise tokenizer, params, engine and
+  the compiled executables, keyed to real :class:`ContextElement`s so the
+  LIVE executor exercises the context lifecycle for real;
+* :func:`infer_claims` — the bound function of Fig 3's ``infer_model``:
+  runs inside the library's address space against the hosted context;
+* :func:`sweep_accuracy` — the aggregated (LLM, template) score.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Sequence
+
+import jax
+import numpy as np
+
+from ..configs import ModelConfig
+from ..core import ContextElement, ContextRecipe, model_context_recipe
+from ..data.claims import Claim
+from ..data.prompts import TEMPLATES, accuracy, parse_verdict
+from ..data.tokenizer import ByteTokenizer
+from ..models import model as M
+from .engine import InferenceEngine
+
+PROMPT_LEN = 96
+MAX_NEW = 8
+
+
+def build_context_recipe(cfg: ModelConfig, template_name: str,
+                         *, max_len: int = PROMPT_LEN + MAX_NEW,
+                         seed: int = 0) -> ContextRecipe:
+    """A live recipe whose loaders really materialise the PfF context."""
+    sized = model_context_recipe(cfg, include_compile=True,
+                                 shapes_key=f"len{max_len}",
+                                 deps_bytes=64_000_000, activation_s=0.0)
+    tok = ByteTokenizer(cfg.vocab_size)
+
+    state: Dict[str, Any] = {}
+
+    def load_deps():
+        import jax as _jax              # noqa: F401  (the import IS the work)
+        import numpy as _np             # noqa: F401
+        return {"jax": _jax.__version__}
+
+    def load_weights():
+        params = M.init_params(cfg, jax.random.PRNGKey(seed))
+        state["params"] = params
+        return params
+
+    def load_context_inputs():
+        return {"tokenizer": tok, "template": TEMPLATES[template_name]}
+
+    def load_executable():
+        engine = InferenceEngine(cfg, state["params"], max_len=max_len)
+        warm = {"tokens": np.ones((1, 8), np.int32)}
+        engine.warmup(warm)
+        return engine
+
+    loaders = {"deps": load_deps, "weights": load_weights,
+               "context_inputs": load_context_inputs,
+               "xla_executable": load_executable,
+               "code": lambda: infer_claims}
+    elements = tuple(dataclasses.replace(e, loader=loaders[e.name])
+                     for e in sized.elements)
+    return dataclasses.replace(sized, elements=elements)
+
+
+def infer_claims(payloads: Dict[str, Any],
+                 claims: Sequence[Claim]) -> List[str]:
+    """The task body (Fig 3 ``infer_model``): executed inside the library."""
+    engine: InferenceEngine = payloads["xla_executable"]
+    ci = payloads["context_inputs"]
+    tok: ByteTokenizer = ci["tokenizer"]
+    template = ci["template"]
+    prompts = [template.render(c) for c in claims]
+    batch = {"tokens": tok.encode_batch(prompts, PROMPT_LEN)}
+    res = engine.generate(batch, max_new=MAX_NEW)
+    return [parse_verdict(tok.decode(row)) for row in res.tokens]
+
+
+def sweep_accuracy(cfg: ModelConfig, template_name: str,
+                   claims: Sequence[Claim], *, batch: int = 8,
+                   seed: int = 0) -> float:
+    """Single-process reference sweep (what pv0 computes)."""
+    recipe = build_context_recipe(cfg, template_name, seed=seed)
+    payloads = {e.name: e.loader() for e in recipe.elements}
+    preds: List[str] = []
+    for i in range(0, len(claims), batch):
+        preds.extend(infer_claims(payloads, claims[i:i + batch]))
+    return accuracy(preds, claims)

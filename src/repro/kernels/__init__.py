@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the compute hot-spots, each with:
+
+- ``<name>.py``  — the ``pl.pallas_call`` kernel with explicit BlockSpec VMEM
+  tiling (TPU is the target; validated via ``interpret=True`` on CPU),
+- ``ops.py``     — jit'd wrapper that dispatches kernel vs reference by
+  platform (CPU / dry-run lowers the pure-XLA reference path),
+- ``ref.py``     — pure-jnp oracle used by the allclose test sweeps.
+
+Kernels: flash_attention (prefill/train), decode_attention (single-token GQA
+attention against a ring KV cache), ssm_scan (selective-SSM chunked scan).
+"""
+from . import flash_attention, decode_attention, ssm_scan  # noqa: F401

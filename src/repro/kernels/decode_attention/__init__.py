@@ -1,0 +1,4 @@
+from . import ops, ref  # noqa: F401
+from .decode_attention import decode_attention_pallas  # noqa: F401
+from .ops import decode_attention  # noqa: F401
+from .ref import decode_attention_ref  # noqa: F401

@@ -1,0 +1,112 @@
+"""Single-token GQA decode attention Pallas TPU kernel.
+
+Decode attention is memory-bound: the whole KV cache streams HBM->VMEM once
+while compute is a (G x bk) @ (bk x hd) matmul per block — arithmetic
+intensity ~G. The kernel therefore:
+
+- tiles over (B, K, T/bk): one program per (batch, kv-head), sequential over
+  KV blocks, all G grouped q-heads processed together so each KV tile is
+  read exactly ONCE (the GQA bandwidth win — a naive per-q-head kernel would
+  read the cache G times);
+- carries the online-softmax state (m, l, acc) in fp32 VMEM scratch;
+- masks ring slots >= n_valid (scalar in SMEM).
+
+G is padded to the 8-sublane minimum by the wrapper when n_heads == n_kv
+(MHA decode).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(n_valid_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, softcap: float, bk: int, n_kv_blocks: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    n_valid = n_valid_ref[0]
+    block_live = ki * bk < n_valid
+
+    @pl.when(block_live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)           # (G, hd)
+        k = k_ref[0, 0].astype(jnp.float32)           # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)           # (bk, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < n_valid, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, -1, keepdims=True)
+        acc_scr[...] = (acc_scr[...] * corr +
+                        jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                            preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q, k, v, n_valid, *, softcap: float = 0.0,
+                            scale: float | None = None, bk: int = 256,
+                            interpret: bool = False):
+    """q: (B,1,H,hd); k,v: (B,T,K,hd); n_valid scalar int32."""
+    B, Sq, H, hd = q.shape
+    assert Sq == 1, "decode kernel is single-token"
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    if scale is None:
+        scale = 1.0 / math.sqrt(hd)
+    bk = min(bk, T)
+    assert T % bk == 0, (T, bk)
+    n_kv_blocks = T // bk
+
+    qg = q.reshape(B, K, G, hd)                        # group q-heads by kv head
+    kt = k.transpose(0, 2, 1, 3)                       # (B,K,T,hd)
+    vt = v.transpose(0, 2, 1, 3)
+    n_valid_arr = jnp.asarray(n_valid, jnp.int32).reshape(1)
+
+    grid = (B, K, n_kv_blocks)
+    kern = functools.partial(_kernel, scale=scale, softcap=softcap, bk=bk,
+                             n_kv_blocks=n_kv_blocks)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, ki: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, ki: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, ki: (b, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, ki: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(n_valid_arr, qg, kt, vt)
+    return out.reshape(B, 1, H, hd)

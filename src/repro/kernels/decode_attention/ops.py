@@ -1,0 +1,26 @@
+"""Jit'd wrapper for decode attention with platform dispatch."""
+from __future__ import annotations
+
+import jax
+
+from .decode_attention import decode_attention_pallas
+from .ref import decode_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def decode_attention(q, k, v, n_valid, *, softcap: float = 0.0,
+                     scale: float | None = None,
+                     use_pallas: bool | None = None,
+                     interpret: bool = False):
+    """q: (B,1,H,hd); k,v ring cache (B,T,K,hd); n_valid scalar int32."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    T = k.shape[1]
+    if use_pallas and q.shape[1] == 1 and T % min(256, T) == 0:
+        return decode_attention_pallas(q, k, v, n_valid, softcap=softcap,
+                                       scale=scale,
+                                       interpret=interpret or not _on_tpu())
+    return decode_attention_ref(q, k, v, n_valid, softcap=softcap, scale=scale)

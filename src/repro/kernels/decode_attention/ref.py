@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for single-token GQA decode attention over a ring cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, n_valid, *, softcap: float = 0.0,
+                         scale: float | None = None):
+    """q: (B,Sq,H,hd) (Sq is typically 1); k,v: (B,T,K,hd) ring cache;
+    n_valid: scalar int32 — number of valid slots (ring slots < n_valid are
+    attended; with a full ring n_valid == T). Returns (B,Sq,H,hd)."""
+    B, Sq, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    if scale is None:
+        scale = 1.0 / (hd ** 0.5)
+    # keep the KV cache in its storage dtype — an explicit .astype(f32)
+    # materialises a double-width copy of the whole cache shard per step
+    # (granite decode_32k: 9.7 GB of temps — EXPERIMENTS.md §Perf G2)
+    qg = q.reshape(B, Sq, K, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    if softcap > 0.0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    mask = jnp.arange(T)[None, None, None, None, :] < n_valid
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)

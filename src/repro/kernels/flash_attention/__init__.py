@@ -1,0 +1,4 @@
+from . import ops, ref  # noqa: F401
+from .flash_attention import flash_attention_pallas  # noqa: F401
+from .ops import flash_attention  # noqa: F401
+from .ref import flash_attention_ref  # noqa: F401

@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for flash attention (GQA, causal, sliding-window, softcap)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        softcap: float = 0.0, scale: float | None = None):
+    """q: (B,S,H,hd); k,v: (B,T,K,hd) with H = G*K. Returns (B,S,H,hd).
+
+    Computation in fp32 without materialising a repeated KV — the grouped
+    einsum keeps the GQA structure explicit (same contraction the TPU kernel
+    performs per kv-head).
+    """
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    hd_v = v.shape[-1]           # may differ from hd (MLA)
+    G = H // K
+    if scale is None:
+        scale = 1.0 / (hd ** 0.5)
+    # keep operands in model dtype and accumulate in f32: an explicit
+    # .astype(f32) makes XLA all-gather the seq-parallel K/V at DOUBLE
+    # width (measured on llama3-405b train — EXPERIMENTS.md §Perf E3)
+    qg = q.reshape(B, S, K, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    if softcap > 0.0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    if causal or window:
+        qpos = jnp.arange(S)[:, None]
+        kpos = jnp.arange(T)[None, :]
+        mask = jnp.ones((S, T), dtype=bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window:
+            mask &= kpos > qpos - window
+        scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, S, H, hd_v).astype(q.dtype)

@@ -1,0 +1,4 @@
+from . import ops, ref  # noqa: F401
+from .ops import ssm_scan, ssm_step  # noqa: F401
+from .ref import ssm_scan_ref, ssm_step_ref  # noqa: F401
+from .ssm_scan import ssm_scan_pallas  # noqa: F401

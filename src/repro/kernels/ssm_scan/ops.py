@@ -1,0 +1,26 @@
+"""Jit'd wrapper for the selective-SSM scan with platform dispatch."""
+from __future__ import annotations
+
+import jax
+
+from .ref import ssm_scan_ref, ssm_step_ref
+from .ssm_scan import ssm_scan_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def ssm_scan(x, dt, A, B, C, D, *, chunk: int = 128,
+             use_pallas: bool | None = None, interpret: bool = False):
+    """Dispatching entry point. Shapes as in ref.py."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    L = x.shape[1]
+    if use_pallas and L % min(chunk, L) == 0:
+        return ssm_scan_pallas(x, dt, A, B, C, D, chunk=chunk,
+                               interpret=interpret or not _on_tpu())
+    return ssm_scan_ref(x, dt, A, B, C, D)
+
+
+ssm_step = ssm_step_ref  # single-token decode step (pure jnp everywhere)

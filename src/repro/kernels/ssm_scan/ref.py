@@ -1,0 +1,53 @@
+"""Pure-jnp oracle for the selective-SSM scan (Mamba-style).
+
+Recurrence (per batch b, channel d, state n):
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t
+    y_t = sum_n C_t[n] * h_t[:, n] + D * x_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(x, dt, A, B, C, D, h0=None):
+    """x, dt: (Bt, L, DI); A: (DI, N); B, C: (Bt, L, N); D: (DI,).
+
+    Returns (y (Bt,L,DI) in x.dtype, h_final (Bt,DI,N) fp32)."""
+    Bt, L, DI = x.shape
+    N = A.shape[1]
+    xf = x.astype(jnp.float32)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32))
+    Af = A.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    Df = D.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((Bt, DI, N), jnp.float32)
+
+    def step(h, t):
+        x_t, dt_t, B_t, C_t = t                      # (Bt,DI),(Bt,DI),(Bt,N),(Bt,N)
+        dA = jnp.exp(dt_t[..., None] * Af[None])     # (Bt,DI,N)
+        dBx = dt_t[..., None] * B_t[:, None, :] * x_t[..., None]
+        h = dA * h + dBx
+        y_t = jnp.einsum("bdn,bn->bd", h, C_t) + Df[None] * x_t
+        return h, y_t
+
+    xs = (xf.transpose(1, 0, 2), dtf.transpose(1, 0, 2),
+          Bf.transpose(1, 0, 2), Cf.transpose(1, 0, 2))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2).astype(x.dtype)
+    return y, h_final
+
+
+def ssm_step_ref(x_t, dt_t, A, B_t, C_t, D, h):
+    """Single decode step. x_t, dt_t: (Bt, DI); B_t, C_t: (Bt, N);
+    h: (Bt, DI, N) fp32. Returns (y_t (Bt,DI), h)."""
+    dtf = jax.nn.softplus(dt_t.astype(jnp.float32))
+    dA = jnp.exp(dtf[..., None] * A.astype(jnp.float32)[None])
+    dBx = dtf[..., None] * B_t.astype(jnp.float32)[:, None, :] \
+        * x_t.astype(jnp.float32)[..., None]
+    h = dA * h + dBx
+    y = jnp.einsum("bdn,bn->bd", h, C_t.astype(jnp.float32)) \
+        + D.astype(jnp.float32)[None] * x_t.astype(jnp.float32)
+    return y.astype(x_t.dtype), h

@@ -1,0 +1,9 @@
+"""Launchers: production mesh, multi-pod dry-run, train/serve drivers.
+
+Deliberately import-free: ``python -m repro.launch.dryrun`` executes this
+package __init__ BEFORE dryrun.py can set XLA_FLAGS, so nothing here may
+touch jax.  Import the submodules directly::
+
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import input_specs
+"""

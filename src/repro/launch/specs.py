@@ -1,0 +1,53 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run inputs).
+
+``input_specs(cfg, shape)`` returns exactly what ``train_step`` /
+``prefill_step`` / ``serve_step`` take, as ShapeDtypeStructs — weak-type
+correct, shardable, zero allocation.  Modality frontends are stubs per the
+assignment: VLM/audio entries provide precomputed patch/frame embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import InputShape, ModelConfig
+from ..models import model as M
+from ..models.model import VISION_EMBED_DIM
+
+
+def batch_specs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
+    """The token batch (+ stub modality embeddings) for one step."""
+    dt = jnp.dtype(cfg.dtype)
+    specs: Dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+    if cfg.family == "vlm":
+        specs["vision_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_vision_patches, VISION_EMBED_DIM), dt)
+    if cfg.is_encdec:
+        specs["audio_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_audio_frames, cfg.d_model), dt)
+    return specs
+
+
+def params_specs(cfg: ModelConfig) -> Any:
+    return jax.eval_shape(
+        lambda k: M.init_params(cfg, k), jax.random.PRNGKey(0))
+
+
+def cache_specs_struct(cfg: ModelConfig, batch: int, max_len: int) -> Any:
+    return jax.eval_shape(lambda: M.cache_init(cfg, batch, max_len))
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """All inputs for the step this shape lowers (see launch.steps)."""
+    if shape.kind == "train":
+        return {"batch": batch_specs(cfg, shape.global_batch, shape.seq_len)}
+    if shape.kind == "prefill":
+        return {"batch": batch_specs(cfg, shape.global_batch, shape.seq_len)}
+    # decode: ONE new token against a seq_len-deep cache
+    return {
+        "cache": cache_specs_struct(cfg, shape.global_batch, shape.seq_len),
+        "tokens": jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32),
+    }

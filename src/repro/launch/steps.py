@@ -1,0 +1,179 @@
+"""Step functions + their shardings: what the launchers and dry-run lower.
+
+``make_step(cfg, shape)`` returns (fn, arg_specs, in_shardings) for the
+step kind the input shape dictates:
+
+  train   -> train_step(params, opt_state, batch) -> (params, opt, metrics)
+  prefill -> prefill_step(params, batch)          -> (last logits, cache)
+  decode  -> serve_step(params, cache, tokens)    -> (logits, cache)
+
+All sharding decisions flow from sharding.py's logical-axis rules resolved
+against the active mesh; nothing here names mesh axes directly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import (InputShape, ModelConfig, long_context_variant,
+                       serving_variant)
+from ..models import model as M
+from ..optim import adamw_init, adamw_update
+from ..sharding import ShardingCtx, cache_specs, param_specs
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .specs import batch_specs, cache_specs_struct, input_specs, params_specs
+
+
+# ---------------------------------------------------------------------------
+# Step functions (pure; close over cfg only)
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig) -> Callable:
+    k = max(1, cfg.parallel.microbatch)
+
+    def train_step(params, opt_state, batch):
+        if k == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                functools.partial(M.loss_fn, cfg), has_aux=True)(
+                    params, batch)
+        else:
+            # gradient accumulation over k microbatches via lax.scan.
+            # The accumulator MUST be constrained to the param shardings:
+            # left to itself XLA replicates it, which turns each layer's
+            # dW into a full-weight all-reduce per microbatch (measured:
+            # 25.5 TB/step on llama3-405b — EXPERIMENTS.md §Perf E1).
+            from ..sharding import active_ctx, param_specs
+            ctx = active_ctx()
+            g_spec = param_specs(params, ctx) if ctx is not None else None
+
+            def pin(g):
+                if g_spec is None:
+                    return g
+                return jax.lax.with_sharding_constraint(g, g_spec)
+
+            # microbatches are UNROLLED (python loop), not lax.scan'd: the
+            # scan carrier forces a single sharding on the stacked grads
+            # that XLA resolves to `replicated`, turning every per-layer
+            # dW into a full-size all-reduce (§Perf E1/E1b).
+            grads = pin(jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            loss_sum = jnp.zeros((), jnp.float32)
+            for i in range(k):
+                mb = jax.tree_util.tree_map(
+                    lambda x: x.reshape(
+                        (k, x.shape[0] // k) + x.shape[1:])[i], batch)
+                (loss, _m), g = jax.value_and_grad(
+                    functools.partial(M.loss_fn, cfg), has_aux=True)(
+                        params, mb)
+                grads = pin(jax.tree_util.tree_map(
+                    jnp.add, grads, pin(g)))
+                loss_sum = loss_sum + loss
+            grads = jax.tree_util.tree_map(lambda g: g / k, grads)
+            loss = loss_sum / k
+            metrics = {"loss": loss}
+        new_params, new_opt, om = adamw_update(
+            grads, opt_state, params, lr=3e-4)
+        return new_params, new_opt, {**metrics, **om}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int) -> Callable:
+    def prefill_step(params, batch):
+        return M.prefill(cfg, params, batch, max_len)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    def serve_step(params, cache, tokens):
+        return M.decode_step(cfg, params, cache, tokens)
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Shardings
+# ---------------------------------------------------------------------------
+
+def _ns(ctx: ShardingCtx, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(ctx.mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+def shardings_for(cfg: ModelConfig, shape: InputShape, ctx: ShardingCtx
+                  ) -> Tuple[Any, ...]:
+    """in_shardings pytree matching make_step's arg order."""
+    p_specs = param_specs(params_specs(cfg), ctx)
+    p_sh = _ns(ctx, p_specs)
+    if shape.kind == "train":
+        opt_shape = jax.eval_shape(
+            lambda: adamw_init(params_specs(cfg),
+                               cfg.parallel.optimizer_moment_dtype))
+        opt_sh = type(opt_shape)(
+            step=NamedSharding(ctx.mesh, P()),
+            mu=_ns(ctx, param_specs(opt_shape.mu, ctx)),
+            nu=_ns(ctx, param_specs(opt_shape.nu, ctx)))
+        b_sh = {
+            k: NamedSharding(
+                ctx.mesh, ctx.resolve(("batch",) + (None,) * (len(v.shape) - 1),
+                                      v.shape))
+            for k, v in batch_specs(cfg, shape.global_batch,
+                                    shape.seq_len).items()}
+        return (p_sh, opt_sh, b_sh)
+    if shape.kind == "prefill":
+        b_sh = {
+            k: NamedSharding(
+                ctx.mesh, ctx.resolve(("batch",) + (None,) * (len(v.shape) - 1),
+                                      v.shape))
+            for k, v in batch_specs(cfg, shape.global_batch,
+                                    shape.seq_len).items()}
+        return (p_sh, b_sh)
+    # decode
+    cache_shape = cache_specs_struct(cfg, shape.global_batch, shape.seq_len)
+    c_sh = _ns(ctx, cache_specs(cache_shape, ctx))
+    tok_sh = NamedSharding(ctx.mesh,
+                           ctx.resolve(("batch", None),
+                                       (shape.global_batch, 1)))
+    return (p_sh, c_sh, tok_sh)
+
+
+# ---------------------------------------------------------------------------
+# One-call assembly
+# ---------------------------------------------------------------------------
+
+def train_variant(cfg: ModelConfig) -> ModelConfig:
+    """§Perf Q1: ZeRO-style pure-DP for train when the config asks."""
+    import dataclasses
+    if not cfg.parallel.train_dp_only:
+        return cfg
+    return cfg.with_(parallel=dataclasses.replace(
+        cfg.parallel, tensor_parallel=False, fsdp=True, seq_parallel=False))
+
+
+def make_step(cfg: ModelConfig, shape: InputShape, ctx: ShardingCtx,
+              *, serving_fsdp_off: bool = True):
+    """Returns (step_fn, ordered arg specs tuple, in_shardings tuple)."""
+    cfg = long_context_variant(cfg) if shape.name == "long_500k" else cfg
+    if shape.kind == "train" and serving_fsdp_off:
+        cfg = train_variant(cfg)                 # §Perf Q1
+    if shape.kind == "decode" and serving_fsdp_off:
+        cfg = serving_variant(cfg)               # §Perf G4: no FSDP at decode
+    specs = input_specs(cfg, shape)
+    in_sh = shardings_for(cfg, shape, ctx)
+    if shape.kind == "train":
+        fn = make_train_step(cfg)
+        args = (params_specs(cfg),
+                jax.eval_shape(lambda: adamw_init(
+                    params_specs(cfg), cfg.parallel.optimizer_moment_dtype)),
+                specs["batch"])
+    elif shape.kind == "prefill":
+        fn = make_prefill_step(cfg, max_len=shape.seq_len)
+        args = (params_specs(cfg), specs["batch"])
+    else:
+        fn = make_serve_step(cfg)
+        args = (params_specs(cfg), specs["cache"], specs["tokens"])
+    return fn, args, in_sh

@@ -1,0 +1,300 @@
+"""Attention variants: GQA (optionally qk-norm / sliding-window), MLA, cross.
+
+Dense compute goes through the kernel wrappers in ``repro.kernels`` which
+dispatch to the Pallas TPU kernels on TPU and to the pure-jnp reference on
+CPU (and in the dry-run).
+
+Shapes:  x (B,S,D); q (B,S,H,hd); k,v (B,T,K,hd) with H = G*K (GQA).
+KV caches are ring buffers of length T = min(window or max_len, max_len);
+slot(pos) = pos % T; K is stored *post-RoPE* so ring eviction needs no
+re-rotation.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.flash_attention import ops as flash_ops
+from ..kernels.decode_attention import ops as decode_ops
+from .layers import apply_rope, rmsnorm, rmsnorm_init, trunc_normal
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg, dtype):
+    D, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": trunc_normal(ks[0], (D, H, hd), dtype=dtype),
+        "wk": trunc_normal(ks[1], (D, K, hd), dtype=dtype),
+        "wv": trunc_normal(ks[2], (D, K, hd), dtype=dtype),
+        "wo": trunc_normal(ks[3], (H, hd, D), dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dtype)
+        p["k_norm"] = rmsnorm_init(hd, dtype)
+    return p
+
+
+def gqa_project_qkv(p, cfg, x, positions):
+    """Project and rope q/k/v for a full sequence. positions: (S,) or (B,S)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_apply(p, cfg, x, *, positions=None, causal: bool = True):
+    """Full-sequence attention (train / prefill)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+    q, k, v = gqa_project_qkv(p, cfg, x, positions)
+    out = flash_ops.flash_attention(
+        q, k, v, causal=causal, window=cfg.attn_window,
+        softcap=cfg.attn_logit_softcap)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def gqa_cache_len(cfg, max_len: int) -> int:
+    return min(cfg.attn_window, max_len) if cfg.attn_window else max_len
+
+
+def _quantize_kv(x):
+    """(..., hd) -> int8 values + per-row f16 scale (§Perf G5)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                    keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale[..., 0].astype(jnp.float16)
+
+
+def _dequantize_kv(q, scale, dtype):
+    return (q.astype(jnp.float32)
+            * scale.astype(jnp.float32)[..., None]).astype(dtype)
+
+
+def gqa_cache_init(cfg, batch: int, max_len: int, n_layers: int, dtype):
+    K, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    T = gqa_cache_len(cfg, max_len)
+    shape = (n_layers, batch, T, K, hd) if n_layers else (batch, T, K, hd)
+    if cfg.kv_cache_dtype == "int8":       # §Perf G5
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(shape[:-1], jnp.float16),
+                "v_scale": jnp.zeros(shape[:-1], jnp.float16)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def gqa_empty_cache_layer(cfg, batch: int, max_len: int, dtype):
+    """One layer's empty ring cache (prefill writes into this)."""
+    return gqa_cache_init(cfg, batch, max_len, 0, dtype)
+
+
+def gqa_cache_write_prefill(cache_layer, cfg, k, v, max_len: int):
+    """Write a prefill's K/V (B,S,K,hd) into one layer's ring cache (B,T,K,hd)."""
+    T = cache_layer["k"].shape[1]
+    S = k.shape[1]
+    if S > T:
+        # keep the last T positions, placed at their ring slots
+        slots = (jnp.arange(S - T, S, dtype=jnp.int32) % T)
+        order = jnp.argsort(slots)
+        k = jnp.take(k[:, S - T:], order, axis=1)
+        v = jnp.take(v[:, S - T:], order, axis=1)
+
+    def upd(c, val):
+        return jax.lax.dynamic_update_slice_in_dim(c, val, 0, axis=1)
+
+    if cfg.kv_cache_dtype == "int8":
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        return {"k": upd(cache_layer["k"], kq),
+                "v": upd(cache_layer["v"], vq),
+                "k_scale": upd(cache_layer["k_scale"], ks),
+                "v_scale": upd(cache_layer["v_scale"], vs)}
+    return {"k": upd(cache_layer["k"], k), "v": upd(cache_layer["v"], v)}
+
+
+def gqa_decode(p, cfg, x, cache_layer, pos):
+    """One-token decode for one layer. x: (B,1,D); pos: scalar int32 = number
+    of tokens already in context. Returns (out, new_cache_layer)."""
+    B = x.shape[0]
+    T = cache_layer["k"].shape[1]
+    positions = jnp.full((1,), pos, dtype=jnp.int32)
+    q, k, v = gqa_project_qkv(p, cfg, x, positions)   # q (B,1,H,hd); k,v (B,1,K,hd)
+    slot = pos % T
+
+    def upd(c, val):
+        return jax.lax.dynamic_update_slice_in_dim(c, val, slot, axis=1)
+
+    if cfg.kv_cache_dtype == "int8":       # §Perf G5
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        new_cache = {"k": upd(cache_layer["k"], kq),
+                     "v": upd(cache_layer["v"], vq),
+                     "k_scale": upd(cache_layer["k_scale"], ks),
+                     "v_scale": upd(cache_layer["v_scale"], vs)}
+        ck = _dequantize_kv(new_cache["k"], new_cache["k_scale"], k.dtype)
+        cv = _dequantize_kv(new_cache["v"], new_cache["v_scale"], v.dtype)
+    else:
+        new_cache = {"k": upd(cache_layer["k"], k),
+                     "v": upd(cache_layer["v"], v)}
+        ck, cv = new_cache["k"], new_cache["v"]
+    n_valid = jnp.minimum(pos + 1, T)
+    out = decode_ops.decode_attention(q, ck, cv, n_valid,
+                                      softcap=cfg.attn_logit_softcap)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+def cross_attn_init(key, cfg, dtype):
+    D, H, hd = cfg.d_model, cfg.n_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": trunc_normal(ks[0], (D, H, hd), dtype=dtype),
+        "wk": trunc_normal(ks[1], (D, H, hd), dtype=dtype),
+        "wv": trunc_normal(ks[2], (D, H, hd), dtype=dtype),
+        "wo": trunc_normal(ks[3], (H, hd, D), dtype=dtype),
+    }
+
+
+def cross_attn_kv(p, enc_out):
+    """Precompute cross K/V from encoder output (a reusable request context)."""
+    k = jnp.einsum("btd,dhk->bthk", enc_out, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", enc_out, p["wv"])
+    return k, v
+
+
+def cross_attn_apply(p, cfg, x, k, v):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    out = flash_ops.flash_attention(q, k, v, causal=False, window=0)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg, dtype):
+    m = cfg.mla
+    D, H = cfg.d_model, cfg.n_heads
+    qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": trunc_normal(ks[0], (D, m.q_lora_rank), dtype=dtype),
+        "q_norm": rmsnorm_init(m.q_lora_rank, dtype),
+        "wq_b": trunc_normal(ks[1], (m.q_lora_rank, H, qk_hd), dtype=dtype),
+        "wkv_a": trunc_normal(ks[2], (D, m.kv_lora_rank + m.qk_rope_head_dim),
+                              dtype=dtype),
+        "kv_norm": rmsnorm_init(m.kv_lora_rank, dtype),
+        "wk_b": trunc_normal(ks[3], (m.kv_lora_rank, H, m.qk_nope_head_dim),
+                             dtype=dtype),
+        "wv_b": trunc_normal(ks[4], (m.kv_lora_rank, H, m.v_head_dim),
+                             dtype=dtype),
+        "wo": trunc_normal(ks[5], (H, m.v_head_dim, D), dtype=dtype),
+    }
+
+
+def _mla_q(p, cfg, x, positions):
+    m = cfg.mla
+    q_lat = rmsnorm(jnp.einsum("bsd,dr->bsr", x, p["wq_a"]), p["q_norm"],
+                    cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", q_lat, p["wq_b"])
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_kv_latent(p, cfg, x, positions):
+    """Compressed latent ckv (B,S,r) and shared roped key k_rope (B,S,rope)."""
+    m = cfg.mla
+    kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    ckv = rmsnorm(kv[..., : m.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = kv[..., m.kv_lora_rank:]
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]
+    return ckv, k_rope
+
+
+def mla_apply(p, cfg, x, *, positions=None):
+    """Full-sequence MLA (train / prefill): decompress K,V then flash attention."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    ckv, k_rope = _mla_kv_latent(p, cfg, x, positions)
+    k_nope = jnp.einsum("bsr,rhk->bshk", ckv, p["wk_b"])
+    v = jnp.einsum("bsr,rhk->bshk", ckv, p["wv_b"])
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (B, S, cfg.n_heads, m.qk_rope_head_dim))],
+        axis=-1)
+    out = flash_ops.flash_attention(q, k, v, causal=True,
+                                    window=cfg.attn_window)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def mla_cache_init(cfg, batch: int, max_len: int, n_layers: int, dtype):
+    m = cfg.mla
+    T = gqa_cache_len(cfg, max_len)
+    return {
+        "ckv": jnp.zeros((n_layers, batch, T, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((n_layers, batch, T, m.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_cache_write_prefill(cache_layer, cfg, ckv, k_rope, max_len: int):
+    T = cache_layer["ckv"].shape[1]
+    S = ckv.shape[1]
+    if S > T:
+        ckv, k_rope = ckv[:, S - T:], k_rope[:, S - T:]
+    c1 = jax.lax.dynamic_update_slice_in_dim(cache_layer["ckv"], ckv, 0, axis=1)
+    c2 = jax.lax.dynamic_update_slice_in_dim(cache_layer["k_rope"], k_rope, 0,
+                                             axis=1)
+    return {"ckv": c1, "k_rope": c2}
+
+
+def mla_decode(p, cfg, x, cache_layer, pos):
+    """Absorbed-form MLA decode: attention runs in the compressed latent space
+    (this is the TPU-friendly 'weight absorption' trick from the DeepSeek
+    papers — K/V are never decompressed per step)."""
+    m = cfg.mla
+    B = x.shape[0]
+    T = cache_layer["ckv"].shape[1]
+    positions = jnp.full((1,), pos, dtype=jnp.int32)
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)        # (B,1,H,·)
+    ckv_new, k_rope_new = _mla_kv_latent(p, cfg, x, positions)
+    slot = pos % T
+    ckv = jax.lax.dynamic_update_slice_in_dim(cache_layer["ckv"], ckv_new,
+                                              slot, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(cache_layer["k_rope"],
+                                                 k_rope_new, slot, axis=1)
+    # absorb wk_b into the query: q_lat (B,1,H,r)
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["wk_b"])
+    scale = 1.0 / jnp.sqrt(jnp.float32(m.qk_nope_head_dim + m.qk_rope_head_dim))
+    scores = (jnp.einsum("bshr,btr->bhst", q_lat, ckv)
+              + jnp.einsum("bshk,btk->bhst", q_rope, k_rope)).astype(jnp.float32)
+    scores = scores * scale
+    n_valid = jnp.minimum(pos + 1, T)
+    mask = jnp.arange(T)[None, None, None, :] < n_valid
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1).astype(ckv.dtype)
+    out_lat = jnp.einsum("bhst,btr->bshr", probs, ckv)   # (B,1,H,r)
+    out = jnp.einsum("bshr,rhk->bshk", out_lat, p["wv_b"])
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, {"ckv": ckv, "k_rope": k_rope}

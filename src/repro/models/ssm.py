@@ -1,0 +1,123 @@
+"""Selective-SSM (Mamba-style) mixer used by hymba's hybrid heads.
+
+Layer:  x -> in_proj -> (u, z);  u -> causal conv -> silu -> selective scan
+        -> * silu(z) -> out_proj.
+The scan itself goes through the ssm_scan kernel wrapper (Pallas on TPU,
+jnp reference elsewhere). Decode keeps (conv window, scan state) as cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.ssm_scan import ops as scan_ops
+from .layers import trunc_normal
+
+
+def ssm_inner_dim(cfg) -> int:
+    return cfg.ssm.expand * cfg.d_model
+
+
+def ssm_dt_rank(cfg) -> int:
+    return cfg.ssm.dt_rank or max(1, -(-cfg.d_model // 16))
+
+
+def ssm_init(key, cfg, dtype):
+    s = cfg.ssm
+    D = cfg.d_model
+    DI = ssm_inner_dim(cfg)
+    R = ssm_dt_rank(cfg)
+    N = s.state_dim
+    ks = jax.random.split(key, 6)
+    # S4D-real initialisation for A
+    A = jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (DI, N))
+    return {
+        "in_proj": trunc_normal(ks[0], (D, 2 * DI), dtype=dtype),
+        "conv": trunc_normal(ks[1], (s.conv_width, DI), scale=0.1, dtype=dtype),
+        "x_proj": trunc_normal(ks[2], (DI, R + 2 * N), dtype=dtype),
+        "dt_proj": trunc_normal(ks[3], (R, DI), scale=R ** -0.5, dtype=dtype),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((DI,), jnp.float32),
+        "out_proj": trunc_normal(ks[4], (DI, D), dtype=dtype),
+    }
+
+
+def _causal_conv(u, w, init_state=None):
+    """u: (B,L,DI); w: (W,DI) depthwise. Returns (y (B,L,DI), tail (B,W-1,DI))."""
+    B, L, DI = u.shape
+    W = w.shape[0]
+    if init_state is None:
+        init_state = jnp.zeros((B, W - 1, DI), u.dtype)
+    up = jnp.concatenate([init_state, u], axis=1)          # (B, L+W-1, DI)
+    y = sum(up[:, i: i + L] * w[i][None, None, :] for i in range(W))
+    tail = (jax.lax.dynamic_slice_in_dim(up, L, W - 1, axis=1)
+            if W > 1 else jnp.zeros((B, 0, DI), u.dtype))
+    return y, tail
+
+
+def _project_scan_inputs(p, cfg, u):
+    """u: (B,L,DI) post-conv. Returns dt, Bm, Cm for the scan."""
+    N = cfg.ssm.state_dim
+    R = ssm_dt_rank(cfg)
+    dbc = jnp.einsum("bld,dr->blr", u, p["x_proj"])
+    dt_low, Bm, Cm = jnp.split(dbc, [R, R + N], axis=-1)
+    dt = jnp.einsum("blr,rd->bld", dt_low, p["dt_proj"])
+    return dt, Bm, Cm
+
+
+def ssm_apply(p, cfg, x):
+    """Full-sequence mixer: (B,L,D) -> (B,L,D)."""
+    DI = ssm_inner_dim(cfg)
+    uz = jnp.einsum("bld,de->ble", x, p["in_proj"])
+    u, z = jnp.split(uz, [DI], axis=-1)
+    u, _ = _causal_conv(u, p["conv"])
+    u = jax.nn.silu(u)
+    dt, Bm, Cm = _project_scan_inputs(p, cfg, u)
+    A = -jnp.exp(p["A_log"])
+    y, _ = scan_ops.ssm_scan(u, dt, A, Bm, Cm, p["D"], chunk=cfg.ssm.chunk)
+    y = y * jax.nn.silu(z)
+    return jnp.einsum("bld,de->ble", y, p["out_proj"])
+
+
+def ssm_cache_init(cfg, batch: int, n_layers: int, dtype):
+    DI = ssm_inner_dim(cfg)
+    W = cfg.ssm.conv_width
+    N = cfg.ssm.state_dim
+    return {
+        "conv": jnp.zeros((n_layers, batch, W - 1, DI), dtype),
+        "h": jnp.zeros((n_layers, batch, DI, N), jnp.float32),
+    }
+
+
+def ssm_prefill(p, cfg, x):
+    """Like ssm_apply but also returns the decode cache for this layer."""
+    DI = ssm_inner_dim(cfg)
+    uz = jnp.einsum("bld,de->ble", x, p["in_proj"])
+    u, z = jnp.split(uz, [DI], axis=-1)
+    u, conv_tail = _causal_conv(u, p["conv"])
+    u = jax.nn.silu(u)
+    dt, Bm, Cm = _project_scan_inputs(p, cfg, u)
+    A = -jnp.exp(p["A_log"])
+    y, h = scan_ops.ssm_scan(u, dt, A, Bm, Cm, p["D"], chunk=cfg.ssm.chunk)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bld,de->ble", y, p["out_proj"])
+    return out, {"conv": conv_tail, "h": h}
+
+
+def ssm_decode(p, cfg, x, cache_layer):
+    """One-token step. x: (B,1,D). Returns (out (B,1,D), new cache)."""
+    DI = ssm_inner_dim(cfg)
+    uz = jnp.einsum("bld,de->ble", x, p["in_proj"])
+    u, z = jnp.split(uz, [DI], axis=-1)                    # (B,1,DI)
+    conv_hist = cache_layer["conv"]                        # (B,W-1,DI)
+    window = jnp.concatenate([conv_hist, u], axis=1)       # (B,W,DI)
+    u_t = jnp.einsum("bwd,wd->bd", window, p["conv"])[:, None, :]
+    new_conv = window[:, 1:]
+    u_t = jax.nn.silu(u_t)
+    dt, Bm, Cm = _project_scan_inputs(p, cfg, u_t)
+    A = -jnp.exp(p["A_log"])
+    y_t, h = scan_ops.ssm_step(u_t[:, 0], dt[:, 0], A, Bm[:, 0], Cm[:, 0],
+                               p["D"], cache_layer["h"])
+    y = y_t[:, None, :] * jax.nn.silu(z)
+    out = jnp.einsum("bld,de->ble", y, p["out_proj"])
+    return out, {"conv": new_conv, "h": h}

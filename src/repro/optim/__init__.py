@@ -1,0 +1,2 @@
+from .adamw import AdamWState, adamw_init, adamw_update, global_norm  # noqa: F401
+from .schedules import constant, linear_warmup_cosine  # noqa: F401

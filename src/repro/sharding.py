@@ -1,0 +1,271 @@
+"""Logical-axis sharding rules -> NamedShardings, plus in-model hints.
+
+Model code never names mesh axes directly; it annotates tensors with
+*logical* axes (``hint(x, "batch", "seq_act", "embed")``).  A
+:class:`ShardingCtx` (active inside ``with sharding_ctx(mesh, cfg):``)
+resolves logical axes to mesh axes via the rules table, dropping any axis
+whose size does not divide the tensor dim (e.g. 8 kv heads on a 16-way
+'model' axis -> replicated).  Outside a context the hints are no-ops, so the
+same model code runs single-device (smoke tests, live executor) and on the
+production mesh (dry-run, launchers).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import re
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# logical axis -> preferred mesh axes (first that exists & divides wins; a
+# tuple value means "shard over the product of these axes").
+def default_rules(cfg) -> Dict[str, Tuple[Tuple[str, ...], ...]]:
+    par = cfg.parallel
+    fsdp_axes = (("pod", "data"), ("data",)) if par.fsdp else ()
+    tp = (("model",),) if par.tensor_parallel else ()   # §Perf X3
+    # without TP the model axis joins data parallelism (256-way DP)
+    batch_rules = ((("pod", "data")), ("data",)) if par.tensor_parallel \
+        else (("pod", "data", "model"), ("data", "model"),
+              ("pod", "data"), ("data",))
+    return {
+        "batch": batch_rules,
+        "seq_act": ((("model",),) if par.seq_parallel else ()),   # activations
+        "cache_seq": ((("model",),) if par.context_parallel_decode else ()),
+        "heads": tp,
+        "kv_heads": tp,
+        "ff": tp,
+        "experts": (("model",),),    # expert parallelism is its own knob
+        "expert_cap": (),
+        "vocab": tp,
+        "embed": fsdp_axes,          # FSDP: param d_model dim over data axes
+        "embed_act": (),             # activation d_model dim: replicated
+        "qk": (), "state": (), "lora": (), "conv": (), "inner": tp,
+        None: (),
+    }
+
+
+class ShardingCtx:
+    def __init__(self, mesh: Mesh, cfg):
+        self.mesh = mesh
+        self.cfg = cfg
+        self.rules = default_rules(cfg)
+        self.axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def resolve(self, logical: Sequence[Optional[str]],
+                shape: Sequence[int]) -> P:
+        spec = []
+        used: set = set()
+        for dim, name in zip(shape, logical):
+            if name is None:
+                spec.append(None)
+                continue
+            cands = self.rules.get(name, ())
+            # normalise: each candidate is a tuple of mesh axis names
+            norm = []
+            for c in cands:
+                if isinstance(c, str):
+                    norm.append((c,))
+                else:
+                    norm.append(tuple(c))
+            chosen = None
+            for axes in norm:
+                axes = tuple(a for a in axes if a in self.axis_sizes
+                             and a not in used)
+                if not axes:
+                    continue
+                size = int(np.prod([self.axis_sizes[a] for a in axes]))
+                if size > 1 and dim % size == 0:
+                    chosen = axes
+                    break
+            if chosen:
+                used.update(chosen)
+                spec.append(chosen if len(chosen) > 1 else chosen[0])
+            else:
+                spec.append(None)
+        return P(*spec)
+
+    def sharding(self, logical, shape) -> NamedSharding:
+        return NamedSharding(self.mesh, self.resolve(logical, shape))
+
+
+_ACTIVE: contextvars.ContextVar[Optional[ShardingCtx]] = \
+    contextvars.ContextVar("sharding_ctx", default=None)
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh: Mesh, cfg):
+    ctx = ShardingCtx(mesh, cfg)
+    token = _ACTIVE.set(ctx)
+    try:
+        with mesh:
+            yield ctx
+    finally:
+        _ACTIVE.reset(token)
+
+
+def active_ctx() -> Optional[ShardingCtx]:
+    return _ACTIVE.get()
+
+
+def hint(x, *logical: Optional[str]):
+    """Annotate ``x``'s dims with logical axes; no-op outside a context."""
+    ctx = _ACTIVE.get()
+    if ctx is None:
+        return x
+    assert len(logical) == x.ndim, (logical, x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, ctx.sharding(logical, x.shape))
+
+
+def cotangent_dtype_pin(x, dtype):
+    """Identity that casts the COTANGENT to ``dtype`` at this boundary.
+
+    The attention/rope/softmax internals run in f32; without a boundary
+    pin XLA propagates f32 cotangents across the residual stream and the
+    per-layer TP all-reduces of dx run at double width (llama3-405b:
+    136 s → 74 s collective — EXPERIMENTS.md §Perf E5)."""
+    import jax.numpy as jnp
+
+    @jax.custom_vjp
+    def ident(t):
+        return t
+
+    def fwd(t):
+        return t, None
+
+    def bwd(_, g):
+        return (g.astype(dtype),)
+
+    ident.defvjp(fwd, bwd)
+    return ident(x)
+
+
+def grad_hint(tree):
+    """Identity on ``tree`` that pins the COTANGENT's sharding to the param
+    rules.  Applied to each scanned layer's params: without it, the
+    backward-of-scan carries stacked dW replicated and every layer's
+    weight-grad becomes a full-size all-reduce instead of a reduce-scatter
+    (measured 25.5 TB/step on llama3-405b train_4k — EXPERIMENTS.md §Perf).
+    No-op outside a sharding context."""
+    ctx = _ACTIVE.get()
+    if ctx is None:
+        return tree
+    spec_tree = param_specs(tree, ctx)
+
+    @jax.custom_vjp
+    def ident(t):
+        return t
+
+    def fwd(t):
+        return t, None
+
+    def bwd(_, g):
+        return (jax.lax.with_sharding_constraint(g, spec_tree),)
+
+    ident.defvjp(fwd, bwd)
+    return ident(tree)
+
+
+# ---------------------------------------------------------------------------
+# Param specs by leaf-name rules
+# ---------------------------------------------------------------------------
+
+# Leaf-name -> logical axes of the *unstacked* trailing dims.  Stacked layer
+# axes (any leading dims beyond the rule length) resolve to None.
+_PARAM_RULES = [
+    (r"embed$", ("vocab", "embed")),
+    (r"lm_head$", ("embed", "vocab")),
+    (r"proj_vision.*w1$", ("embed", "ff")),
+    (r"proj_vision.*w2$", ("ff", "embed")),
+    (r"wq$", ("embed", "heads", None)),
+    (r"wk$", ("embed", "kv_heads", None)),
+    (r"wv$", ("embed", "kv_heads", None)),
+    (r"wo$", ("heads", None, "embed")),
+    (r"wq_a$", ("embed", "lora")),
+    (r"wq_b$", ("lora", "heads", None)),
+    (r"wkv_a$", ("embed", None)),
+    (r"wk_b$", ("lora", "heads", None)),
+    (r"wv_b$", ("lora", "heads", None)),
+    (r"w1$", ("embed", "ff")),
+    (r"w3$", ("embed", "ff")),
+    (r"w2$", ("ff", "embed")),
+    (r"router$", ("embed", None)),
+    (r"we1$", ("experts", "embed", None)),
+    (r"we3$", ("experts", "embed", None)),
+    (r"we2$", ("experts", None, "embed")),
+    (r"ws1$", ("embed", "ff")),
+    (r"ws3$", ("embed", "ff")),
+    (r"ws2$", ("ff", "embed")),
+    (r"in_proj$", ("embed", "inner")),
+    (r"out_proj$", ("inner", "embed")),
+    (r"x_proj$", ("inner", None)),
+    (r"dt_proj$", (None, "inner")),
+    (r"A_log$", ("inner", None)),
+    (r"(^|/)D$", ("inner",)),
+    (r"conv$", (None, "inner")),
+    (r"(wz|wi|wf|wo_g|wo_gate)$", ("embed", "heads", None)),
+    (r"(rz|ri|rf|ro)$", ("heads", None, None)),
+    (r"(up|up_z)$", ("embed", "inner")),
+    (r"down$", ("inner", "embed")),
+]
+
+
+def _leaf_spec(path: str, shape: Tuple[int, ...], ctx: ShardingCtx) -> P:
+    for pat, logical in _PARAM_RULES:
+        if re.search(pat, path):
+            pad = len(shape) - len(logical)
+            if pad < 0:      # e.g. non-parametric norm scalars
+                break
+            full = (None,) * pad + tuple(logical)
+            return ctx.resolve(full, shape)
+    return P()               # replicate (norms, biases, small tables)
+
+
+def param_specs(params, ctx: ShardingCtx):
+    """PartitionSpec pytree for a param tree, by leaf-name rules."""
+    def visit(path, leaf):
+        keys = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        return _leaf_spec(keys, leaf.shape, ctx)
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def param_shardings(params, ctx: ShardingCtx):
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(ctx.mesh, spec),
+        param_specs(params, ctx),
+        is_leaf=lambda s: isinstance(s, P))
+
+
+# ---------------------------------------------------------------------------
+# Cache specs (decode)
+# ---------------------------------------------------------------------------
+
+def cache_specs(cache, ctx: ShardingCtx):
+    """Shard KV/state caches: batch over data axes; kv-head axis over model
+    when divisible; else (context parallelism) the cache seq axis."""
+    def visit(path, leaf):
+        keys = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        shape = leaf.shape
+        if re.search(r"(^|/)(k|v)$", keys) and leaf.ndim == 5:
+            # (L, B, T, K, hd): when context_parallel_decode is on the
+            # cache_seq rule claims 'model' first (dim order) and kv heads
+            # replicate; otherwise heads take 'model' when divisible.
+            return ctx.resolve((None, "batch", "cache_seq", "kv_heads", None),
+                               shape)
+        if re.search(r"(k|v)_scale$", keys) and leaf.ndim == 4:
+            # int8-cache scales (L,B,T,K) — §Perf G5
+            return ctx.resolve((None, "batch", "cache_seq", "kv_heads"),
+                               shape)
+        if re.search(r"ckv$|k_rope$", keys) and leaf.ndim == 4:
+            return ctx.resolve((None, "batch", "cache_seq", None), shape)
+        if leaf.ndim >= 2:
+            return ctx.resolve((None, "batch") + (None,) * (leaf.ndim - 2),
+                               shape)
+        return P()
+    return jax.tree_util.tree_map_with_path(visit, cache)

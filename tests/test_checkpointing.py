@@ -1,0 +1,44 @@
+"""Checkpoint save/restore: exactness, dtypes, resume metadata."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpointing import (checkpoint_step, restore_checkpoint,
+                                 save_checkpoint)
+from repro.configs import get_smoke_config
+from repro.models import model as M
+
+
+@pytest.fixture()
+def params():
+    cfg = get_smoke_config("olmo-1b")
+    return cfg, M.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def test_roundtrip_exact(tmp_path, params):
+    cfg, p = params
+    nbytes = save_checkpoint(str(tmp_path), p, step=7)
+    assert nbytes > 0
+    assert checkpoint_step(str(tmp_path)) == 7
+    restored = restore_checkpoint(str(tmp_path), p)
+    flat_a = jax.tree_util.tree_leaves(p)
+    flat_b = jax.tree_util.tree_leaves(restored)
+    assert len(flat_a) == len(flat_b)
+    for a, b in zip(flat_a, flat_b):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_shape_mismatch_rejected(tmp_path, params):
+    cfg, p = params
+    save_checkpoint(str(tmp_path), p)
+    wrong = jax.tree_util.tree_map(
+        lambda a: jnp.zeros(a.shape + (1,), a.dtype), p)
+    with pytest.raises(ValueError, match="shape mismatch"):
+        restore_checkpoint(str(tmp_path), wrong)
+
+
+def test_missing_checkpoint_none(tmp_path):
+    assert checkpoint_step(str(tmp_path)) is None

@@ -1,0 +1,142 @@
+"""Unit tests for the context-management core (recipes, cache, library)."""
+import pytest
+
+from repro.configs import get_config
+from repro.core import (CacheFullError, ContextCache, ContextElement,
+                        ContextRecipe, ContextRegistry, HostState, Library,
+                        Tier, model_context_recipe, partial_context_recipe)
+
+
+def small_recipe(weights=1000, deps=500):
+    return ContextRecipe("f", (
+        ContextElement("deps", nbytes_disk=deps, nbytes_host=50),
+        ContextElement("weights", nbytes_disk=weights,
+                       nbytes_host=2 * weights, nbytes_device=weights),
+    ), activation_s=1.0)
+
+
+class HW:
+    disk_bw = 100.0
+    h2d_bw = 1000.0
+
+    def compile_s(self, recipe):
+        return 5.0
+
+
+class TestRecipe:
+    def test_key_stable_and_content_addressed(self):
+        r1, r2 = small_recipe(), small_recipe()
+        assert r1.key == r2.key
+        assert small_recipe(weights=2000).key != r1.key
+
+    def test_model_recipe_sizes(self):
+        cfg = get_config("smollm2-1.7b")
+        r = model_context_recipe(cfg)
+        w = r.element("weights")
+        # 1.7B bf16 ≈ 3.4-3.7 GB on disk, ~2x in host (paper: 3.7/7.4 GB)
+        assert 3.0e9 < w.nbytes_disk < 4.2e9
+        assert w.nbytes_host == 2 * w.nbytes_disk
+        assert r.element("xla_executable").nbytes_device > 0
+
+    def test_partial_recipe_subset(self):
+        cfg = get_config("smollm2-1.7b")
+        p = partial_context_recipe(cfg)
+        assert {e.name for e in p.elements} == {"deps", "weights"}
+
+
+class TestCache:
+    def test_byte_accounting(self):
+        c = ContextCache(disk_bytes=10_000, host_bytes=5_000,
+                         device_bytes=2_000)
+        r = small_recipe()
+        c.put(r.element("deps"), Tier.HOST)
+        c.put(r.element("weights"), Tier.DEVICE)
+        assert c.used(Tier.DISK) == 1500
+        assert c.used(Tier.HOST) == 50 + 2000
+        assert c.used(Tier.DEVICE) == 1000
+
+    def test_lru_eviction_frees_space(self):
+        c = ContextCache(disk_bytes=2_500, host_bytes=10_000,
+                         device_bytes=10_000)
+        a = ContextElement("a", nbytes_disk=1000)
+        b = ContextElement("b", nbytes_disk=1000)
+        d = ContextElement("d", nbytes_disk=1000)
+        c.put(a, Tier.DISK)
+        c.put(b, Tier.DISK)
+        c.lookup(a.key)              # a now MRU
+        c.put(d, Tier.DISK)          # evicts b (LRU)
+        assert c.tier_of(b.key) is None
+        assert c.tier_of(a.key) is Tier.DISK
+        assert c.evictions == 1
+
+    def test_pinned_never_evicted(self):
+        c = ContextCache(disk_bytes=2_000, host_bytes=10_000,
+                         device_bytes=10_000)
+        a = ContextElement("a", nbytes_disk=1500)
+        c.put(a, Tier.DISK, pinned=True)
+        with pytest.raises(CacheFullError):
+            c.put(ContextElement("b", nbytes_disk=1000), Tier.DISK)
+        assert c.tier_of(a.key) is Tier.DISK
+
+    def test_oversized_element_rejected(self):
+        c = ContextCache(disk_bytes=100, host_bytes=100, device_bytes=100)
+        with pytest.raises(CacheFullError):
+            c.put(ContextElement("x", nbytes_disk=500), Tier.DISK)
+
+
+class TestLibrary:
+    def test_cold_then_warm_cost(self):
+        c = ContextCache(disk_bytes=10**6, host_bytes=10**6,
+                         device_bytes=10**6)
+        lib = Library(small_recipe(), c)
+        cold = lib.materialize_cost(HW(), fetch_bw=50.0)
+        assert cold.fetch_s == pytest.approx(1500 / 50.0)
+        assert cold.load_s == pytest.approx((50 + 2000) / 100.0)
+        assert cold.device_s == pytest.approx(1000 / 1000.0)
+        assert cold.activation_s == 1.0
+        warm = lib.materialize_cost(HW(), already_local=True)
+        assert warm.fetch_s == warm.load_s == warm.device_s == 0.0
+        assert lib.ready
+
+    def test_teardown_then_restage_pays_load_not_fetch(self):
+        c = ContextCache(disk_bytes=10**6, host_bytes=10**6,
+                         device_bytes=10**6)
+        lib = Library(small_recipe(), c)
+        lib.materialize_cost(HW(), fetch_bw=50.0)
+        lib.teardown()
+        # partial-mode teardown: demote to disk
+        for e in lib.recipe.elements:
+            c.put(e, Tier.DISK)
+        relib = Library(lib.recipe, c)
+        cost = relib.materialize_cost(HW())
+        assert cost.fetch_s == 0.0
+        assert cost.load_s > 0.0
+
+    def test_compile_cost_used_for_executable(self):
+        r = small_recipe().with_elements(
+            ContextElement("xla_executable", nbytes_disk=10,
+                           nbytes_device=10))
+        c = ContextCache(disk_bytes=10**6, host_bytes=10**6,
+                         device_bytes=10**6)
+        cost = Library(r, c).materialize_cost(HW(), already_local=True)
+        assert cost.device_s >= 5.0      # HW.compile_s
+
+
+class TestRegistry:
+    def test_lifecycle(self):
+        reg = ContextRegistry()
+        r = small_recipe()
+        key = reg.register(r)
+        reg.mark_staging(key, "w0")
+        assert reg.staging_workers(key) == {"w0"}
+        assert reg.ready_workers(key) == set()
+        reg.mark_ready(key, "w0")
+        assert reg.ready_workers(key) == {"w0"}
+        lost = reg.drop_worker("w0")
+        assert key in lost
+        assert reg.replication(key) == 0
+
+    def test_unregistered_recipe_rejected(self):
+        reg = ContextRegistry()
+        with pytest.raises(AssertionError):
+            reg.mark_staging("nope", "w0")

@@ -1,0 +1,141 @@
+"""Hypothesis property tests on the system's invariants."""
+import math
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ContextCache, ContextElement, Peer, Tier,
+                        CacheFullError, plan_spanning_tree,
+                        expected_task_time, eviction_loss, PERVASIVE,
+                        PARTIAL, NAIVE)
+
+
+# ---------------------------------------------------------------------------
+# Cache invariants
+# ---------------------------------------------------------------------------
+
+ops = st.lists(
+    st.tuples(st.integers(0, 9),                     # element id
+              st.sampled_from(list(Tier)),           # target tier
+              st.booleans()),                        # pinned
+    min_size=1, max_size=40)
+
+
+@given(ops)
+@settings(max_examples=200, deadline=None)
+def test_cache_capacity_never_exceeded(op_list):
+    cap = dict(disk_bytes=5_000, host_bytes=3_000, device_bytes=1_500)
+    c = ContextCache(**cap)
+    elements = {i: ContextElement(f"e{i}", nbytes_disk=(i + 1) * 100,
+                                  nbytes_host=(i + 1) * 150,
+                                  nbytes_device=(i + 1) * 50 if i % 2 else 0)
+                for i in range(10)}
+    for i, tier, pinned in op_list:
+        try:
+            c.put(elements[i], tier, pinned=pinned)
+        except CacheFullError:
+            pass
+        for t, limit in zip(Tier, (cap["disk_bytes"], cap["host_bytes"],
+                                   cap["device_bytes"])):
+            assert c.used(t) <= limit, f"{t} over capacity"
+
+
+@given(ops)
+@settings(max_examples=100, deadline=None)
+def test_cache_used_equals_sum_of_entries(op_list):
+    c = ContextCache(disk_bytes=10_000, host_bytes=8_000, device_bytes=4_000)
+    elements = {i: ContextElement(f"e{i}", nbytes_disk=(i + 1) * 100,
+                                  nbytes_host=(i + 1) * 120,
+                                  nbytes_device=(i + 1) * 60 if i % 2 else 0)
+                for i in range(10)}
+    resident = {}
+    for i, tier, pinned in op_list:
+        try:
+            c.put(elements[i], tier, pinned=pinned)
+        except CacheFullError:
+            continue
+        resident[elements[i].key] = (elements[i], tier)
+        # drop anything the cache evicted
+        resident = {k: v for k, v in resident.items() if k in c.keys()}
+        # entries may have been demoted — re-read tiers from the cache
+        for t in Tier:
+            expect = sum(e.nbytes(t) for k, (e, _) in resident.items()
+                         if t.order <= c.tier_of(k).order)
+            assert c.used(t) == expect
+
+
+# ---------------------------------------------------------------------------
+# Spanning-tree transfer invariants
+# ---------------------------------------------------------------------------
+
+peers = st.lists(st.tuples(st.integers(0, 3)), min_size=1, max_size=24)
+
+
+@given(n_targets=st.integers(1, 24), n_zones=st.integers(1, 4),
+       fanout=st.integers(1, 5), nbytes=st.integers(1, 10**9))
+@settings(max_examples=150, deadline=None)
+def test_spanning_tree_properties(n_targets, n_zones, fanout, nbytes):
+    src = Peer("src", zone="z0")
+    targets = [Peer(f"t{i}", zone=f"z{i % n_zones}")
+               for i in range(n_targets)]
+    plan = plan_spanning_tree(nbytes, [src], targets, fanout_cap=fanout)
+    # every target receives exactly once
+    dsts = [e.dst for e in plan.edges]
+    assert sorted(dsts) == sorted(t.worker_id for t in targets)
+    # a node only sends after it has received
+    recv_time = {"src": 0.0}
+    for e in sorted(plan.edges, key=lambda e: e.start_s):
+        assert e.src in recv_time, "sender had not received the context"
+        assert e.start_s >= recv_time[e.src] - 1e-9
+        recv_time[e.dst] = e.end_s
+    # topology-aware: at most one cross-zone edge per zone needing seeding
+    zones_without_source = {t.zone for t in targets} - {"z0"}
+    assert plan.cross_zone_edges <= max(len(zones_without_source), 0) + 1
+    # makespan grows at most logarithmically-ish: bounded by serial chain
+    per_edge = nbytes / Peer("x").bw_cross
+    assert plan.makespan_s <= (n_targets + n_zones) * per_edge + 1e-6
+
+
+@given(st.integers(1, 40), st.integers(1, 4))
+@settings(max_examples=50, deadline=None)
+def test_spanning_tree_beats_star_for_many_targets(n, fanout):
+    """Tree makespan ≤ single-source star topology (the scheduler-push
+    baseline the paper's peer transfer replaces)."""
+    src = Peer("src", zone="z0")
+    targets = [Peer(f"t{i}", zone="z0") for i in range(n)]
+    nbytes = 10**9
+    tree = plan_spanning_tree(nbytes, [src], targets, fanout_cap=fanout)
+    star_makespan = n * nbytes / src.bw_local / fanout
+    assert tree.makespan_s <= star_makespan + nbytes / src.bw_local + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Policy model properties
+# ---------------------------------------------------------------------------
+
+@given(batch=st.integers(1, 10_000), infer=st.floats(0.01, 2.0),
+       init=st.floats(1.0, 300.0))
+@settings(max_examples=100, deadline=None)
+def test_mode_ordering(batch, infer, init):
+    """pervasive ≤ partial ≤ naive for any warm task."""
+    t_perv = expected_task_time(batch, infer_s=infer, init_s=init,
+                                mode=PERVASIVE, warm=True)
+    t_part = expected_task_time(batch, infer_s=infer, init_s=init,
+                                mode=PARTIAL, warm=True)
+    t_naive = expected_task_time(batch, infer_s=infer, init_s=init,
+                                 mode=NAIVE, warm=True)
+    assert t_perv <= t_part <= t_naive
+    # cold start is identical-ish across modes (everyone stages once)
+    c_perv = expected_task_time(batch, infer_s=infer, init_s=init,
+                                mode=PERVASIVE, warm=False)
+    assert c_perv >= t_perv
+
+
+@given(b1=st.integers(1, 5_000), b2=st.integers(1, 5_000),
+       rate=st.floats(1e-5, 1e-2))
+@settings(max_examples=100, deadline=None)
+def test_eviction_loss_monotone_in_batch(b1, b2, rate):
+    lo, hi = sorted((b1, b2))
+    l_lo = eviction_loss(lo, infer_s=0.3, evict_rate_per_s=rate)
+    l_hi = eviction_loss(hi, infer_s=0.3, evict_rate_per_s=rate)
+    assert l_lo <= l_hi + 1e-9
+    assert 0 <= l_lo <= lo and 0 <= l_hi <= hi

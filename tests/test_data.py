@@ -1,0 +1,93 @@
+"""Data substrate tests: tokenizer round-trip, claims determinism, prompts."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.data import (ByteTokenizer, LABELS, TokenStream, claim_batches,
+                        generate_claims, parse_verdict, TEMPLATES)
+
+
+class TestTokenizer:
+    @given(st.text(alphabet=st.characters(codec="utf-8",
+                                          exclude_characters="\x00"),
+                   max_size=200))
+    @settings(max_examples=200, deadline=None)
+    def test_roundtrip(self, text):
+        tok = ByteTokenizer(512)
+        normalized = " ".join(text.split())
+        assert tok.decode(tok.encode(text)) == normalized
+
+    def test_word_merges_used(self):
+        tok = ByteTokenizer(512)
+        ids = tok.encode("the claim is true", bos=False)
+        # 4 common words + 3 spaces = 7 ids, far fewer than bytes
+        assert len(ids) == 7
+
+    def test_ids_in_vocab(self):
+        tok = ByteTokenizer(300)
+        ids = tok.encode("hello δοκιμή world")
+        assert all(0 <= i < 300 for i in ids)
+
+    def test_encode_batch_pads(self):
+        tok = ByteTokenizer(512)
+        out = tok.encode_batch(["a", "much longer text here"], 16)
+        assert out.shape == (2, 16) and out.dtype == np.int32
+
+
+class TestClaims:
+    def test_deterministic(self):
+        a = generate_claims(100, seed=3)
+        b = generate_claims(100, seed=3)
+        assert [c.text for c in a] == [c.text for c in b]
+        assert [c.text for c in generate_claims(100, seed=4)] != \
+            [c.text for c in a]
+
+    def test_label_mix(self):
+        claims = generate_claims(3000, seed=0)
+        counts = {lbl: sum(c.label == lbl for c in claims)
+                  for lbl in LABELS}
+        for lbl, n in counts.items():
+            assert n > 500, f"{lbl} underrepresented: {counts}"
+
+    def test_supported_claims_match_evidence(self):
+        for c in generate_claims(500, seed=1):
+            if c.label == "SUPPORTED" and c.text:
+                assert c.text == c.evidence
+            if c.label == "REFUTED":
+                assert c.text != c.evidence
+
+    def test_empty_control_group(self):
+        claims = generate_claims(5000, seed=0, empty_fraction=0.01)
+        empties = [c for c in claims if not c.text]
+        assert empties and all(c.label == "NOT ENOUGH INFO" for c in empties)
+
+    def test_batching_covers_all(self):
+        claims = generate_claims(103, seed=0)
+        batches = claim_batches(claims, 10)
+        assert sum(len(b) for b in batches) == 103
+        assert len(batches) == 11
+
+
+class TestPrompts:
+    def test_all_templates_render(self):
+        c = generate_claims(1, seed=0)[0]
+        for t in TEMPLATES.values():
+            s = t.render(c)
+            assert isinstance(s, str) and "answer" in s
+
+    def test_parse_verdict_first_match(self):
+        assert parse_verdict("supported yes") == "SUPPORTED"
+        assert parse_verdict("it is refuted clearly") == "REFUTED"
+        assert parse_verdict("not enough info to tell") == "NOT ENOUGH INFO"
+        assert parse_verdict("gibberish") == "NOT ENOUGH INFO"
+        assert parse_verdict("refuted but maybe supported") == "REFUTED"
+
+
+class TestTokenStream:
+    def test_shapes_and_determinism(self):
+        tok = ByteTokenizer(512)
+        s1 = iter(TokenStream(tok, batch=4, seq_len=64, seed=5))
+        s2 = iter(TokenStream(tok, batch=4, seq_len=64, seed=5))
+        b1, b2 = next(s1), next(s2)
+        assert b1["tokens"].shape == (4, 64)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+        assert not np.array_equal(next(s1)["tokens"], b1["tokens"])

@@ -1,0 +1,157 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.decode_attention.decode_attention import decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.ssm_scan.ssm_scan import ssm_scan_pallas
+from repro.kernels.ssm_scan.ref import ssm_scan_ref, ssm_step_ref
+
+
+def _qkv(key, B, S, T, H, K, hd, dtype):
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, S, H, hd), dtype)
+    k = jax.random.normal(kk, (B, T, K, hd), dtype)
+    v = jax.random.normal(kv, (B, T, K, hd), dtype)
+    return q, k, v
+
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=3e-2, atol=3e-2)}
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("B,S,T,H,K,hd", [
+        (1, 128, 128, 4, 4, 64),       # MHA square
+        (2, 128, 128, 8, 2, 64),       # GQA 4:1
+        (1, 256, 256, 4, 1, 128),      # MQA, MXU-aligned head
+        (1, 128, 256, 4, 2, 64),       # cross-length (cache longer)
+    ])
+    def test_sweep_vs_ref(self, dtype, B, S, T, H, K, hd):
+        q, k, v = _qkv(jax.random.PRNGKey(0), B, S, T, H, K, hd, dtype)
+        out = flash_attention_pallas(q, k, v, causal=True, interpret=True)
+        ref = flash_attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   **TOL[dtype])
+
+    @pytest.mark.parametrize("window", [128, 256])
+    def test_sliding_window(self, window):
+        q, k, v = _qkv(jax.random.PRNGKey(1), 1, 384, 384, 4, 4, 64,
+                       jnp.float32)
+        out = flash_attention_pallas(q, k, v, causal=True, window=window,
+                                     interpret=True)
+        ref = flash_attention_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_softcap(self):
+        q, k, v = _qkv(jax.random.PRNGKey(2), 1, 128, 128, 2, 2, 64,
+                       jnp.float32)
+        out = flash_attention_pallas(q, k, v, causal=True, softcap=30.0,
+                                     interpret=True)
+        ref = flash_attention_ref(q, k, v, causal=True, softcap=30.0)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_non_causal(self):
+        q, k, v = _qkv(jax.random.PRNGKey(3), 1, 128, 128, 2, 2, 64,
+                       jnp.float32)
+        out = flash_attention_pallas(q, k, v, causal=False, interpret=True)
+        ref = flash_attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_dispatch_unaligned_falls_back(self):
+        # odd lengths route to the reference path and still agree with it
+        q, k, v = _qkv(jax.random.PRNGKey(4), 1, 100, 100, 2, 2, 64,
+                       jnp.float32)
+        out = flash_attention(q, k, v, causal=True)
+        ref = flash_attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-6, atol=1e-6)
+
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("B,T,H,K,hd", [
+        (1, 256, 4, 4, 64),
+        (2, 256, 8, 2, 64),
+        (1, 512, 16, 2, 128),
+    ])
+    def test_sweep_vs_ref(self, dtype, B, T, H, K, hd):
+        q, k, v = _qkv(jax.random.PRNGKey(5), B, 1, T, H, K, hd, dtype)
+        for n_valid in (T // 4, T):
+            nv = jnp.asarray(n_valid, jnp.int32)
+            out = decode_attention_pallas(q, k, v, nv, interpret=True)
+            ref = decode_attention_ref(q, k, v, nv)
+            np.testing.assert_allclose(np.asarray(out, np.float32),
+                                       np.asarray(ref, np.float32),
+                                       **TOL[dtype])
+
+    def test_matches_flash_on_full_prefix(self):
+        """decode(q_last) == flash(q_full)[:, -1] when the cache holds the
+        same prefix — the consistency the serving path relies on."""
+        B, S, H, K, hd = 1, 128, 4, 2, 64
+        q, k, v = _qkv(jax.random.PRNGKey(6), B, S, S, H, K, hd, jnp.float32)
+        full = flash_attention_ref(q, k, v, causal=True)
+        one = decode_attention_ref(q[:, -1:], k, v,
+                                   jnp.asarray(S, jnp.int32))
+        np.testing.assert_allclose(np.asarray(one[:, 0]),
+                                   np.asarray(full[:, -1]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestSSMScan:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("Bt,L,DI,N,chunk", [
+        (1, 128, 64, 8, 32),
+        (2, 256, 128, 16, 64),
+        (1, 64, 256, 16, 64),
+    ])
+    def test_sweep_vs_ref(self, dtype, Bt, L, DI, N, chunk):
+        key = jax.random.PRNGKey(7)
+        ks = jax.random.split(key, 5)
+        x = jax.random.normal(ks[0], (Bt, L, DI), dtype)
+        dt = jax.random.normal(ks[1], (Bt, L, DI), dtype) * 0.1
+        A = -jnp.abs(jax.random.normal(ks[2], (DI, N), jnp.float32)) - 0.1
+        B = jax.random.normal(ks[3], (Bt, L, N), dtype)
+        C = jax.random.normal(ks[4], (Bt, L, N), dtype)
+        D = jnp.ones((DI,), jnp.float32) * 0.5
+        y, h = ssm_scan_pallas(x, dt, A, B, C, D, chunk=chunk,
+                               interpret=True)
+        y_ref, h_ref = ssm_scan_ref(x, dt, A, B, C, D)
+        np.testing.assert_allclose(np.asarray(y, np.float32),
+                                   np.asarray(y_ref, np.float32),
+                                   **TOL[dtype])
+        np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_scan_equals_stepwise(self):
+        """Chunked scan == token-by-token recurrence (decode consistency)."""
+        Bt, L, DI, N = 1, 32, 16, 8
+        ks = jax.random.split(jax.random.PRNGKey(8), 5)
+        x = jax.random.normal(ks[0], (Bt, L, DI), jnp.float32)
+        dt = jax.random.normal(ks[1], (Bt, L, DI), jnp.float32) * 0.1
+        A = -jnp.abs(jax.random.normal(ks[2], (DI, N), jnp.float32)) - 0.1
+        B = jax.random.normal(ks[3], (Bt, L, N), jnp.float32)
+        C = jax.random.normal(ks[4], (Bt, L, N), jnp.float32)
+        D = jnp.ones((DI,), jnp.float32)
+        y_scan, h_scan = ssm_scan_ref(x, dt, A, B, C, D)
+        h = jnp.zeros((Bt, DI, N), jnp.float32)
+        ys = []
+        for t in range(L):
+            y_t, h = ssm_step_ref(x[:, t], dt[:, t], A, B[:, t], C[:, t],
+                                  D, h)
+            ys.append(y_t)
+        y_step = jnp.stack(ys, axis=1)
+        np.testing.assert_allclose(np.asarray(y_scan), np.asarray(y_step),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(h_scan), np.asarray(h),
+                                   rtol=1e-5, atol=1e-5)

@@ -1,0 +1,98 @@
+"""MoE dispatch-mode equivalence: dense_onehot == sort_scatter == a2a.
+
+The three dispatch modes are different *distribution* strategies for the
+same mathematical operator; with a dropless capacity factor they must
+agree to float tolerance.  a2a needs a multi-device mesh — tested in a
+subprocess with 8 placeholder devices (same mechanism as the dry-run).
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import moe as moe_mod
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _setup(arch="phi3.5-moe-42b-a6.6b", cf=8.0, dtype=jnp.float32):
+    cfg = get_smoke_config(arch)
+    cfg = cfg.with_(moe=dataclasses.replace(cfg.moe, capacity_factor=cf))
+    p = moe_mod.moe_init(jax.random.PRNGKey(0), cfg, dtype)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model), dtype)
+    return cfg, p, x
+
+
+class TestDispatchEquivalence:
+    def test_dense_onehot_equals_sort_scatter(self):
+        cfg, p, x = _setup()
+        y1, aux1 = moe_mod.moe_apply_dense_onehot(p, cfg, x)
+        y2, aux2 = moe_mod.moe_apply_sort_scatter(p, cfg, x)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=1e-5, atol=1e-5)
+        assert float(aux1) == pytest.approx(float(aux2), rel=1e-5)
+
+    def test_shared_experts_added(self):
+        cfg, p, x = _setup("deepseek-v3-671b")
+        assert cfg.moe.n_shared_experts >= 1
+        y, _ = moe_mod.moe_apply_sort_scatter(p, cfg, x)
+        y_shared = moe_mod._shared_ffn(p, x)
+        assert float(jnp.abs(y_shared).max()) > 0
+        # shared expert contributes: zeroing it changes the output
+        p2 = dict(p, ws1=jnp.zeros_like(p["ws1"]))
+        y2, _ = moe_mod.moe_apply_sort_scatter(p2, cfg, x)
+        assert float(jnp.abs(y - y2).max()) > 0
+
+    def test_capacity_drops_tokens(self):
+        """Tiny capacity: outputs differ from dropless (tokens dropped)."""
+        cfg, p, x = _setup(cf=8.0)
+        cfg_tight = cfg.with_(moe=dataclasses.replace(cfg.moe,
+                                                      capacity_factor=0.25))
+        y_free, _ = moe_mod.moe_apply_sort_scatter(p, cfg, x)
+        y_tight, _ = moe_mod.moe_apply_sort_scatter(p, cfg_tight, x)
+        assert float(jnp.abs(y_free - y_tight).max()) > 1e-3
+
+    def test_a2a_equals_sort_scatter_multidevice(self):
+        code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
+import jax, jax.numpy as jnp
+from repro.configs import get_smoke_config
+from repro.models import moe as moe_mod
+from repro.sharding import sharding_ctx
+cfg = get_smoke_config('deepseek-v3-671b')
+cfg = cfg.with_(moe=dataclasses.replace(cfg.moe, capacity_factor=8.0,
+                                        dispatch='a2a'))
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+p = moe_mod.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model),
+                      jnp.float32)
+y_ref, _ = moe_mod.moe_apply_sort_scatter(p, cfg, x)
+for seq in (True, False):
+    c = cfg.with_(parallel=dataclasses.replace(cfg.parallel,
+                                               seq_parallel=seq))
+    with sharding_ctx(mesh, c):
+        y, _ = jax.jit(lambda p, x: moe_mod.moe_apply(p, c, x))(p, x)
+    d = float(jnp.abs(y_ref - y).max())
+    assert d < 1e-5, (seq, d)
+    # grads flow through the a2a path
+    with sharding_ctx(mesh, c):
+        g = jax.jit(jax.grad(lambda p, x: moe_mod.moe_apply(
+            p, c, x)[0].sum()))(p, x)
+    assert all(float(jnp.abs(v).max()) > 0 for k, v in g.items()
+               if k.startswith("we"))
+print("A2A_OK")
+"""
+        env = dict(os.environ, PYTHONPATH=SRC)
+        out = subprocess.run([sys.executable, "-c", code],
+                             capture_output=True, text=True, env=env,
+                             timeout=560)
+        assert out.returncode == 0, out.stderr[-3000:]
+        assert "A2A_OK" in out.stdout

@@ -1,0 +1,85 @@
+"""Unit tests for the HLO roofline parsers (no compilation needed)."""
+from repro.launch import dryrun as dr
+
+
+SYNTH = """\
+HloModule jit_step
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%inner_body (p: (s32[], bf16[8,128])) -> (s32[], bf16[8,128]) {
+  %ag = bf16[8,128]{1,0} all-gather(%x), replica_groups={}
+  ROOT %t = (s32[], bf16[8,128]) tuple(%i, %ag)
+}
+
+%outer_body (p: (s32[], bf16[8,128])) -> (s32[], bf16[8,128]) {
+  %ar = f32[16,16]{1,0} all-reduce(%y), to_apply=%add
+  %w2 = (s32[], bf16[8,128]) while(%p), condition=%cond2, body=%inner_body, backend_config={"known_trip_count":{"n":"3"}}
+  ROOT %t2 = (s32[], bf16[8,128]) tuple(%i2, %gte)
+}
+
+ENTRY %main (a: bf16[4,4]) -> bf16[4,4] {
+  %a2a = bf16[32,64]{1,0} all-to-all(%a), dimensions={0}
+  %w = (s32[], bf16[8,128]) while(%init), condition=%cond, body=%outer_body, backend_config={"known_trip_count":{"n":"5"}}
+  ROOT %out = bf16[4,4] copy(%a)
+}
+"""
+
+
+class TestShapeBytes:
+    def test_simple(self):
+        assert dr._shape_bytes("bf16[8,128]{1,0}") == 8 * 128 * 2
+        assert dr._shape_bytes("f32[16,16]") == 16 * 16 * 4
+
+    def test_tuple(self):
+        s = "(f32[2,3]{1,0}, bf16[4]{0})"
+        assert dr._shape_bytes(s) == 2 * 3 * 4 + 4 * 2
+
+    def test_scalar_and_unknown(self):
+        assert dr._shape_bytes("f32[]") == 4     # scalar = one element
+        assert dr._shape_bytes("token[]") == 0   # non-numeric dtype skipped
+
+
+class TestCollectiveParsing:
+    def test_flat_counts(self):
+        out = dr.collective_bytes(SYNTH)
+        assert out["all-to-all"] == 32 * 64 * 2
+        assert out["all-gather"] == 8 * 128 * 2
+        assert out["all-reduce"] == 16 * 16 * 4
+
+    def test_computation_split(self):
+        comps = dr._computations(SYNTH)
+        assert "__entry__" in comps
+        assert "inner_body" in comps and "outer_body" in comps
+        assert "all-gather" in comps["inner_body"]
+        assert "all-gather" not in comps["outer_body"]
+
+    def test_trip_scaling_nested(self):
+        out = dr.collective_bytes_scaled(SYNTH)
+        # entry: a2a once; outer while x5 { ar once + inner while x3 {ag} }
+        assert out["all-to-all"] == 32 * 64 * 2
+        assert out["all-reduce"] == 5 * 16 * 16 * 4
+        assert out["all-gather"] == 5 * 3 * 8 * 128 * 2
+
+
+class TestModelFlops:
+    def test_kinds(self):
+        from repro.configs import get_config, INPUT_SHAPES
+        cfg = get_config("olmo-1b")
+        n = cfg.n_active_params()
+        t = INPUT_SHAPES["train_4k"]
+        assert dr.model_flops(cfg, t) == 6.0 * n * t.global_batch * t.seq_len
+        d = INPUT_SHAPES["decode_32k"]
+        assert dr.model_flops(cfg, d) == 2.0 * n * d.global_batch
+
+
+def test_baseline_variant_reverts_optimizations():
+    from repro.configs import get_config
+    ds = dr.baseline_variant(get_config("deepseek-v3-671b"))
+    assert ds.moe.dispatch == "sort_scatter"
+    assert ds.parallel.seq_parallel
+    assert not ds.parallel.context_parallel_decode
+    phi = dr.baseline_variant(get_config("phi3.5-moe-42b-a6.6b"))
+    assert phi.moe.dispatch == "dense_onehot"
