@@ -4,12 +4,16 @@
 model behind the paper's batch-sizing discussion; here we validate it
 against the simulator: the batch the model picks must be within 15 % of
 the empirically best batch's makespan, for both context modes.
+
+``main_mixed`` stresses the policy on a TWO-recipe pool (the backfill
+scheduler's target workload): each recipe gets its own policy-picked
+batch, and the run must beat the same sweep under the seed FIFO router.
 """
 from __future__ import annotations
 
-from repro.core import PARTIAL, PERVASIVE, optimal_batch_size
+from repro.core import PARTIAL, PERVASIVE, WarmPoolPolicy, optimal_batch_size
 
-from .common import Report, run_experiment
+from .common import Report, run_experiment, run_mixed_experiment
 
 CANDIDATES = (1, 100, 1000, 3000, 7500)
 
@@ -38,5 +42,35 @@ def main(n_total: int = 150_000):
     print("batch policy validated")
 
 
+def main_mixed(n_small: int = 15_000, n_big: int = 4_000):
+    """Per-recipe policy batches on a mixed pool, backfill vs seed FIFO."""
+    # 10 A10s can host the big recipe, all 20 the small one
+    b_small = optimal_batch_size(n_small, 20, infer_s=0.27, init_s=55.0,
+                                 mode=PERVASIVE, slowdown_max=0.675 / 0.27,
+                                 candidates=CANDIDATES)
+    b_big = optimal_batch_size(n_big, 10, infer_s=0.27 * 8.0 / 1.71,
+                               init_s=90.0, mode=PERVASIVE,
+                               slowdown_max=1.0, candidates=CANDIDATES)
+    sweeps = [("big", n_big, b_big), ("small", n_small, b_small)]
+    res = {}
+    for exp, backfill, pool in [("fifo", False, None),
+                                ("backfill", True, None),
+                                ("backfill+warm", True,
+                                 WarmPoolPolicy(tasks_per_replica=4))]:
+        res[exp] = run_mixed_experiment(exp, sweeps=sweeps,
+                                        backfill=backfill, warm_pool=pool)
+    rep = Report("Batch policy on a mixed two-recipe pool",
+                 ["exp", "batch_small", "batch_big", "makespan_s",
+                  "completed", "warm_tasks"])
+    for exp, r in res.items():
+        rep.add(exp, b_small, b_big, f"{r.makespan_s:.0f}", r.completed,
+                sum(1 for rec in r.records if rec.warm))
+    rep.print()
+    assert all(r.completed == n_small + n_big for r in res.values())
+    assert res["backfill"].makespan_s < res["fifo"].makespan_s
+    print("mixed-recipe policy batches validated")
+
+
 if __name__ == "__main__":
     main()
+    main_mixed()

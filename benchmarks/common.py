@@ -3,10 +3,11 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.configs import get_config
-from repro.core import (ContextMode, MODES, NAIVE, PARTIAL, PERVASIVE,
+from repro.core import (ContextElement, ContextMode, ContextRecipe, MODES,
+                        NAIVE, PARTIAL, PERVASIVE, WorkerShape,
                         model_context_recipe)
 from repro.cluster import make_sim, opportunistic_supply, GPU_CATALOG
 
@@ -14,6 +15,26 @@ CFG = get_config("smollm2-1.7b")
 RECIPE = model_context_recipe(CFG, include_compile=False)
 ACTIVE_PARAMS = CFG.n_active_params()
 N_INFERENCES = 150_000        # the paper's 150k FEVER claims
+
+# -- mixed-recipe scenario assets (backfill/spill benchmarks) ---------------
+# An 8B-class recipe: its 16 GB device copy fits the 24 GB A10s but not the
+# 12 GB TITAN Xs, so a queue headed by a big task head-of-line-blocks a
+# FIFO scheduler while half the pool idles.
+BIG_RECIPE = ContextRecipe("infer::big-8b", (
+    ContextElement("deps", nbytes_disk=3_700_000_000,
+                   nbytes_host=512_000_000, version="conda-308pkg"),
+    ContextElement("code", nbytes_disk=65_536, version="big-8b"),
+    ContextElement("weights", nbytes_disk=16_000_000_000,
+                   nbytes_host=32_000_000_000,
+                   nbytes_device=16_000_000_000, version="big-8b"),
+), activation_s=2.0)
+BIG_AP = 8.0e9
+# Fits either recipe alone, not both host-resident — switching spills.
+MIXED_SHAPE = WorkerShape(cores=2, memory_gb=36, disk_gb=70, gpus=1)
+MIXED_RECIPES: Dict[str, Tuple[ContextRecipe, float]] = {
+    "small": (RECIPE, ACTIVE_PARAMS),
+    "big": (BIG_RECIPE, BIG_AP),
+}
 
 
 @dataclass
@@ -36,6 +57,29 @@ def run_experiment(exp_id: str, *, mode: ContextMode, batch: int,
     key = sched.register_context(RECIPE)
     sched.submit_sweep(key, n_total, batch, mode,
                        active_params=ACTIVE_PARAMS)
+    if trace is None:
+        fac.reconcile(n_workers)
+    ex.pump()
+    ex.loop.run(until=until, stop=lambda: sched.done)
+    return ExpResult(exp_id, sched.makespan(), sched.avg_connected_workers(),
+                     sched.completed_inferences, sched.evicted_inferences,
+                     sched.records, sched)
+
+
+def run_mixed_experiment(exp_id: str, *,
+                         sweeps: Sequence[Tuple[str, int, int]],
+                         n_workers: int = 20, backfill: bool = True,
+                         warm_pool=None, devices=None, trace=None,
+                         until: Optional[float] = None) -> ExpResult:
+    """Multi-recipe sweep on one pool.  ``sweeps`` is a list of
+    (recipe name from MIXED_RECIPES, n_inferences, batch)."""
+    sched, ex, fac = make_sim(devices=devices, trace=trace,
+                              worker_shape=MIXED_SHAPE, backfill=backfill,
+                              warm_pool=warm_pool)
+    for name, n_total, batch in sweeps:
+        recipe, ap = MIXED_RECIPES[name]
+        key = sched.register_context(recipe)
+        sched.submit_sweep(key, n_total, batch, PERVASIVE, active_params=ap)
     if trace is None:
         fac.reconcile(n_workers)
     ex.pump()

@@ -30,9 +30,11 @@ def main(argv=None) -> int:
     bench_fig5_table2_task_times.main(n_total)
     res6 = bench_fig6_busy_cluster.run_pair(150_000)
     bench_fig6_busy_cluster.main(res=res6)
+    bench_fig6_busy_cluster.main_mixed()
     bench_fig7_resilience.main(n_total)
     bench_claims.main(res=res4, drain=res6)
     bench_batch_policy.main(n_total)
+    bench_batch_policy.main_mixed()
     bench_roofline.main()
     print(f"\nall benchmarks done in {time.time()-t0:.1f}s")
     return 0

@@ -14,7 +14,8 @@ from __future__ import annotations
 import time
 from typing import Any, Callable, Dict, Optional
 
-from ..core import ContextMode, NAIVE, PARTIAL, PERVASIVE, Tier
+from ..core import (ContextMode, NAIVE, PARTIAL, PERVASIVE, Tier,
+                    WarmPoolPolicy)
 from .events import EventLoop
 from .hardware import ClusterSpec
 from .scheduler import Assignment, Scheduler
@@ -27,15 +28,21 @@ class SimExecutor:
     (paper §5.3.1): when workers join and a context already has ready
     hosts, the scheduler plans a fanout-capped tree over the joiners and
     stages them immediately, instead of lazily on first task dispatch.
+
+    ``warm_pool`` plugs in a :class:`~repro.core.WarmPoolPolicy`: after
+    each dispatch round, hot recipes are replicated onto leftover idle
+    capable workers ahead of demand, so the sweep's next tasks route warm.
     """
 
     def __init__(self, scheduler: Scheduler, loop: Optional[EventLoop] = None,
-                 *, prestage: bool = False, fanout_cap: int = 3):
+                 *, prestage: bool = False, fanout_cap: int = 3,
+                 warm_pool: Optional[WarmPoolPolicy] = None):
         self.sched = scheduler
         self.loop = loop or EventLoop()
         self.cluster: ClusterSpec = scheduler.cluster
         self.prestage_enabled = prestage
         self.fanout_cap = fanout_cap
+        self.warm_pool = warm_pool
         self._manager_free = 0.0
         self._fs_streams = 0
         self._peer_streams: Dict[str, int] = {}   # outbound per source
@@ -57,7 +64,8 @@ class SimExecutor:
         sources = [mk(self.sched.workers[wid]) for wid in ready
                    if wid in self.sched.workers]
         targets = [mk(w) for w in self.sched.workers.values()
-                   if w.worker_id not in have and w.idle]
+                   if w.worker_id not in have and w.idle
+                   and w.can_host(recipe)]
         if not targets or not sources:
             return 0
         plan = plan_spanning_tree(recipe.transfer_bytes, sources, targets,
@@ -74,6 +82,9 @@ class SimExecutor:
                 w = self.sched.workers.get(wid)
                 if w is None:
                     return                      # evicted while in flight
+                for k in w.make_room(recipe):
+                    reg.mark_spilled(k, wid)
+                    self.sched.spilled_libraries += 1
                 lib = w.library_for(recipe)
                 cost = lib.materialize_cost(w.device, already_local=False,
                                             fetch_bw=float("inf"))
@@ -91,6 +102,56 @@ class SimExecutor:
             self.loop.at(edge.end_s, arrive)
         return len(targets)
 
+    # -- warm-pool replication (demand-driven, beyond prestage) ------------
+    def _apply_warm_pool(self) -> int:
+        """Stage hot recipes onto leftover idle workers per the policy."""
+        if self.warm_pool is None:
+            return 0
+        plan = self.warm_pool.plan(self.sched)
+        for key, wid in plan:
+            self._stage_replica(key, wid)
+        return len(plan)
+
+    def _stage_replica(self, recipe_key: str, wid: str) -> None:
+        w = self.sched.workers.get(wid)
+        if w is None or not w.idle:
+            return
+        reg = self.sched.registry
+        recipe = reg.recipes[recipe_key]
+        for k in w.make_room(recipe):
+            reg.mark_spilled(k, wid)
+            self.sched.spilled_libraries += 1
+        w.staging = True
+        reg.mark_staging(recipe_key, wid)
+        lib = w.library_for(recipe)
+        src = None
+        if w.has_local(recipe):
+            fetch_bw = None                     # promotion only, no fetch
+        else:
+            src, cross = self.sched._pick_peer(recipe_key, w)
+            if src is not None:
+                base = (self.cluster.peer_bw_cross if cross
+                        else self.cluster.peer_bw_local)
+                fetch_bw = base / (self._peer_streams.get(src, 0) + 1)
+            else:
+                fetch_bw = self._fs_bw()
+        cost = lib.materialize_cost(w.device, fetch_bw=fetch_bw)
+        if cost.fetch_s > 0:
+            if src is not None:
+                self._take_peer_stream(src, cost.fetch_s)
+            else:
+                self._with_fs_stream(cost.fetch_s)
+
+        def ready_cb(wid=wid):
+            w = self.sched.workers.get(wid)
+            if w is None:
+                return                          # evicted while staging
+            w.staging = False
+            reg.mark_ready(recipe_key, wid)
+            self.pump()
+
+        self.loop.after(cost.total_s, ready_cb)
+
     # -- shared-filesystem contention (Challenge #5) -----------------------
     def _fs_bw(self) -> float:
         c = self.cluster
@@ -103,6 +164,12 @@ class SimExecutor:
 
     def _end_fs_stream(self) -> None:
         self._fs_streams = max(0, self._fs_streams - 1)
+
+    def _take_peer_stream(self, src: str, duration: float) -> None:
+        """Occupy one outbound stream on ``src``'s NIC for ``duration``."""
+        self._peer_streams[src] = self._peer_streams.get(src, 0) + 1
+        self.loop.after(duration, lambda: self._peer_streams.__setitem__(
+            src, max(0, self._peer_streams.get(src, 1) - 1)))
 
     # -- staging time model -------------------------------------------------
     def _staging_cost(self, a: Assignment) -> float:
@@ -135,11 +202,7 @@ class SimExecutor:
         cost = lib.materialize_cost(w.device, fetch_bw=fetch_bw)
         if cost.fetch_s > 0:
             if a.peer_source is not None:
-                src = a.peer_source
-                self._peer_streams[src] = self._peer_streams.get(src, 0) + 1
-                self.loop.after(cost.fetch_s, lambda s=src: (
-                    self._peer_streams.__setitem__(
-                        s, max(0, self._peer_streams.get(s, 1) - 1))))
+                self._take_peer_stream(a.peer_source, cost.fetch_s)
             else:
                 self._with_fs_stream(cost.fetch_s)
         return cost.total_s
@@ -154,21 +217,26 @@ class SimExecutor:
         if lib is not None:
             lib.teardown()
         if task.mode is PARTIAL:
-            # sandbox destroyed but registered disk artefacts survive
+            # sandbox destroyed but registered disk artefacts survive;
+            # elements still pinned by a co-resident library stay put
             for e in recipe.elements:
-                if w.cache.tier_of(e.key) is not None:
-                    w.cache.put(e, Tier.DISK)
+                if w.cache.tier_of(e.key) is not None \
+                        and w.cache.pins(e.key) == 0:
+                    w.cache.demote(e.key, Tier.DISK)
         else:                           # naive: nothing survives
             for e in recipe.elements:
-                w.cache.drop(e.key)
+                if w.cache.pins(e.key) == 0:
+                    w.cache.drop(e.key)
 
     # -- dispatch loop --------------------------------------------------------
     def pump(self) -> None:
         while True:
             a = self.sched.route()
             if a is None:
-                return
+                break
             self._start(a)
+        # leftover idle workers: replicate hot recipes ahead of demand
+        self._apply_warm_pool()
 
     def _start(self, a: Assignment) -> None:
         # the manager is serial: one dispatch per manager_dispatch_s
@@ -214,20 +282,46 @@ class LiveExecutor:
     """
 
     def __init__(self, scheduler: Scheduler,
-                 fns: Dict[str, Callable[..., Any]]):
+                 fns: Dict[str, Callable[..., Any]],
+                 *, warm_pool: Optional[WarmPoolPolicy] = None):
         self.sched = scheduler
         self.fns = fns
+        self.warm_pool = warm_pool
         self.results: Dict[int, Any] = {}
         self._t0 = time.perf_counter()
 
     def _now(self) -> float:
         return time.perf_counter() - self._t0
 
+    def _apply_warm_pool(self) -> int:
+        """Materialise warm replicas for hot recipes on idle workers (the
+        same policy the sim exercises — here the loaders really run)."""
+        if self.warm_pool is None:
+            return 0
+        reg = self.sched.registry
+        plan = self.warm_pool.plan(self.sched)
+        for key, wid in plan:
+            w = self.sched.workers.get(wid)
+            if w is None or not w.idle:
+                continue
+            recipe = reg.recipes[key]
+            for k in w.make_room(recipe):
+                reg.mark_spilled(k, wid)
+                self.sched.spilled_libraries += 1
+            reg.mark_staging(key, wid)
+            lib = w.library_for(recipe)
+            if not lib.ready:
+                lib.materialize()
+            reg.mark_ready(key, wid)
+        return len(plan)
+
     def run(self) -> float:
         while not self.sched.done:
             a = self.sched.route()
             if a is None:
-                raise RuntimeError("deadlock: tasks queued but no idle worker")
+                raise RuntimeError(
+                    "deadlock: tasks queued but no idle worker can host "
+                    "them (check worker shapes vs recipe footprints)")
             task, w = a.task, a.worker
             recipe = self.sched.registry.recipes[task.recipe_key]
             t_start = self._now()
@@ -242,4 +336,5 @@ class LiveExecutor:
             self.sched.on_complete(a, t_start, t_end)
             if task.mode is not PERVASIVE:
                 lib.teardown()          # pay init again next task
+            self._apply_warm_pool()
         return self.sched.makespan()

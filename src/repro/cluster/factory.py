@@ -15,6 +15,7 @@ from __future__ import annotations
 import itertools
 from typing import Callable, Iterable, Iterator, List, Optional
 
+from ..core import WarmPoolPolicy, WorkerShape, PAPER_WORKER_SHAPE
 from .events import EventLoop
 from .executors import SimExecutor
 from .hardware import DeviceModel, cluster_sample, paper_20gpu_pool
@@ -27,6 +28,7 @@ class Factory:
     def __init__(self, scheduler: Scheduler, executor: SimExecutor,
                  device_supply: Iterable[DeviceModel],
                  *, workers_per_zone: int = 8,
+                 worker_shape: Optional[WorkerShape] = None,
                  evict_priority: Optional[Callable[[Worker], float]] = None):
         self.sched = scheduler
         self.ex = executor
@@ -34,6 +36,7 @@ class Factory:
         self._supply: Iterator[DeviceModel] = itertools.cycle(device_supply)
         self._zone_counter = itertools.count()
         self.workers_per_zone = workers_per_zone
+        self.worker_shape = worker_shape or PAPER_WORKER_SHAPE
         # higher priority value = evicted first (default: newest joiner)
         self.evict_priority = evict_priority or (lambda w: w.joined_s)
 
@@ -46,7 +49,8 @@ class Factory:
         cur = len(self.sched.workers)
         if target > cur:
             for _ in range(target - cur):
-                w = Worker(next(self._supply), zone=self._next_zone())
+                w = Worker(next(self._supply), zone=self._next_zone(),
+                           shape=self.worker_shape)
                 self.sched.add_worker(w, now)
             if getattr(self.ex, "prestage_enabled", False):
                 for key in self.sched.registry.recipes:
@@ -70,13 +74,17 @@ class Factory:
 
 def make_sim(devices: Optional[List[DeviceModel]] = None,
              trace: Optional[Trace] = None,
-             *, evict_priority=None, workers_per_zone: int = 8):
+             *, evict_priority=None, workers_per_zone: int = 8,
+             worker_shape: Optional[WorkerShape] = None,
+             backfill: bool = True, aging_bound: int = 8,
+             warm_pool: Optional[WarmPoolPolicy] = None,
+             prestage: bool = False):
     """Returns (scheduler, executor, factory) wired together."""
-    sched = Scheduler()
-    ex = SimExecutor(sched)
+    sched = Scheduler(backfill=backfill, aging_bound=aging_bound)
+    ex = SimExecutor(sched, prestage=prestage, warm_pool=warm_pool)
     devices = devices if devices is not None else paper_20gpu_pool()
     fac = Factory(sched, ex, devices, workers_per_zone=workers_per_zone,
-                  evict_priority=evict_priority)
+                  worker_shape=worker_shape, evict_priority=evict_priority)
     if trace:
         fac.apply_trace(trace)
     return sched, ex, fac

@@ -1,25 +1,36 @@
 """The manager: TaskVine-style scheduler with context-aware routing.
 
-The :class:`Scheduler` is *time-free*: it owns the ready queue, the worker
+The :class:`Scheduler` is *time-free*: it owns the ready lanes, the worker
 pool, the context registry, and all placement decisions, but never looks at
 a clock.  The executors (sim: discrete-event; live: wall clock) pump
 :meth:`route` and feed back :meth:`on_complete` / :meth:`on_evict`, so the
 paper's management layer — the contribution under test — is byte-for-byte
 identical in both backends.
 
-Routing policy (paper §5.1/§5.3.2):
+Routing policy (paper §5.1/§5.3.2, plus context-aware backfill):
   * tasks run 1-per-worker (work stealing across heterogeneous devices);
-  * a task prefers a worker whose library for its context is READY;
-  * otherwise it takes any idle cold worker and stages the context there,
+  * the ready queue is split into per-recipe LANES; :meth:`route` scans the
+    lane heads in global FIFO order and may *backfill* past a blocked head
+    (no idle worker can host its recipe) to any routable deeper pair, so
+    one unplaceable recipe never stalls the whole pool;
+  * warm placements (library READY) are matched before any cold placement;
+  * anti-starvation: a head that has been passed over ``aging_bound`` times
+    reserves the workers able to host it — younger tasks may no longer
+    backfill onto those until the aged head is placed;
+  * cold placement prefers a worker holding a SPILLED local copy (promotion
+    from local disk — no fetch), then the fastest capable idle device,
     fetching from an in-zone ready peer when one exists (spanning-tree
     distribution emerges from many such decisions);
-  * an evicted worker's running task is requeued at the queue head and its
+  * an evicted worker's running task is requeued at its lane head and its
     registry residencies are dropped (no grace period).
+
+``backfill=False`` restores the seed single-FIFO head-only policy (used as
+the baseline in benchmarks/bench_fig6_busy_cluster.py's mixed scenario).
 """
 from __future__ import annotations
 
 import itertools
-from collections import deque
+from collections import OrderedDict, deque
 from dataclasses import dataclass, field
 from typing import Any, Deque, Dict, List, Optional, Tuple
 
@@ -40,6 +51,7 @@ class Task:
     payload: Any = None               # live mode: callable args
     task_id: int = field(default_factory=lambda: next(_task_ids))
     attempts: int = 0
+    skipped: int = 0                  # dispatches that backfilled past us
 
 
 @dataclass
@@ -49,6 +61,7 @@ class Assignment:
     warm: bool                        # library READY on this worker
     peer_source: Optional[str]        # ready peer to fetch from (cold only)
     cross_zone: bool = False
+    local_restage: bool = False       # cold, but promoted from local disk
 
 
 @dataclass
@@ -65,10 +78,14 @@ class TaskRecord:
 
 
 class Scheduler:
-    def __init__(self, cluster: ClusterSpec = PAPER_CLUSTER):
+    def __init__(self, cluster: ClusterSpec = PAPER_CLUSTER, *,
+                 backfill: bool = True, aging_bound: int = 8):
         self.cluster = cluster
+        self.backfill = backfill
+        self.aging_bound = aging_bound
         self.registry = ContextRegistry()
-        self.queue: Deque[Task] = deque()
+        # per-recipe FIFO lanes; global order recovered via task_id
+        self.lanes: "OrderedDict[str, Deque[Task]]" = OrderedDict()
         self.workers: Dict[str, Worker] = {}
         self.running: Dict[int, Tuple[Task, str]] = {}
         # -- metrics -------------------------------------------------
@@ -78,6 +95,8 @@ class Scheduler:
         self.completed_inferences = 0
         self.evicted_tasks = 0
         self.evicted_inferences = 0
+        self.backfills = 0            # dispatches that jumped a blocked head
+        self.spilled_libraries = 0
         self.submitted = 0
 
     # ------------------------------------------------------------------
@@ -87,7 +106,7 @@ class Scheduler:
         return self.registry.register(recipe)
 
     def submit(self, task: Task) -> None:
-        self.queue.append(task)
+        self.lanes.setdefault(task.recipe_key, deque()).append(task)
         self.submitted += 1
 
     def submit_sweep(self, recipe_key: str, n_total: int, batch: int,
@@ -103,6 +122,15 @@ class Scheduler:
             n_tasks += 1
         return n_tasks
 
+    @property
+    def queue(self) -> List[Task]:
+        """All queued tasks in global FIFO (submission) order."""
+        return sorted((t for lane in self.lanes.values() for t in lane),
+                      key=lambda t: t.task_id)
+
+    def _requeue(self, task: Task) -> None:
+        self.lanes.setdefault(task.recipe_key, deque()).appendleft(task)
+
     # ------------------------------------------------------------------
     # pool membership (driven by the factory / eviction processes)
     # ------------------------------------------------------------------
@@ -112,7 +140,13 @@ class Scheduler:
         self.worker_events.append((now, len(self.workers)))
 
     def on_evict(self, worker_id: str, now: float = 0.0) -> List[Task]:
-        """Worker reclaimed with no grace period. Returns requeued tasks."""
+        """Worker reclaimed with no grace period. Returns requeued tasks.
+
+        Also covers eviction mid-staging/mid-spill: the in-flight task goes
+        back to its lane head and the worker's residencies (READY, STAGING
+        and SPILLED alike) vanish from the registry, so no later routing
+        decision can count on the lost copies.
+        """
         worker = self.workers.pop(worker_id, None)
         if worker is None:
             return []
@@ -125,7 +159,7 @@ class Scheduler:
                 task.attempts += 1
                 self.evicted_tasks += 1
                 self.evicted_inferences += task.n_inferences
-                self.queue.appendleft(task)     # retry first (paper: requeue)
+                self._requeue(task)             # retry first (paper: requeue)
                 requeued.append(task)
         return requeued
 
@@ -135,29 +169,82 @@ class Scheduler:
     def _idle_workers(self) -> List[Worker]:
         return [w for w in self.workers.values() if w.idle]
 
+    def _heads(self) -> List[Task]:
+        heads = [lane[0] for lane in self.lanes.values() if lane]
+        heads.sort(key=lambda t: t.task_id)
+        return heads
+
+    def _usable_by(self, task: Task, w: Worker) -> bool:
+        return w.has_ready(task.recipe_key) or \
+            w.can_host(self.registry.recipes[task.recipe_key])
+
     def route(self) -> Optional[Assignment]:
-        """Match the head-most routable task with the best idle worker."""
-        if not self.queue:
+        """Match a routable (lane head, idle worker) pair, warm-first.
+
+        Scans lane heads oldest-first; with ``backfill`` enabled a blocked
+        head is skipped rather than stalling the pool.  The oldest head
+        that has been passed over ``aging_bound`` times reserves every
+        worker able to host it."""
+        heads = self._heads()
+        if not heads:
             return None
         idle = self._idle_workers()
         if not idle:
             return None
-        task = self.queue[0]
-        key = task.recipe_key
-        ready = self.registry.ready_workers(key)
-        warm = [w for w in idle if w.worker_id in ready
-                and w.has_ready(key)]
-        if warm:
-            # fastest warm device first (work stealing does the rest)
-            w = min(warm, key=lambda w: w.device.infer_s)
-            self.queue.popleft()
-            self.running[task.task_id] = (task, w.worker_id)
-            return Assignment(task, w, warm=True, peer_source=None)
-        # cold placement: any idle worker; prefer the fastest device
-        w = min(idle, key=lambda w: w.device.infer_s)
-        src, cross = self._pick_peer(key, w)
-        self.queue.popleft()
+        if not self.backfill:
+            heads = heads[:1]           # seed policy: head-of-line only
+        starved = heads[0] if heads[0].skipped >= self.aging_bound else None
+
+        def allowed(task: Task, w: Worker) -> bool:
+            if starved is None or task is starved:
+                return True
+            return not self._usable_by(starved, w)
+
+        # pass 1: warm placements (library READY on an idle worker)
+        for task in heads:
+            key = task.recipe_key
+            ready = self.registry.ready_workers(key)
+            warm = [w for w in idle if w.worker_id in ready
+                    and w.has_ready(key) and allowed(task, w)]
+            if warm:
+                # fastest warm device first (work stealing does the rest)
+                w = min(warm, key=lambda w: w.device.infer_s)
+                return self._dispatch(task, w, warm=True)
+        # pass 2: cold placements (stage onto any capable idle worker)
+        for task in heads:
+            recipe = self.registry.recipes[task.recipe_key]
+            cands = [w for w in idle
+                     if w.can_host(recipe) and allowed(task, w)]
+            if not cands:
+                continue
+            spilled = self.registry.spilled_workers(task.recipe_key)
+            # prefer promotion from a local spilled copy, then fastest
+            w = min(cands, key=lambda w: (w.worker_id not in spilled,
+                                          w.device.infer_s))
+            return self._dispatch(task, w, warm=False)
+        return None
+
+    def _dispatch(self, task: Task, w: Worker, *, warm: bool) -> Assignment:
+        lane = self.lanes[task.recipe_key]
+        assert lane and lane[0] is task
+        lane.popleft()
+        # age every older head this dispatch jumped past
+        jumped = False
+        for other in self._heads():
+            if other.task_id < task.task_id:
+                other.skipped += 1
+                jumped = True
+        if jumped:
+            self.backfills += 1
         self.running[task.task_id] = (task, w.worker_id)
+        if warm:
+            return Assignment(task, w, warm=True, peer_source=None)
+        recipe = self.registry.recipes[task.recipe_key]
+        if w.has_local(recipe):
+            # spilled (or disk-cached) copy: promote locally, no fetch
+            return Assignment(task, w, warm=False, peer_source=None,
+                              local_restage=True)
+        src, cross = self._pick_peer(task.recipe_key, w)
         return Assignment(task, w, warm=False, peer_source=src,
                           cross_zone=cross)
 
@@ -176,12 +263,18 @@ class Scheduler:
     # completion bookkeeping (executors call these)
     # ------------------------------------------------------------------
     def on_start(self, assignment: Assignment) -> None:
-        w = assignment.worker
+        w, task = assignment.worker, assignment.task
         w.running += 1
+        w.running_by_recipe[task.recipe_key] = \
+            w.running_by_recipe.get(task.recipe_key, 0) + 1
+        w.touch(task.recipe_key)
         if not assignment.warm:
+            recipe = self.registry.recipes[task.recipe_key]
+            for key in w.make_room(recipe):     # spill, don't drop
+                self.registry.mark_spilled(key, w.worker_id)
+                self.spilled_libraries += 1
             w.staging = True
-            self.registry.mark_staging(assignment.task.recipe_key,
-                                       w.worker_id)
+            self.registry.mark_staging(task.recipe_key, w.worker_id)
 
     def on_staged(self, assignment: Assignment) -> None:
         w = assignment.worker
@@ -195,6 +288,8 @@ class Scheduler:
             return                          # stale (worker evicted mid-run)
         del self.running[task.task_id]
         w.running -= 1
+        n = w.running_by_recipe.get(task.recipe_key, 0)
+        w.running_by_recipe[task.recipe_key] = max(0, n - 1)
         w.tasks_done += 1
         w.inferences_done += task.n_inferences
         self.completed_inferences += task.n_inferences
@@ -207,7 +302,7 @@ class Scheduler:
     # ------------------------------------------------------------------
     @property
     def done(self) -> bool:
-        return not self.queue and not self.running
+        return not any(self.lanes.values()) and not self.running
 
     def makespan(self) -> float:
         return max((r.t_end for r in self.records), default=0.0)

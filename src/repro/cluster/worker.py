@@ -5,14 +5,21 @@ pilot job holding (cores, memory, disk, 1 accelerator) that runs at most
 ``shape.concurrency`` tasks at a time and keeps a byte-accounted local
 cache of context elements plus the library processes hosting materialised
 contexts.
+
+Workers are genuinely MULTI-CONTEXT: several libraries may be resident at
+once, and when a new recipe does not fit alongside them the worker *spills*
+the least-recently-used idle library (device/host → local disk, pins
+released) instead of tearing it down — switching back to a spilled recipe
+re-promotes from local disk rather than re-fetching over the network.
 """
 from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
-from ..core import ContextCache, Library, WorkerShape, PAPER_WORKER_SHAPE
+from ..core import (ContextCache, ContextRecipe, Library, Tier, WorkerShape,
+                    PAPER_WORKER_SHAPE, resident_footprint)
 from .hardware import DeviceModel
 
 _ids = itertools.count()
@@ -34,28 +41,74 @@ class Worker:
         )
         self.libraries: Dict[str, Library] = {}
         self.running: int = 0                 # tasks in flight
+        self.running_by_recipe: Dict[str, int] = {}
         self.staging: bool = False            # context materialising
         self.tasks_done: int = 0
         self.inferences_done: int = 0
+        self._use_seq = itertools.count()
+        self._last_used: Dict[str, int] = {}  # recipe key -> use tick (LRU)
 
     # -- capacity ---------------------------------------------------------
     @property
     def idle(self) -> bool:
         return self.running < self.shape.concurrency and not self.staging
 
+    def _fits(self, recipes: List[ContextRecipe]) -> bool:
+        """Would ``recipes`` fit fully resident together on this worker?
+        Elements are deduplicated by content key (shared deps count once)."""
+        elems = {e.key: e for r in recipes for e in r.elements}
+        return all(resident_footprint(elems.values(), tier)
+                   <= self.cache.capacity[tier] for tier in Tier)
+
+    def _immovable(self, but: Optional[str] = None) -> List[ContextRecipe]:
+        """Recipes that cannot be spilled: those with tasks in flight."""
+        return [self.libraries[k].recipe
+                for k, n in self.running_by_recipe.items()
+                if n > 0 and k != but and k in self.libraries]
+
+    def can_host(self, recipe: ContextRecipe) -> bool:
+        """True if ``recipe`` could be made fully resident here, spilling
+        every idle library if needed (running ones are immovable)."""
+        return self._fits([recipe] + self._immovable(but=recipe.key))
+
+    def make_room(self, recipe: ContextRecipe) -> List[str]:
+        """Spill idle resident libraries (LRU first) until ``recipe`` fits
+        alongside what must stay.  Returns the spilled recipe keys, which
+        the caller (scheduler) reflects into the context registry."""
+        spilled: List[str] = []
+        while True:
+            keep = [lib.recipe for k, lib in self.libraries.items()
+                    if lib.ready and k != recipe.key]
+            if self._fits([recipe] + keep):
+                return spilled
+            victims = [k for k, lib in self.libraries.items()
+                       if lib.ready and k != recipe.key
+                       and self.running_by_recipe.get(k, 0) == 0]
+            if not victims:
+                return spilled              # cannot fit; caller gated on
+            v = min(victims,                # can_host, so shouldn't happen
+                    key=lambda k: self._last_used.get(k, -1))
+            self.libraries[v].spill()
+            spilled.append(v)
+
     # -- context hosting ----------------------------------------------------
+    def touch(self, recipe_key: str) -> None:
+        self._last_used[recipe_key] = next(self._use_seq)
+
     def library_for(self, recipe) -> Library:
         lib = self.libraries.get(recipe.key)
         if lib is None:
             lib = Library(recipe, self.cache)
             self.libraries[recipe.key] = lib
+        self.touch(recipe.key)
         return lib
 
     def has_ready(self, recipe_key: str) -> bool:
         lib = self.libraries.get(recipe_key)
         return bool(lib and lib.ready)
 
-    def drop_library(self, recipe_key: str) -> None:
-        lib = self.libraries.pop(recipe_key, None)
-        if lib is not None:
-            lib.teardown()
+    def has_local(self, recipe: ContextRecipe) -> bool:
+        """All elements present in the local cache (any tier) — a cold
+        start here pays promotion but no network fetch."""
+        return all(self.cache.tier_of(e.key) is not None
+                   for e in recipe.elements)

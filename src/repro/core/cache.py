@@ -2,14 +2,18 @@
 
 The paper's worker keeps context elements in a local cache spanning disk,
 host memory, and the accelerator (§5.2: "a context ... can materialize in
-any format (disk, memory, GPU)").  This class does the byte accounting and
-LRU eviction per tier; the :class:`~repro.core.library.Library` decides
-*what* to promote.
+any format (disk, memory, GPU)").  This class does the byte accounting,
+LRU eviction, and explicit *demotion* (spill) per tier; the
+:class:`~repro.core.library.Library` decides *what* to promote or spill.
+
+Pins are COUNTED, not boolean: with multi-context workers, several
+libraries may share one element (the deps package, most commonly), and an
+element stays pinned until every hosting library releases it.
 
 Invariants (property-tested in tests/test_core_properties.py):
   * per-tier used bytes == sum of resident element bytes, always;
   * used bytes never exceed capacity after any operation;
-  * pinned entries are never evicted;
+  * pinned entries (pin count > 0) are never evicted nor demoted;
   * an element resident at tier T keeps its staging copies below T.
 """
 from __future__ import annotations
@@ -29,7 +33,7 @@ class CacheFullError(RuntimeError):
 class _Entry:
     element: ContextElement
     tier: Tier
-    pinned: bool = False
+    pins: int = 0
 
 
 class ContextCache:
@@ -43,6 +47,7 @@ class ContextCache:
         }
         self._entries: "OrderedDict[str, _Entry]" = OrderedDict()
         self.evictions: int = 0
+        self.demotions: int = 0
         self.hits: int = 0
         self.misses: int = 0
 
@@ -61,6 +66,10 @@ class ContextCache:
     def tier_of(self, key: str) -> Optional[Tier]:
         e = self._entries.get(key)
         return e.tier if e else None
+
+    def pins(self, key: str) -> int:
+        e = self._entries.get(key)
+        return e.pins if e else 0
 
     def lookup(self, key: str) -> Optional[Tier]:
         """Tier of ``key`` with LRU touch + hit/miss accounting."""
@@ -104,7 +113,7 @@ class ContextCache:
     def _evict_one(self, tier: Tier, exclude: str) -> bool:
         """Evict/demote the LRU unpinned entry occupying ``tier``."""
         for key, e in self._entries.items():   # OrderedDict = LRU order
-            if key == exclude or e.pinned:
+            if key == exclude or e.pins > 0:
                 continue
             if self._bytes_at(e.element, e.tier, tier) == 0:
                 continue
@@ -122,15 +131,38 @@ class ContextCache:
 
     def put(self, element: ContextElement, tier: Tier,
             *, pinned: bool = False) -> None:
-        """Insert or promote/demote ``element`` to residency ``tier``."""
+        """Insert or promote/demote ``element`` to residency ``tier``.
+
+        ``pinned=True`` takes one pin reference on the entry (released with
+        :meth:`pin`\\ ``(key, False)``); ``pinned=False`` leaves the current
+        pin count untouched.
+        """
         self._ensure_room(element, tier, exclude=element.key)
         cur = self._entries.pop(element.key, None)
-        self._entries[element.key] = _Entry(element, tier,
-                                            pinned or (cur.pinned if cur
-                                                       else False))
+        pins = (cur.pins if cur else 0) + (1 if pinned else 0)
+        self._entries[element.key] = _Entry(element, tier, pins)
+
+    def demote(self, key: str, to: Optional[Tier] = None) -> Tier:
+        """Spill an UNPINNED entry down-tier (default: one level; pass
+        ``to`` for a direct drop, e.g. DEVICE→DISK).  Frees the bytes of
+        every tier above ``to`` while keeping the staging copies at and
+        below it.  Returns the new residency tier."""
+        e = self._entries[key]
+        if e.pins > 0:
+            raise ValueError(f"cannot demote pinned entry {key} "
+                             f"(pins={e.pins})")
+        if to is None:
+            to = Tier.HOST if e.tier is Tier.DEVICE else Tier.DISK
+        if to.order >= e.tier.order:
+            return e.tier                       # already at/below target
+        e.tier = to
+        self.demotions += 1
+        return to
 
     def pin(self, key: str, pinned: bool = True) -> None:
-        self._entries[key].pinned = pinned
+        """Take (``pinned=True``) or release (``False``) one pin reference."""
+        e = self._entries[key]
+        e.pins = e.pins + 1 if pinned else max(0, e.pins - 1)
 
     def drop(self, key: str) -> None:
         self._entries.pop(key, None)
@@ -145,5 +177,6 @@ class ContextCache:
             "hits": self.hits, "misses": self.misses,
             "hit_rate": self.hits / total if total else 0.0,
             "evictions": self.evictions,
+            "demotions": self.demotions,
             **{f"used_{t.value}": self.used(t) for t in Tier},
         }

@@ -69,6 +69,23 @@ class ContextElement:
             return self.nbytes_host or self.nbytes_disk
         return self.nbytes_device
 
+    @property
+    def home(self) -> Tier:
+        """Residency tier at which this element is fully materialised."""
+        if self.nbytes_device:
+            return Tier.DEVICE
+        if self.nbytes_host or self.nbytes_disk:
+            return Tier.HOST
+        return Tier.DISK
+
+
+def resident_footprint(elements, tier: Tier) -> int:
+    """Bytes a set of (deduplicated) elements occupies at ``tier`` when each
+    is fully resident at its home tier (an element resident at DEVICE keeps
+    its HOST and DISK staging copies — same accounting as ContextCache)."""
+    return sum(e.nbytes(tier) for e in elements
+               if tier.order <= e.home.order)
+
 
 @dataclass(frozen=True)
 class ContextRecipe:

@@ -37,7 +37,13 @@ class StagingCost:
 
 
 class Library:
-    """One hosted context on one worker."""
+    """One hosted context on one worker.
+
+    With multi-context workers several libraries are concurrently resident;
+    a library that loses the device/host capacity race is *spilled* — its
+    elements demoted to local disk and its pins released — rather than torn
+    down, so re-hosting pays load+device but never the network fetch.
+    """
 
     def __init__(self, recipe: ContextRecipe, cache: ContextCache):
         self.recipe = recipe
@@ -45,6 +51,7 @@ class Library:
         self.context = MaterializedContext(recipe)
         self.ready = False
         self.invocations = 0
+        self.spills = 0
 
     # ------------------------------------------------------------------
     # Sim path: compute cost, update the cache accounting
@@ -61,8 +68,7 @@ class Library:
         cost = StagingCost(activation_s=self.recipe.activation_s)
         for e in self.recipe.elements:
             tier = self.cache.lookup(e.key)
-            home = Tier.DEVICE if e.nbytes_device else (
-                Tier.HOST if e.nbytes_host or e.nbytes_disk else Tier.DISK)
+            home = e.home
             if tier is None and not already_local:
                 bw = fetch_bw or hw.disk_bw
                 cost.fetch_s += e.nbytes_disk / bw
@@ -116,6 +122,32 @@ class Library:
         assert self.ready, "library not materialised"
         self.invocations += 1
         return fn(self.context.payloads, *args, **kw)
+
+    def spill(self, to: Tier = Tier.DISK) -> None:
+        """Demote this library's residency to ``to`` (default: local disk).
+
+        Releases this library's pin on every element; an element is only
+        demoted once its pin count hits zero, so elements shared with other
+        resident libraries (the deps package, typically) stay put.  The
+        byte accounting moves with the demotion: DEVICE and HOST bytes are
+        freed, the DISK staging copy survives (unpinned — evictable under
+        disk pressure), and re-hosting pays load+device but not fetch.
+        """
+        if not self.ready:
+            return
+        for e in self.recipe.elements:
+            try:
+                self.cache.pin(e.key, False)
+            except KeyError:
+                continue
+            if self.cache.pins(e.key) == 0:
+                self.cache.demote(e.key, to)
+            t = self.cache.tier_of(e.key)
+            if t is not None:
+                self.context.tiers[e.name] = t
+        self.context.payloads.clear()
+        self.ready = False
+        self.spills += 1
 
     def teardown(self) -> None:
         for e in self.recipe.elements:

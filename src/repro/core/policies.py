@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Dict, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 
 @dataclass(frozen=True)
@@ -117,6 +117,71 @@ def optimal_batch_size(n_total: int, n_workers: int, *, infer_s: float,
         if makespan < best_t:
             best, best_t = b, makespan
     return best
+
+
+@dataclass(frozen=True)
+class WarmPoolPolicy:
+    """Proactive demand-driven context replication (beyond-paper §5.3.1).
+
+    The spanning-tree prestage replicates a context to *every* joiner; this
+    policy instead sizes a warm pool per recipe from its live demand
+    (queued + running tasks) and stages replicas onto idle capable workers
+    ahead of dispatch, so the next task of a hot recipe routes warm instead
+    of paying a cold start.
+
+    ``plan`` is duck-typed over the scheduler (lanes / registry / workers)
+    so core stays import-free of the cluster layer; both the sim and live
+    executors call it after draining their dispatch loop.
+    """
+    tasks_per_replica: int = 8      # backlog one warm replica absorbs
+    max_fraction: float = 0.5       # pool share one recipe may pre-claim
+    min_replicas: int = 1           # keep-warm floor while demand exists
+
+    def target_replicas(self, demand_tasks: int, n_workers: int) -> int:
+        if demand_tasks <= 0 or n_workers <= 0:
+            return 0
+        cap = max(int(n_workers * self.max_fraction), 1)
+        want = math.ceil(demand_tasks / self.tasks_per_replica)
+        return min(max(want, self.min_replicas), cap)
+
+    def plan(self, sched) -> List[Tuple[str, str]]:
+        """(recipe_key, worker_id) staging actions for the current state.
+
+        Hottest recipes claim idle workers first; a worker is a candidate
+        when it is idle, not already hosting/staging the recipe, and can
+        host it after spilling its idle libraries.  Workers holding a
+        spilled copy are preferred (re-promotion skips the fetch).
+        """
+        idle = [w for w in sched.workers.values() if w.idle]
+        if not idle:
+            return []
+        demand: Dict[str, int] = {}
+        for key, lane in sched.lanes.items():
+            demand[key] = demand.get(key, 0) + len(lane)
+        for task, _wid in sched.running.values():
+            demand[task.recipe_key] = demand.get(task.recipe_key, 0) + 1
+        out: List[Tuple[str, str]] = []
+        taken: set = set()
+        n_workers = len(sched.workers)
+        for key in sorted(demand, key=demand.get, reverse=True):
+            want = self.target_replicas(demand[key], n_workers)
+            have = len(sched.registry.ready_workers(key)
+                       | sched.registry.staging_workers(key))
+            if want <= have:
+                continue
+            recipe = sched.registry.recipes[key]
+            spilled = sched.registry.spilled_workers(key)
+            cands = [w for w in idle
+                     if w.worker_id not in taken
+                     and (sched.registry.state(key, w.worker_id) is None
+                          or w.worker_id in spilled)
+                     and w.can_host(recipe)]
+            cands.sort(key=lambda w: (w.worker_id not in spilled,
+                                      w.device.infer_s))
+            for w in cands[:want - have]:
+                out.append((key, w.worker_id))
+                taken.add(w.worker_id)
+        return out
 
 
 def worker_sizing(total_gpus_hint: int, *,

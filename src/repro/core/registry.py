@@ -19,6 +19,8 @@ from .context import ContextRecipe
 class HostState(str, Enum):
     STAGING = "staging"       # recipe en route / materialising
     READY = "ready"           # library ack'd, invocations may be routed
+    SPILLED = "spilled"       # demoted to the worker's local disk (cheap
+                              # re-promotion: load+device, no fetch)
     LOST = "lost"             # worker evicted while hosting
 
 
@@ -41,6 +43,11 @@ class ContextRegistry:
     def mark_ready(self, key: str, worker_id: str) -> None:
         self.hosts[key][worker_id] = HostState.READY
 
+    def mark_spilled(self, key: str, worker_id: str) -> None:
+        """Worker demoted its library for ``key`` to local disk."""
+        assert key in self.recipes, f"unregistered recipe {key}"
+        self.hosts[key][worker_id] = HostState.SPILLED
+
     def drop_worker(self, worker_id: str) -> List[str]:
         """Worker evicted: forget all its residencies. Returns lost keys."""
         lost = []
@@ -58,6 +65,10 @@ class ContextRegistry:
     def staging_workers(self, key: str) -> Set[str]:
         return {w for w, s in self.hosts.get(key, {}).items()
                 if s is HostState.STAGING}
+
+    def spilled_workers(self, key: str) -> Set[str]:
+        return {w for w, s in self.hosts.get(key, {}).items()
+                if s is HostState.SPILLED}
 
     def workers_with(self, key: str) -> Set[str]:
         return set(self.hosts.get(key, {}))

@@ -24,6 +24,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams; support both.
+_COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
 
 def _kernel(x_ref, dt_ref, A_ref, B_ref, C_ref, D_ref, y_ref, hout_ref,
             h_scr, *, chunk: int, n_chunks: int):
@@ -87,7 +91,7 @@ def ssm_scan_pallas(x, dt, A, B, C, D, *, chunk: int = 128,
             jax.ShapeDtypeStruct((Bt, DI, N), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((DI, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(x, dt, A, jnp.asarray(B), jnp.asarray(C), D.reshape(1, DI))

@@ -203,6 +203,8 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         compiled = lowered.compile()
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):  # older jax: per-program dicts
+            cost = cost[0] if cost else {}
         # collectives: exact — while bodies scaled by known_trip_count
         coll = collective_bytes_scaled(compiled.as_text())
         # flops: cost_analysis counts scan bodies once; correct by lowering

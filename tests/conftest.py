@@ -3,7 +3,9 @@ single device; only the dry-run subprocess uses placeholder devices."""
 import os
 import sys
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)         # for the `benchmarks` namespace package
 
 import jax
 import pytest

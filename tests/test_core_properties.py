@@ -1,6 +1,10 @@
 """Hypothesis property tests on the system's invariants."""
 import math
 
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (see requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (ContextCache, ContextElement, Peer, Tier,
@@ -61,6 +65,101 @@ def test_cache_used_equals_sum_of_entries(op_list):
             expect = sum(e.nbytes(t) for k, (e, _) in resident.items()
                          if t.order <= c.tier_of(k).order)
             assert c.used(t) == expect
+
+
+# ---------------------------------------------------------------------------
+# Demotion (spill) invariants: byte accounting and pins under tier moves
+# ---------------------------------------------------------------------------
+
+spill_ops = st.lists(
+    st.tuples(st.integers(0, 9),
+              st.sampled_from(["put_disk", "put_host", "put_dev",
+                               "put_pinned", "pin", "unpin",
+                               "demote", "demote_disk"])),
+    min_size=1, max_size=60)
+
+
+def _manual_used(cache, elements, tier):
+    total = 0
+    for e in elements.values():
+        t = cache.tier_of(e.key)
+        if t is not None and tier.order <= t.order:
+            total += e.nbytes(tier)
+    return total
+
+
+@given(spill_ops)
+@settings(max_examples=200, deadline=None)
+def test_demotion_accounting_and_pin_invariants(op_list):
+    cap = dict(disk_bytes=50_000, host_bytes=40_000, device_bytes=20_000)
+    c = ContextCache(**cap)
+    elements = {i: ContextElement(f"e{i}", nbytes_disk=(i + 1) * 100,
+                                  nbytes_host=(i + 1) * 150,
+                                  nbytes_device=(i + 1) * 50 if i % 2 else 0)
+                for i in range(10)}
+    pins = {e.key: 0 for e in elements.values()}     # shadow pin ledger
+    for i, op in op_list:
+        e = elements[i]
+        resident = c.tier_of(e.key) is not None
+        if op.startswith("put"):
+            tier = {"put_disk": Tier.DISK, "put_host": Tier.HOST,
+                    "put_dev": Tier.DEVICE, "put_pinned": Tier.HOST}[op]
+            try:
+                c.put(e, tier, pinned=(op == "put_pinned"))
+                if op == "put_pinned":
+                    pins[e.key] += 1
+            except CacheFullError:
+                pass
+        elif op == "pin" and resident:
+            c.pin(e.key, True)
+            pins[e.key] += 1
+        elif op == "unpin" and resident:
+            c.pin(e.key, False)
+            pins[e.key] = max(0, pins[e.key] - 1)
+        elif op.startswith("demote") and resident:
+            before = c.tier_of(e.key)
+            target = Tier.DISK if op == "demote_disk" else None
+            if c.pins(e.key) > 0:
+                # pinned entries must refuse to move
+                try:
+                    c.demote(e.key, target)
+                    assert False, "demote must raise on a pinned entry"
+                except ValueError:
+                    assert c.tier_of(e.key) is before
+            else:
+                after = c.demote(e.key, target)
+                assert after.order <= before.order
+                assert c.tier_of(e.key) is after
+        # resync the shadow ledger with cache-side evictions
+        pins = {k: (v if k in c.keys() else 0) for k, v in pins.items()}
+        # invariants after EVERY op
+        for t, limit in zip(Tier, (cap["disk_bytes"], cap["host_bytes"],
+                                   cap["device_bytes"])):
+            assert c.used(t) <= limit, f"{t} over capacity"
+            assert c.used(t) == _manual_used(c, elements, t), \
+                f"{t} accounting drifted"
+        for k, v in pins.items():
+            assert c.pins(k) == v
+            if v > 0:
+                assert k in c.keys(), "pinned entry was evicted"
+
+
+def test_spilled_bytes_freed_above_target_tier():
+    """After demoting an unpinned DEVICE-resident entry, its DEVICE (and
+    HOST, for a disk spill) bytes are released but the DISK copy stays."""
+    c = ContextCache(disk_bytes=10**6, host_bytes=10**6, device_bytes=10**6)
+    e = ContextElement("w", nbytes_disk=1_000, nbytes_host=2_000,
+                       nbytes_device=1_500)
+    c.put(e, Tier.DEVICE)
+    assert (c.used(Tier.DEVICE), c.used(Tier.HOST), c.used(Tier.DISK)) == \
+        (1_500, 2_000, 1_000)
+    c.demote(e.key)                  # one level: DEVICE -> HOST
+    assert (c.used(Tier.DEVICE), c.used(Tier.HOST), c.used(Tier.DISK)) == \
+        (0, 2_000, 1_000)
+    c.demote(e.key, Tier.DISK)
+    assert (c.used(Tier.DEVICE), c.used(Tier.HOST), c.used(Tier.DISK)) == \
+        (0, 0, 1_000)
+    assert c.tier_of(e.key) is Tier.DISK
 
 
 # ---------------------------------------------------------------------------

@@ -1,5 +1,9 @@
 """Data substrate tests: tokenizer round-trip, claims determinism, prompts."""
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (see requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.data import (ByteTokenizer, LABELS, TokenStream, claim_batches,
