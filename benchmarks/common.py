@@ -3,13 +3,14 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.configs import get_config
 from repro.core import (ContextElement, ContextMode, ContextRecipe, MODES,
                         NAIVE, PARTIAL, PERVASIVE, WorkerShape,
                         model_context_recipe)
-from repro.cluster import make_sim, opportunistic_supply, GPU_CATALOG
+from repro.cluster import (Application, make_sim, opportunistic_supply,
+                           GPU_CATALOG)
 
 CFG = get_config("smollm2-1.7b")
 RECIPE = model_context_recipe(CFG, include_compile=False)
@@ -87,6 +88,31 @@ def run_mixed_experiment(exp_id: str, *,
     return ExpResult(exp_id, sched.makespan(), sched.avg_connected_workers(),
                      sched.completed_inferences, sched.evicted_inferences,
                      sched.records, sched)
+
+
+def run_stream_experiment(exp_id: str, specs: Sequence[Dict[str, Any]], *,
+                          n_workers: int = 12, exclusive: bool = False,
+                          devices=None, warm_pool=None, backfill: bool = True,
+                          until: Optional[float] = None
+                          ) -> Tuple[ExpResult, Application]:
+    """Replay a request-arrival schedule through the sim.
+
+    ``specs`` are :meth:`Application.make_request` kwargs (decode_steps,
+    arrival_s, ...); ``exclusive=True`` runs the SAME stream as
+    run-to-completion batch requests — the pre-redesign baseline
+    continuous admission is measured against."""
+    sched, ex, fac = make_sim(devices=devices, warm_pool=warm_pool,
+                              backfill=backfill)
+    app = Application(sched)
+    key = app.register(RECIPE, active_params=ACTIVE_PARAMS)
+    app.submit_stream(ex, [dict(s, recipe_key=key, exclusive=exclusive)
+                           for s in specs])
+    fac.reconcile(n_workers)
+    ex.run(until=until)
+    res = ExpResult(exp_id, sched.makespan(), sched.avg_connected_workers(),
+                    sched.completed_inferences, sched.evicted_inferences,
+                    sched.records, sched)
+    return res, app
 
 
 class Report:

@@ -1,9 +1,11 @@
 """Benchmark driver: one module per paper table/figure + roofline.
 
-  PYTHONPATH=src python -m benchmarks.run [--quick]
+  PYTHONPATH=src python -m benchmarks.run [--quick | --smoke]
 
 --quick runs the sims at 15k inferences instead of the paper's 150k
 (identical code paths, ~10x faster; claim tolerances unchanged).
+--smoke is the CI job: tiny sizes, only the benchmarks whose claims are
+scale-free (hardware table, continuous batching, mixed backfill).
 """
 from __future__ import annotations
 
@@ -15,15 +17,23 @@ import time
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: tiny sizes, scale-free claims only")
     args = ap.parse_args(argv)
     n_total = 15_000 if args.quick else 150_000
 
     from . import (bench_table1_hardware, bench_fig4_scaling_efforts,
                    bench_fig5_table2_task_times, bench_fig6_busy_cluster,
                    bench_fig7_resilience, bench_claims, bench_roofline,
-                   bench_batch_policy)
+                   bench_batch_policy, bench_continuous_batching)
 
     t0 = time.time()
+    if args.smoke:
+        bench_table1_hardware.main()
+        bench_continuous_batching.main(n_requests=120, n_workers=8)
+        bench_roofline.main()
+        print(f"\nsmoke benchmarks done in {time.time()-t0:.1f}s")
+        return 0
     bench_table1_hardware.main()
     res4 = bench_fig4_scaling_efforts.run_all(150_000)   # claims need paper scale
     bench_fig4_scaling_efforts.main(res=res4)
@@ -35,6 +45,7 @@ def main(argv=None) -> int:
     bench_claims.main(res=res4, drain=res6)
     bench_batch_policy.main(n_total)
     bench_batch_policy.main_mixed()
+    bench_continuous_batching.main()
     bench_roofline.main()
     print(f"\nall benchmarks done in {time.time()-t0:.1f}s")
     return 0

@@ -1,21 +1,30 @@
-"""Cluster runtime: DES engine, hardware catalog, workers, scheduler,
-factory, availability traces, and the dual (sim/live) executors."""
-from .events import EventLoop
-from .hardware import (GPU_CATALOG, TPU_CATALOG, PAPER_CLUSTER, ClusterSpec,
-                       DeviceModel, cluster_sample, paper_20gpu_pool,
-                       pool_rate, REF_ACTIVE_PARAMS)
+"""Cluster runtime: DES engine, hardware catalog, workers, the
+request-stream scheduler + application front-end, factory, availability
+traces, and the dual (sim/live) executors."""
+from .events import EventLoop, Timer
+from .hardware import (DECODE_FIXED_FRAC, GPU_CATALOG, TPU_CATALOG,
+                       PAPER_CLUSTER, ClusterSpec, DeviceModel,
+                       cluster_sample, paper_20gpu_pool, pool_rate,
+                       REF_ACTIVE_PARAMS)
 from .worker import Worker
-from .scheduler import Assignment, Scheduler, Task, TaskRecord
+from .scheduler import (Assignment, Request, RequestRecord, Scheduler,
+                        Task, TaskRecord)
 from .executors import LiveExecutor, SimExecutor
-from .factory import Factory, make_sim, opportunistic_supply
-from .observability import ProgressMonitor, Snapshot, format_snapshot
+from .application import Application
+from .factory import (Factory, make_sim, opportunistic_supply,
+                      spill_aware_evict_priority)
+from .observability import (ProgressMonitor, Snapshot, format_latency,
+                            format_snapshot, latency_summary, percentile)
 from . import traces
 
 __all__ = [
-    "Assignment", "ClusterSpec", "DeviceModel", "EventLoop", "Factory",
-    "GPU_CATALOG", "LiveExecutor", "PAPER_CLUSTER", "REF_ACTIVE_PARAMS",
+    "Application", "Assignment", "ClusterSpec", "DECODE_FIXED_FRAC",
+    "DeviceModel", "EventLoop", "Factory", "GPU_CATALOG", "LiveExecutor",
+    "PAPER_CLUSTER", "REF_ACTIVE_PARAMS", "Request", "RequestRecord",
     "Scheduler", "SimExecutor", "TPU_CATALOG", "Task", "TaskRecord",
-    "Worker", "cluster_sample", "make_sim", "opportunistic_supply",
-    "paper_20gpu_pool", "pool_rate", "traces",
-    "ProgressMonitor", "Snapshot", "format_snapshot",
+    "Timer", "Worker", "cluster_sample", "make_sim",
+    "opportunistic_supply", "paper_20gpu_pool", "pool_rate",
+    "spill_aware_evict_priority", "traces",
+    "ProgressMonitor", "Snapshot", "format_latency", "format_snapshot",
+    "latency_summary", "percentile",
 ]

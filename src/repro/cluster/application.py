@@ -1,0 +1,111 @@
+"""The application front-end: request streams over the scheduler.
+
+The paper's thesis is that throughput-oriented LLM *applications* are
+streams of many small inferences.  :class:`Application` is the surface
+such an application programs against: it registers context recipes and
+feeds per-request work (prompt units + a decode-step budget + an arrival
+time) into the scheduler's per-recipe lanes, where the routing layer can
+continuously admit requests into already-decoding batches on warm
+workers.
+
+Two submission styles:
+
+* :meth:`submit` — one request, now (live serving: call it as traffic
+  arrives; the wall clock is the arrival time);
+* :meth:`submit_stream` — a whole arrival schedule for the DES backend:
+  each spec is submitted as a loop event at its ``arrival_s`` and the
+  executor is pumped, so the sim sees the same open-loop arrival process
+  a live front-end would.
+
+The old whole-batch API (``scheduler.submit_sweep``) survives as a
+deprecated shim that expands into *exclusive* requests.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Iterable, List, Optional
+
+from ..core import ContextMode, ContextRecipe, PERVASIVE
+from .hardware import REF_ACTIVE_PARAMS
+from .observability import latency_summary
+from .scheduler import Request, RequestRecord, Scheduler
+
+
+class Application:
+    """A request-stream application bound to one scheduler."""
+
+    def __init__(self, scheduler: Scheduler, *,
+                 default_mode: ContextMode = PERVASIVE):
+        self.sched = scheduler
+        self.default_mode = default_mode
+        self.requests: List[Request] = []
+        self.active_params: Dict[str, float] = {}
+
+    # -- contexts -------------------------------------------------------
+    def register(self, recipe: ContextRecipe, *,
+                 active_params: float = REF_ACTIVE_PARAMS) -> str:
+        key = self.sched.register_context(recipe)
+        self.active_params[key] = active_params
+        return key
+
+    # -- submission -----------------------------------------------------
+    def make_request(self, recipe_key: str, *, decode_steps: int = 1,
+                     prompt_units: int = 0, payload: Any = None,
+                     arrival_s: float = 0.0,
+                     mode: Optional[ContextMode] = None,
+                     active_params: Optional[float] = None,
+                     exclusive: bool = False) -> Request:
+        """Build (but do not submit) one request.
+
+        ``exclusive=True`` produces a run-to-completion request that
+        admits no co-members — ONLY useful as the benchmark baseline the
+        continuous-batching path is measured against."""
+        req = Request(
+            recipe_key, decode_steps=decode_steps,
+            prompt_units=prompt_units, payload=payload,
+            arrival_s=arrival_s, mode=mode or self.default_mode,
+            exclusive=exclusive,
+            active_params=(active_params if active_params is not None
+                           else self.active_params.get(recipe_key,
+                                                       REF_ACTIVE_PARAMS)))
+        self.requests.append(req)
+        return req
+
+    def submit(self, recipe_key: str, **kw) -> Request:
+        """Submit one request immediately (live-serving arrival)."""
+        req = self.make_request(recipe_key, **kw)
+        self.sched.submit(req)
+        return req
+
+    def submit_stream(self, executor, specs: Iterable[Dict[str, Any]]
+                      ) -> List[Request]:
+        """Replay an arrival schedule through a :class:`SimExecutor`.
+
+        Each spec is the kwargs of :meth:`make_request` plus a required
+        ``recipe_key``; the request enters its lane at ``arrival_s`` on
+        the executor's event loop and the dispatch loop is pumped, so
+        admissions happen at arrival time, not at run start."""
+        out = []
+        for spec in specs:
+            spec = dict(spec)
+            key = spec.pop("recipe_key")
+            req = self.make_request(key, **spec)
+            out.append(req)
+
+            def arrive(req=req):
+                executor.pending_arrivals -= 1
+                self.sched.submit(req)
+                executor.pump()
+
+            executor.pending_arrivals += 1
+            executor.loop.at(req.arrival_s, arrive)
+        return out
+
+    # -- results --------------------------------------------------------
+    def records(self) -> List[RequestRecord]:
+        """Completion records for THIS application's requests."""
+        ids = {r.request_id for r in self.requests}
+        return [rec for rec in self.sched.records if rec.request_id in ids]
+
+    def latency_summary(self) -> Dict[str, float]:
+        """Queue-wait / time-to-first-step / end-to-end distributions."""
+        return latency_summary(self.records())

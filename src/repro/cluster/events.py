@@ -4,6 +4,11 @@ A classic calendar-queue DES: a heap of (time, seq, callback).  The same
 scheduler/registry/transfer/cache code runs under this engine (SimExecutor)
 and under wall-clock time (LiveExecutor); only task execution time differs
 (DESIGN.md §3, dual execution backend).
+
+:meth:`EventLoop.at` / :meth:`~EventLoop.after` return a :class:`Timer`
+handle; cancelling it is O(1) (the heap entry is skipped when popped).
+Stream batch runners rely on this: every membership change of a dynamic
+batch invalidates the previously scheduled step boundary.
 """
 from __future__ import annotations
 
@@ -12,9 +17,22 @@ import itertools
 from typing import Callable, List, Optional, Tuple
 
 
+class Timer:
+    """Cancellable handle for one scheduled callback."""
+    __slots__ = ("t", "cancelled")
+
+    def __init__(self, t: float):
+        self.t = t
+        self.cancelled = False
+
+    def cancel(self) -> None:
+        self.cancelled = True
+
+
 class EventLoop:
     def __init__(self):
-        self._heap: List[Tuple[float, int, Callable[[], None]]] = []
+        self._heap: List[Tuple[float, int, Timer,
+                               Callable[[], None]]] = []
         self._seq = itertools.count()
         self._now = 0.0
 
@@ -22,31 +40,42 @@ class EventLoop:
     def now(self) -> float:
         return self._now
 
-    def at(self, t: float, fn: Callable[[], None]) -> None:
+    def at(self, t: float, fn: Callable[[], None]) -> Timer:
         if t < self._now:
             raise ValueError(f"scheduling into the past: {t} < {self._now}")
-        heapq.heappush(self._heap, (t, next(self._seq), fn))
+        timer = Timer(t)
+        heapq.heappush(self._heap, (t, next(self._seq), timer, fn))
+        return timer
 
-    def after(self, delay: float, fn: Callable[[], None]) -> None:
-        self.at(self._now + max(delay, 0.0), fn)
+    def after(self, delay: float, fn: Callable[[], None]) -> Timer:
+        return self.at(self._now + max(delay, 0.0), fn)
 
     def step(self) -> bool:
-        if not self._heap:
-            return False
-        t, _, fn = heapq.heappop(self._heap)
-        self._now = t
-        fn()
-        return True
+        while self._heap:
+            t, _, timer, fn = heapq.heappop(self._heap)
+            if timer.cancelled:
+                continue
+            self._now = t
+            fn()
+            return True
+        return False
+
+    def _next_live(self) -> Optional[float]:
+        while self._heap and self._heap[0][2].cancelled:
+            heapq.heappop(self._heap)
+        return self._heap[0][0] if self._heap else None
 
     def run(self, *, until: Optional[float] = None,
             stop: Optional[Callable[[], bool]] = None,
             max_events: int = 50_000_000) -> float:
         """Run until the heap drains, ``until`` time passes, or ``stop()``."""
         n = 0
-        while self._heap:
+        while True:
             if stop is not None and stop():
                 break
-            t = self._heap[0][0]
+            t = self._next_live()
+            if t is None:
+                break
             if until is not None and t > until:
                 self._now = until
                 break

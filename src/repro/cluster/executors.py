@@ -1,24 +1,186 @@
-"""Task-execution backends: discrete-event simulation and live JAX.
+"""Request-execution backends: discrete-event simulation and live JAX.
 
 Both executors drive the SAME :class:`~repro.cluster.scheduler.Scheduler`
-(routing, registry, cache, policies).  Only the source of task duration
-differs:
+(routing, registry, cache, policies).  Only the source of time differs:
 
 * :class:`SimExecutor` — durations from the calibrated hardware catalog
-  (paper-scale runs: 150 k inferences, 186 GPUs);
+  (paper-scale runs: 150 k inferences, 186 GPUs).  Stream batches advance
+  with a per-step event model: each step of a size-B dynamic batch costs
+  ``device.step_time(active_params, B)``, membership changes between
+  steps, and a batch fast-forwards in O(membership changes) events rather
+  than O(steps);
 * :class:`LiveExecutor` — really materialises contexts (device_put, jit)
-  and runs forward passes on this container's device, measuring wall time.
+  and runs forward passes on this container's device, measuring wall
+  time.  Stream batches are advanced one decode step at a time through a
+  per-recipe ``step_fn``; the JAX batch is RE-FORMED between steps with
+  bucketed shapes (see :mod:`repro.inference.streaming`) so membership
+  churn costs a bounded number of recompiles.
+
+Deprecated exclusive tasks (``Task`` / ``submit_sweep``) keep the
+pre-redesign run-to-completion path in both backends, which is also the
+benchmark baseline continuous admission is measured against.
 """
 from __future__ import annotations
 
 import time
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from ..core import (ContextMode, NAIVE, PARTIAL, PERVASIVE, Tier,
                     WarmPoolPolicy)
 from .events import EventLoop
 from .hardware import ClusterSpec
 from .scheduler import Assignment, Scheduler
+from .worker import Worker
+
+_EPS = 1e-9
+
+
+class _StreamRun:
+    """Sim-side driver for ONE library's dynamic batch on one worker.
+
+    Keeps the step clock: ``t_boundary`` is the last step boundary,
+    ``step_s`` the current per-step cost (a function of batch size).
+    Progress is settled lazily — the runner schedules a single event at
+    the next *interesting* boundary (earliest member completion, or the
+    first boundary after an admission) and bulk-advances whole segments
+    of stable membership, so a 256-step request with no churn costs one
+    event, not 256.
+    """
+
+    def __init__(self, ex: "SimExecutor", a: Assignment):
+        self.ex = ex
+        self.w = a.worker
+        self.key = a.request.recipe_key
+        self.lib = a.worker.libraries[self.key]
+        self.active_params = a.request.active_params
+        self.assign: Dict[int, Assignment] = {a.request.request_id: a}
+        self.join_t: Dict[int, float] = {}   # admission wall time per rid
+        self.t_boundary = 0.0
+        self.step_s = 0.0
+        self.begun = False
+        self._timer = None
+
+    # -- lifecycle ------------------------------------------------------
+    def alive(self) -> bool:
+        """False once the worker was evicted or this run was replaced;
+        also lazily unregisters a dead run (eviction never notifies the
+        executor, so the stale entry would otherwise leak)."""
+        sched = self.ex.sched
+        ok = (sched.workers.get(self.w.worker_id) is self.w and
+              self.ex._streams.get((self.w.worker_id, self.key)) is self)
+        if not ok and self.ex._streams.get(
+                (self.w.worker_id, self.key)) is self:
+            del self.ex._streams[(self.w.worker_id, self.key)]
+        return ok
+
+    def admit(self, a: Assignment) -> None:
+        """A request joined (scheduler already put it in ``lib.batch``);
+        it starts stepping at the first boundary at/after NOW — never at
+        an earlier, lazily settled one."""
+        if not self.alive():
+            return                      # worker evicted mid-dispatch
+        rid = a.request.request_id
+        self.assign[rid] = a
+        self.join_t[rid] = self.ex.loop.now
+        if self.begun:
+            self.settle(self.ex.loop.now)
+            self.schedule()
+
+    def begin(self) -> None:
+        """Staging done (or warm): the batch starts decoding now."""
+        if not self.alive():
+            return
+        self.begun = True
+        self.t_boundary = self.ex.loop.now
+        self.lib.activate()
+        self.join_t.clear()
+        self._reprice()
+        self.schedule()
+
+    def _reprice(self) -> None:
+        # price by the members actually decoding (joiners waiting for
+        # their boundary don't occupy the step yet)
+        self.step_s = self.w.device.step_time(
+            self.active_params, max(self.lib.stepping, 1))
+
+    # -- event plumbing -------------------------------------------------
+    def schedule(self) -> None:
+        if self._timer is not None:
+            self._timer.cancel()
+            self._timer = None
+        if not self.lib.batch:
+            self.close()
+            return
+        if self.lib.joining:
+            t_next = self.t_boundary + self.step_s
+        else:
+            min_rem = min(r.n_units - r.steps_done
+                          for r in self.lib.batch.values())
+            t_next = self.t_boundary + min_rem * self.step_s
+        self._timer = self.ex.loop.at(max(t_next, self.ex.loop.now),
+                                      self._fire)
+
+    def _due_joiners(self, boundary: float) -> list:
+        """Joining members whose admission happened at/before
+        ``boundary`` — the only ones allowed to activate there.  A
+        member the scheduler admitted but whose dispatch the manager has
+        not finished (admit() not yet called) is never due."""
+        return [rid for rid in self.lib.joining
+                if self.join_t.get(rid, float("inf")) <= boundary + _EPS]
+
+    def _fire(self) -> None:
+        self._timer = None
+        if not self.alive():
+            return
+        self.settle(self.ex.loop.now)
+        self.schedule()
+        self.ex.pump()
+
+    def close(self) -> None:
+        self.ex._streams.pop((self.w.worker_id, self.key), None)
+        self.ex.sched.close_stream(self.w.worker_id, self.key)
+
+    # -- the step clock -------------------------------------------------
+    def settle(self, t: float) -> None:
+        """Advance the batch to time ``t``: whole segments of stable
+        membership at once, completing members and absorbing DUE joiners
+        at the boundaries in between.  A joiner is due only at
+        boundaries at/after its admission time — lazily settled PAST
+        boundaries must never retro-activate it (it would be credited
+        with steps it never ran)."""
+        while self.lib.stepping > 0 and self.step_s > 0:
+            span = (t - self.t_boundary) + _EPS
+            if span < self.step_s:
+                break
+            k = int(span / self.step_s)
+            min_rem = min(r.n_units - r.steps_done
+                          for rid, r in self.lib.batch.items()
+                          if rid not in self.lib.joining)
+            if self._due_joiners(self.t_boundary + self.step_s):
+                k = 1                 # membership changes next boundary
+            k = max(1, min(k, min_rem))
+            stepping = [r for rid, r in self.lib.batch.items()
+                        if rid not in self.lib.joining]
+            t_seg0 = self.t_boundary
+            self.t_boundary = t_seg0 + k * self.step_s
+            for _ in range(k - 1):    # quiet steps: nobody can finish
+                self.lib.step()
+            finished = self.lib.step()
+            for r in stepping:
+                if r.t_first_step is None:
+                    r.t_first_step = t_seg0 + self.step_s
+            for r in finished:
+                a = self.assign.pop(r.request_id, None)
+                if a is not None:
+                    self.ex.sched.on_complete(a, a.t_dispatch,
+                                              self.t_boundary,
+                                              t_first_step=r.t_first_step)
+            due = self._due_joiners(self.t_boundary)
+            if due:                   # joiners enter at this boundary
+                self.lib.activate(due)
+                for rid in due:
+                    self.join_t.pop(rid, None)
+            self._reprice()
 
 
 class SimExecutor:
@@ -31,7 +193,8 @@ class SimExecutor:
 
     ``warm_pool`` plugs in a :class:`~repro.core.WarmPoolPolicy`: after
     each dispatch round, hot recipes are replicated onto leftover idle
-    capable workers ahead of demand, so the sweep's next tasks route warm.
+    capable workers ahead of demand, so the stream's next requests route
+    warm.
     """
 
     def __init__(self, scheduler: Scheduler, loop: Optional[EventLoop] = None,
@@ -46,6 +209,10 @@ class SimExecutor:
         self._manager_free = 0.0
         self._fs_streams = 0
         self._peer_streams: Dict[str, int] = {}   # outbound per source
+        self._streams: Dict[Tuple[str, str], _StreamRun] = {}
+        # arrivals scheduled on the loop but not yet submitted
+        # (Application.submit_stream); keeps run() from stopping early
+        self.pending_arrivals = 0
 
     # -- proactive spanning-tree distribution (§5.3.1) ---------------------
     def prestage(self, recipe_key: str) -> int:
@@ -174,9 +341,9 @@ class SimExecutor:
     # -- staging time model -------------------------------------------------
     def _staging_cost(self, a: Assignment) -> float:
         """Seconds of context staging for a cold dispatch (0 when warm)."""
-        task, w = a.task, a.worker
-        recipe = self.sched.registry.recipes[task.recipe_key]
-        mode = task.mode
+        req, w = a.request, a.worker
+        recipe = self.sched.registry.recipes[req.recipe_key]
+        mode = req.mode
         lib = w.library_for(recipe)
         if mode is NAIVE:
             # sandbox-per-task: deps via shared fs, weights re-downloaded
@@ -209,14 +376,14 @@ class SimExecutor:
 
     def _post_exec(self, a: Assignment) -> None:
         """Mode-dependent teardown after a task finishes (paper §5.2 obs 3)."""
-        task, w = a.task, a.worker
-        recipe = self.sched.registry.recipes[task.recipe_key]
-        if task.mode is PERVASIVE:
+        req, w = a.request, a.worker
+        recipe = self.sched.registry.recipes[req.recipe_key]
+        if req.mode is PERVASIVE:
             return                      # library stays resident
         lib = w.libraries.get(recipe.key)
         if lib is not None:
             lib.teardown()
-        if task.mode is PARTIAL:
+        if req.mode is PARTIAL:
             # sandbox destroyed but registered disk artefacts survive;
             # elements still pinned by a co-resident library stay put
             for e in recipe.elements:
@@ -243,11 +410,33 @@ class SimExecutor:
         t0 = max(self.loop.now, self._manager_free) \
             + self.cluster.manager_dispatch_s
         self._manager_free = t0
+        a.t_dispatch = t0
         self.sched.on_start(a)
-        task, w = a.task, a.worker
+        req, w = a.request, a.worker
+        wid = w.worker_id
+        if a.join:
+            run = self._streams.get((wid, req.recipe_key))
+            if run is not None:
+                # the admission lands once the serial manager finishes
+                # this dispatch (t0), matching the recorded t_dispatch
+                self.loop.at(t0, lambda: run.admit(a))
+            return
         staging_s = 0.0 if a.warm else self._staging_cost(a)
-        infer_s = task.n_inferences * w.device.infer_time(task.active_params)
-        wid, tid = w.worker_id, task.task_id
+        if not req.exclusive:
+            # founding member of a stream batch: hand the clock to a runner
+            run = _StreamRun(self, a)
+            self._streams[(wid, req.recipe_key)] = run
+            if not a.warm:
+                def staged(run=run):
+                    if wid in self.sched.workers and run.alive():
+                        self.sched.on_staged(a)
+                self.loop.at(t0 + staging_s, staged)
+            self.loop.at(t0 + staging_s, run.begin)
+            return
+        # deprecated run-to-completion batch: one completion event
+        step_s = w.device.step_time(req.active_params, 1)
+        infer_s = req.n_units * step_s
+        tid = req.request_id
 
         def staged():
             if wid in self.sched.workers and tid in self.sched.running:
@@ -256,7 +445,8 @@ class SimExecutor:
         def complete():
             if tid not in self.sched.running:
                 return                  # evicted mid-run; already requeued
-            self.sched.on_complete(a, t0, self.loop.now)
+            self.sched.on_complete(a, t0, self.loop.now,
+                                   t_first_step=t0 + staging_s + step_s)
             self._post_exec(a)
             self.pump()
 
@@ -267,31 +457,51 @@ class SimExecutor:
     # -- run ------------------------------------------------------------------
     def run(self, *, until: Optional[float] = None) -> float:
         self.pump()
-        self.loop.run(until=until, stop=lambda: self.sched.done)
+        self.loop.run(until=until,
+                      stop=lambda: self.sched.done
+                      and not self.pending_arrivals)
         return self.sched.makespan()
 
 
 class LiveExecutor:
-    """Synchronous wall-clock executor: contexts and tasks really run.
+    """Synchronous wall-clock executor: contexts and requests really run.
 
-    ``fns[recipe_key]`` is the bound function ``fn(payloads, task_payload)``
-    executed inside the library's address space (paper Fig 3's
-    ``infer_model``).  All simulated workers share this container's device;
-    what is real is the context lifecycle — import, weight materialisation,
-    jit compile on first use, and reuse on subsequent invocations.
+    ``fns[recipe_key]`` is the bound function ``fn(payloads, payload)``
+    executed inside the library's address space for a deprecated
+    run-to-completion task (paper Fig 3's ``infer_model``).
+
+    ``step_fns[recipe_key]`` is the STREAM path: called once per decode
+    step with the library payloads and the list of active member
+    requests, it returns ``{request_id: step_output}``; outputs
+    accumulate in ``results[request_id]`` (a list, one entry per step).
+    The step function re-forms its padded device batch between calls —
+    membership changed hands under it — with bucketed shapes so the
+    number of recompiles stays bounded
+    (:class:`repro.inference.streaming.StreamingDecoder` does exactly
+    this for the PfF application).
+
+    All simulated workers share this container's device; what is real is
+    the context lifecycle — import, weight materialisation, jit compile
+    on first use, and reuse on subsequent invocations.
     """
 
     def __init__(self, scheduler: Scheduler,
-                 fns: Dict[str, Callable[..., Any]],
-                 *, warm_pool: Optional[WarmPoolPolicy] = None):
+                 fns: Optional[Dict[str, Callable[..., Any]]] = None,
+                 *, warm_pool: Optional[WarmPoolPolicy] = None,
+                 step_fns: Optional[Dict[str, Callable[..., Any]]] = None):
         self.sched = scheduler
-        self.fns = fns
+        self.fns = fns or {}
+        self.step_fns = step_fns or {}
         self.warm_pool = warm_pool
         self.results: Dict[int, Any] = {}
+        self._stream_assign: Dict[int, Assignment] = {}
+        self._open: List[Tuple[Worker, str]] = []
         self._t0 = time.perf_counter()
 
-    def _now(self) -> float:
+    def now(self) -> float:
         return time.perf_counter() - self._t0
+
+    _now = now                          # deprecated alias
 
     def _apply_warm_pool(self) -> int:
         """Materialise warm replicas for hot recipes on idle workers (the
@@ -315,26 +525,87 @@ class LiveExecutor:
             reg.mark_ready(key, wid)
         return len(plan)
 
-    def run(self) -> float:
-        while not self.sched.done:
+    # -- dispatch -------------------------------------------------------
+    def _run_exclusive(self, a: Assignment) -> None:
+        req, w = a.request, a.worker
+        recipe = self.sched.registry.recipes[req.recipe_key]
+        lib = w.library_for(recipe)
+        if not lib.ready:
+            lib.materialize()
+        self.sched.on_staged(a)
+        out = lib.invoke(self.fns[req.recipe_key], req.payload)
+        self.results[req.request_id] = out
+        self.sched.on_complete(a, a.t_dispatch, self.now())
+        if req.mode is not PERVASIVE:
+            lib.teardown()              # pay init again next task
+        # warm-pool is demand-driven: it must run while work is still
+        # queued, i.e. between tasks, not just per outer run() round
+        self._apply_warm_pool()
+
+    def _dispatch_all(self) -> bool:
+        progressed = False
+        while True:
             a = self.sched.route()
             if a is None:
-                raise RuntimeError(
-                    "deadlock: tasks queued but no idle worker can host "
-                    "them (check worker shapes vs recipe footprints)")
-            task, w = a.task, a.worker
-            recipe = self.sched.registry.recipes[task.recipe_key]
-            t_start = self._now()
+                return progressed
+            progressed = True
+            a.t_dispatch = self.now()
+            req, w = a.request, a.worker
             self.sched.on_start(a)
-            lib = w.library_for(recipe)
-            if not lib.ready:
-                lib.materialize()
-            self.sched.on_staged(a)
-            out = lib.invoke(self.fns[task.recipe_key], task.payload)
-            self.results[task.task_id] = out
-            t_end = self._now()
-            self.sched.on_complete(a, t_start, t_end)
-            if task.mode is not PERVASIVE:
-                lib.teardown()          # pay init again next task
+            if req.exclusive:
+                self._run_exclusive(a)
+                continue
+            self._stream_assign[req.request_id] = a
+            if not a.join:              # founding member: open the batch
+                lib = w.library_for(
+                    self.sched.registry.recipes[req.recipe_key])
+                if not lib.ready:
+                    lib.materialize()
+                self.sched.on_staged(a)
+                self._open.append((w, req.recipe_key))
+
+    # -- the live step loop ---------------------------------------------
+    def _step_streams(self) -> bool:
+        stepped = False
+        for w, key in list(self._open):
+            if self.sched.workers.get(w.worker_id) is not w:
+                self._open.remove((w, key))     # worker evicted mid-batch
+                continue
+            lib = w.libraries.get(key)
+            if lib is None or not lib.batch:
+                self._open.remove((w, key))
+                self.sched.close_stream(w.worker_id, key)
+                continue
+            lib.activate()
+            members = list(lib.batch.values())
+            step_fn = self.step_fns.get(key)
+            if step_fn is not None:
+                outs = step_fn(lib.context.payloads, members)
+                for rid, frag in outs.items():
+                    self.results.setdefault(rid, []).append(frag)
+            finished = lib.step()
+            now = self.now()
+            stepped = True
+            for r in members:
+                if r.t_first_step is None:
+                    r.t_first_step = now
+            for r in finished:
+                a = self._stream_assign.pop(r.request_id, None)
+                if a is not None:
+                    self.sched.on_complete(a, a.t_dispatch, now,
+                                           t_first_step=r.t_first_step)
+            if not lib.batch:
+                self._open.remove((w, key))
+                self.sched.close_stream(w.worker_id, key)
+        return stepped
+
+    def run(self) -> float:
+        while not self.sched.done:
+            progressed = self._dispatch_all()
+            progressed |= self._step_streams()
+            if not progressed:
+                raise RuntimeError(
+                    "deadlock: requests queued but no worker can host "
+                    "them (check worker shapes vs recipe footprints)")
             self._apply_warm_pool()
         return self.sched.makespan()

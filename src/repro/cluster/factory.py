@@ -8,20 +8,48 @@ In the sim, cluster load is exogenous (a :mod:`traces` trace of target
 worker counts); the factory submits or evicts pilot jobs to track it.
 Joins draw devices from a supply iterator (heterogeneous, Table-1
 proportioned); evictions pick victims by ``evict_priority`` (pv5 drains
-A10s first) — the *scheduler* then requeues any running task.
+A10s first) — the *scheduler* then requeues any unfinished request.
+
+The DEFAULT eviction priority is spill-aware: it consults the context
+registry and prefers reclaiming workers whose resident recipes are
+replicated (READY) elsewhere, so a drain costs re-staging only when no
+other copy survives.  Pass ``evict_priority=`` to override (higher value
+= evicted first).
 """
 from __future__ import annotations
 
 import itertools
 from typing import Callable, Iterable, Iterator, List, Optional
 
-from ..core import WarmPoolPolicy, WorkerShape, PAPER_WORKER_SHAPE
+from ..core import (HostState, WarmPoolPolicy, WorkerShape,
+                    PAPER_WORKER_SHAPE)
 from .events import EventLoop
 from .executors import SimExecutor
 from .hardware import DeviceModel, cluster_sample, paper_20gpu_pool
 from .scheduler import Scheduler
 from .traces import Trace
 from .worker import Worker
+
+
+def spill_aware_evict_priority(scheduler: Scheduler
+                               ) -> Callable[[Worker], tuple]:
+    """Registry-consulting eviction priority (ROADMAP: spill-aware).
+
+    A worker's score is the minimum number of OTHER ready replicas over
+    the recipes it currently hosts READY — the worker holding the last
+    warm copy of some context scores 0 and is reclaimed last; a worker
+    hosting nothing (or only recipes replicated elsewhere) goes first.
+    Ties break toward the newest joiner (the seed policy).
+    """
+    def priority(w: Worker) -> tuple:
+        reg = scheduler.registry
+        hosted = [k for k in w.libraries
+                  if reg.state(k, w.worker_id) is HostState.READY]
+        if not hosted:
+            return (float("inf"), w.joined_s)
+        score = min(len(reg.ready_workers(k)) - 1 for k in hosted)
+        return (score, w.joined_s)
+    return priority
 
 
 class Factory:
@@ -37,8 +65,10 @@ class Factory:
         self._zone_counter = itertools.count()
         self.workers_per_zone = workers_per_zone
         self.worker_shape = worker_shape or PAPER_WORKER_SHAPE
-        # higher priority value = evicted first (default: newest joiner)
-        self.evict_priority = evict_priority or (lambda w: w.joined_s)
+        # higher priority value = evicted first (default: spill-aware —
+        # reclaim workers whose contexts are replicated elsewhere)
+        self.evict_priority = evict_priority or \
+            spill_aware_evict_priority(scheduler)
 
     def _next_zone(self) -> str:
         return f"z{next(self._zone_counter) // self.workers_per_zone}"
@@ -76,7 +106,7 @@ def make_sim(devices: Optional[List[DeviceModel]] = None,
              trace: Optional[Trace] = None,
              *, evict_priority=None, workers_per_zone: int = 8,
              worker_shape: Optional[WorkerShape] = None,
-             backfill: bool = True, aging_bound: int = 8,
+             backfill: bool = True, aging_bound=8,
              warm_pool: Optional[WarmPoolPolicy] = None,
              prestage: bool = False):
     """Returns (scheduler, executor, factory) wired together."""

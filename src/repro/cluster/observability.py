@@ -1,19 +1,68 @@
-"""Observability: progress/throughput reporting (paper Challenge #2).
+"""Observability: progress/throughput AND latency reporting.
 
-"Availability of opportunistic resources is generally unpredictable ...
-This can only be alleviated by observability tools that transparently
-inform users of the current rate of throughput and the overall progress."
+Paper Challenge #2: "Availability of opportunistic resources is generally
+unpredictable ... This can only be alleviated by observability tools that
+transparently inform users of the current rate of throughput and the
+overall progress."
 
 The :class:`ProgressMonitor` turns a scheduler's event streams into the
 rate/progress/ETA view Parsl+TaskVine give their users; it works for both
 executors since it only reads scheduler state.
+
+With the request-stream API the records are PER-REQUEST, so latency is
+first-class: :func:`latency_summary` reports queue-wait, time-to-first-
+step and end-to-end distributions (p50/p95/mean) — what a makespan-only
+view of run-to-completion batches could never show.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
-from .scheduler import Scheduler
+from .scheduler import RequestRecord, Scheduler
+
+
+def percentile(xs: Sequence[float], p: float) -> float:
+    """Linear-interpolated percentile (p in [0, 100]) of ``xs``."""
+    if not xs:
+        return float("nan")
+    ys = sorted(xs)
+    if len(ys) == 1:
+        return ys[0]
+    rank = (p / 100.0) * (len(ys) - 1)
+    lo = int(math.floor(rank))
+    hi = min(lo + 1, len(ys) - 1)
+    frac = rank - lo
+    return ys[lo] * (1.0 - frac) + ys[hi] * frac
+
+
+def latency_summary(records: Sequence[RequestRecord]) -> Dict[str, float]:
+    """Per-request latency distributions over completion ``records``.
+
+    Keys: ``n``, ``{queue_wait,ttfs,e2e}_{p50,p95,mean}_s``.  ``e2e`` is
+    arrival → completion; works identically for sim and live records."""
+    out: Dict[str, float] = {"n": float(len(records))}
+    series = {
+        "queue_wait": [r.queue_wait_s for r in records],
+        "ttfs": [r.ttfs_s for r in records],
+        "e2e": [r.t_end - r.t_arrival for r in records],
+    }
+    for name, xs in series.items():
+        out[f"{name}_p50_s"] = percentile(xs, 50)
+        out[f"{name}_p95_s"] = percentile(xs, 95)
+        out[f"{name}_mean_s"] = (sum(xs) / len(xs)) if xs else float("nan")
+    return out
+
+
+def format_latency(summary: Dict[str, float], label: str = "") -> str:
+    return (f"[latency{' ' + label if label else ''}] n={summary['n']:.0f}  "
+            f"queue p50 {summary['queue_wait_p50_s']:.2f}s "
+            f"p95 {summary['queue_wait_p95_s']:.2f}s | "
+            f"ttfs p50 {summary['ttfs_p50_s']:.2f}s "
+            f"p95 {summary['ttfs_p95_s']:.2f}s | "
+            f"e2e p50 {summary['e2e_p50_s']:.2f}s "
+            f"p95 {summary['e2e_p95_s']:.2f}s")
 
 
 @dataclass

@@ -1,135 +1,270 @@
-"""The manager: TaskVine-style scheduler with context-aware routing.
+"""The manager: request-stream scheduler with context-aware routing.
 
-The :class:`Scheduler` is *time-free*: it owns the ready lanes, the worker
-pool, the context registry, and all placement decisions, but never looks at
-a clock.  The executors (sim: discrete-event; live: wall clock) pump
-:meth:`route` and feed back :meth:`on_complete` / :meth:`on_evict`, so the
-paper's management layer — the contribution under test — is byte-for-byte
-identical in both backends.
+The submission surface is REQUEST-level: an application hands the
+scheduler a stream of :class:`Request`\\ s (prompt units + a decode-step
+budget + an arrival time) rather than opaque run-to-completion batches.
+Resident libraries expose an admission interface
+(:meth:`~repro.core.Library.admit` / ``step`` / ``drain``), so a request
+can join a batch that is ALREADY DECODING on a warm worker — token-level
+continuous batching — instead of waiting for the whole batch ahead of it
+to finish.  The deprecated batch API (:func:`Task`, :meth:`submit_sweep`)
+still works: a task is simply an *exclusive* request that occupies its
+worker run-to-completion, which is also the baseline the benchmarks
+compare against.
 
-Routing policy (paper §5.1/§5.3.2, plus context-aware backfill):
-  * tasks run 1-per-worker (work stealing across heterogeneous devices);
-  * the ready queue is split into per-recipe LANES; :meth:`route` scans the
-    lane heads in global FIFO order and may *backfill* past a blocked head
-    (no idle worker can host its recipe) to any routable deeper pair, so
+The :class:`Scheduler` stays *time-free*: it owns the ready lanes, the
+worker pool, the context registry, and all placement decisions, but never
+looks at a clock.  The executors (sim: discrete-event; live: wall clock)
+pump :meth:`route` and feed back :meth:`on_complete` / :meth:`on_evict`,
+so the paper's management layer — the contribution under test — is
+byte-for-byte identical in both backends.
+
+Routing policy (paper §5.1/§5.3.2, plus context-aware backfill and
+continuous admission):
+  * the ready queue is split into per-recipe LANES; :meth:`route` scans
+    the lane heads in global FIFO order and may *backfill* past a blocked
+    head (nowhere to place its recipe) to any routable deeper pair, so
     one unplaceable recipe never stalls the whole pool;
-  * warm placements (library READY) are matched before any cold placement;
-  * anti-starvation: a head that has been passed over ``aging_bound`` times
-    reserves the workers able to host it — younger tasks may no longer
-    backfill onto those until the aged head is placed;
-  * cold placement prefers a worker holding a SPILLED local copy (promotion
-    from local disk — no fetch), then the fastest capable idle device,
-    fetching from an in-zone ready peer when one exists (spanning-tree
-    distribution emerges from many such decisions);
-  * an evicted worker's running task is requeued at its lane head and its
-    registry residencies are dropped (no grace period).
+  * warm placements come first: an idle worker with the library READY,
+    else — for stream requests — ADMISSION into a live dynamic batch with
+    free slots (slot budgets derive from the hardware catalog via
+    :meth:`Library.slot_budget`);
+  * anti-starvation: a head that has been passed over ``aging_bound``
+    times reserves the workers able to host it — younger requests may no
+    longer backfill (or be admitted) onto those until the aged head is
+    placed.  ``aging_bound="auto"`` derives the bound per recipe from
+    observed warm/cold service-time ratios (see
+    :func:`repro.core.derive_aging_bound`); the static ``int`` path is
+    unchanged;
+  * cold placement prefers a worker holding a SPILLED local copy
+    (promotion from local disk — no fetch), then the fastest capable idle
+    device, fetching from an in-zone ready peer when one exists;
+  * an evicted worker requeues ONLY its unfinished requests at their lane
+    heads (members that already left the batch keep their records) and
+    its registry residencies are dropped (no grace period).
 
-``backfill=False`` restores the seed single-FIFO head-only policy (used as
-the baseline in benchmarks/bench_fig6_busy_cluster.py's mixed scenario).
+``backfill=False`` restores the seed single-FIFO head-only policy (used
+as the baseline in benchmarks/bench_fig6_busy_cluster.py).
 """
 from __future__ import annotations
 
 import itertools
+import warnings
 from collections import OrderedDict, deque
 from dataclasses import dataclass, field
-from typing import Any, Deque, Dict, List, Optional, Tuple
+from typing import Any, Deque, Dict, List, Optional, Tuple, Union
 
-from ..core import (ContextRegistry, ContextRecipe, ContextMode, PERVASIVE,
-                    Peer, pick_sources)
+from ..core import (AGING_BOUND_DEFAULT, ContextRegistry, ContextRecipe,
+                    ContextMode, PERVASIVE, Peer, derive_aging_bound,
+                    pick_sources)
 from .hardware import ClusterSpec, PAPER_CLUSTER, REF_ACTIVE_PARAMS
 from .worker import Worker
 
-_task_ids = itertools.count()
+_request_ids = itertools.count()
 
 
 @dataclass
-class Task:
+class Request:
+    """One unit of application work: a prompt plus a decode-step budget.
+
+    ``prompt_units`` (prefill) and ``decode_steps`` are both charged as
+    work units; a request completes after ``n_units`` steps of whatever
+    dynamic batch hosts it.  ``exclusive=True`` marks a deprecated
+    run-to-completion batch task: it occupies a whole worker and admits
+    no co-members (the pre-redesign behaviour, kept as baseline).
+    """
     recipe_key: str
-    n_inferences: int
+    decode_steps: int = 1
+    prompt_units: int = 0
     mode: ContextMode = PERVASIVE
     active_params: float = REF_ACTIVE_PARAMS
-    payload: Any = None               # live mode: callable args
-    task_id: int = field(default_factory=lambda: next(_task_ids))
+    payload: Any = None               # live mode: prompt / callable args
+    arrival_s: float = 0.0
+    exclusive: bool = False
+    request_id: int = field(default_factory=lambda: next(_request_ids))
     attempts: int = 0
     skipped: int = 0                  # dispatches that backfilled past us
+    steps_done: int = 0
+    t_first_step: Optional[float] = None
+
+    @property
+    def n_units(self) -> int:
+        """Total work units (prefill + decode) this request needs."""
+        return self.prompt_units + self.decode_steps
+
+    # -- deprecated Task-era aliases ------------------------------------
+    @property
+    def n_inferences(self) -> int:
+        return self.n_units
+
+    @property
+    def task_id(self) -> int:
+        return self.request_id
+
+
+def Task(recipe_key: str, n_inferences: int,
+         mode: ContextMode = PERVASIVE,
+         active_params: float = REF_ACTIVE_PARAMS,
+         payload: Any = None, **kw) -> Request:
+    """DEPRECATED: a run-to-completion batch of ``n_inferences``.
+
+    Kept so pre-redesign callers and benchmarks still run; new code
+    should submit :class:`Request`\\ s (or use
+    :class:`~repro.cluster.Application`) so the scheduler sees the
+    request stream and can continuously admit into in-flight batches.
+    """
+    warnings.warn("Task(...) is deprecated; submit Request objects "
+                  "(see repro.cluster.Application)", DeprecationWarning,
+                  stacklevel=2)
+    return Request(recipe_key, decode_steps=n_inferences, mode=mode,
+                   active_params=active_params, payload=payload,
+                   exclusive=True, **kw)
 
 
 @dataclass
 class Assignment:
-    task: Task
+    request: Request
     worker: Worker
-    warm: bool                        # library READY on this worker
+    warm: bool                        # no staging charged to this request
     peer_source: Optional[str]        # ready peer to fetch from (cold only)
     cross_zone: bool = False
     local_restage: bool = False       # cold, but promoted from local disk
+    join: bool = False                # admitted into an in-flight batch
+    t_dispatch: float = 0.0           # set by the executor at dispatch
+
+    @property
+    def task(self) -> Request:        # deprecated alias
+        return self.request
 
 
 @dataclass
-class TaskRecord:
-    task_id: int
+class RequestRecord:
+    """Per-request completion record (replaces the per-task TaskRecord).
+
+    ``queue_wait_s`` and ``ttfs_s`` are the latency views the batch API
+    could not express: how long the request sat in its lane, and how long
+    until its first decode step completed.
+    """
+    request_id: int
     worker_id: str
     device: str
-    t_start: float
+    t_arrival: float
+    t_start: float                    # dispatch (admission) time
+    t_first_step: float
     t_end: float
-    exec_s: float                     # on-worker execution (incl. staging)
-    n_inferences: int
+    n_units: int
     warm: bool
     attempts: int
+    exclusive: bool = True
+    joined: bool = False              # admitted into an in-flight batch
+
+    @property
+    def exec_s(self) -> float:        # on-worker time (incl. staging)
+        return self.t_end - self.t_start
+
+    @property
+    def queue_wait_s(self) -> float:
+        return self.t_start - self.t_arrival
+
+    @property
+    def ttfs_s(self) -> float:
+        """Time to first (completed) decode step, from arrival."""
+        return self.t_first_step - self.t_arrival
+
+    # -- deprecated Task-era aliases ------------------------------------
+    @property
+    def n_inferences(self) -> int:
+        return self.n_units
+
+    @property
+    def task_id(self) -> int:
+        return self.request_id
+
+
+TaskRecord = RequestRecord            # deprecated alias
 
 
 class Scheduler:
     def __init__(self, cluster: ClusterSpec = PAPER_CLUSTER, *,
-                 backfill: bool = True, aging_bound: int = 8):
+                 backfill: bool = True,
+                 aging_bound: Union[int, str] = AGING_BOUND_DEFAULT):
         self.cluster = cluster
         self.backfill = backfill
+        if aging_bound != "auto" and not isinstance(aging_bound, int):
+            raise ValueError(f"aging_bound must be an int or 'auto', "
+                             f"got {aging_bound!r}")
         self.aging_bound = aging_bound
         self.registry = ContextRegistry()
-        # per-recipe FIFO lanes; global order recovered via task_id
-        self.lanes: "OrderedDict[str, Deque[Task]]" = OrderedDict()
+        # per-recipe FIFO lanes; global order recovered via request_id
+        self.lanes: "OrderedDict[str, Deque[Request]]" = OrderedDict()
         self.workers: Dict[str, Worker] = {}
-        self.running: Dict[int, Tuple[Task, str]] = {}
+        self.running: Dict[int, Tuple[Request, str]] = {}
         # -- metrics -------------------------------------------------
-        self.records: List[TaskRecord] = []
+        self.records: List[RequestRecord] = []
         self.progress_events: List[Tuple[float, int]] = [(0.0, 0)]
         self.worker_events: List[Tuple[float, int]] = [(0.0, 0)]
         self.completed_inferences = 0
         self.evicted_tasks = 0
         self.evicted_inferences = 0
         self.backfills = 0            # dispatches that jumped a blocked head
+        self.admissions = 0           # requests joined into live batches
         self.spilled_libraries = 0
         self.submitted = 0
+        # per-recipe observed service times: [warm_sum, warm_n, cold_sum,
+        # cold_n] — feeds aging_bound="auto"
+        self._service: Dict[str, List[float]] = {}
 
     # ------------------------------------------------------------------
-    # registration
+    # registration / submission
     # ------------------------------------------------------------------
     def register_context(self, recipe: ContextRecipe) -> str:
         return self.registry.register(recipe)
 
-    def submit(self, task: Task) -> None:
-        self.lanes.setdefault(task.recipe_key, deque()).append(task)
+    def submit(self, request: Request) -> None:
+        if not request.exclusive and not request.mode.state_resident:
+            # a dynamic batch presupposes the model staying resident
+            # between steps; partial/naive modes tear the context down
+            # per task and only make sense as run-to-completion baselines
+            raise ValueError(
+                "continuous batching requires a state-resident context "
+                f"mode, got {request.mode.name!r}; submit partial/naive "
+                "work as exclusive=True run-to-completion requests")
+        self.lanes.setdefault(request.recipe_key, deque()).append(request)
         self.submitted += 1
 
     def submit_sweep(self, recipe_key: str, n_total: int, batch: int,
                      mode: ContextMode = PERVASIVE,
                      active_params: float = REF_ACTIVE_PARAMS) -> int:
-        """Split ``n_total`` inferences into batch-sized tasks (the PfF app)."""
+        """DEPRECATED: split ``n_total`` inferences into batch-sized
+        run-to-completion tasks (the pre-request-stream PfF shape).
+
+        Each chunk expands to one *exclusive* :class:`Request`; prefer
+        :class:`~repro.cluster.Application` request streams, which let
+        libraries admit work into in-flight batches.
+        """
+        warnings.warn("submit_sweep() is deprecated; submit Request "
+                      "streams (see repro.cluster.Application)",
+                      DeprecationWarning, stacklevel=2)
         n_tasks = 0
         left = n_total
         while left > 0:
             b = min(batch, left)
-            self.submit(Task(recipe_key, b, mode, active_params))
+            self.submit(Request(recipe_key, decode_steps=b, mode=mode,
+                                active_params=active_params,
+                                exclusive=True))
             left -= b
             n_tasks += 1
         return n_tasks
 
     @property
-    def queue(self) -> List[Task]:
-        """All queued tasks in global FIFO (submission) order."""
-        return sorted((t for lane in self.lanes.values() for t in lane),
-                      key=lambda t: t.task_id)
+    def queue(self) -> List[Request]:
+        """All queued requests in global FIFO (submission) order."""
+        return sorted((r for lane in self.lanes.values() for r in lane),
+                      key=lambda r: r.request_id)
 
-    def _requeue(self, task: Task) -> None:
-        self.lanes.setdefault(task.recipe_key, deque()).appendleft(task)
+    def _requeue(self, request: Request) -> None:
+        self.lanes.setdefault(request.recipe_key,
+                              deque()).appendleft(request)
 
     # ------------------------------------------------------------------
     # pool membership (driven by the factory / eviction processes)
@@ -139,29 +274,34 @@ class Scheduler:
         self.workers[worker.worker_id] = worker
         self.worker_events.append((now, len(self.workers)))
 
-    def on_evict(self, worker_id: str, now: float = 0.0) -> List[Task]:
-        """Worker reclaimed with no grace period. Returns requeued tasks.
+    def on_evict(self, worker_id: str, now: float = 0.0) -> List[Request]:
+        """Worker reclaimed with no grace period. Returns requeued requests.
 
-        Also covers eviction mid-staging/mid-spill: the in-flight task goes
-        back to its lane head and the worker's residencies (READY, STAGING
-        and SPILLED alike) vanish from the registry, so no later routing
-        decision can count on the lost copies.
+        Only UNFINISHED requests are requeued (members that already left
+        the dynamic batch keep their completion records); an exclusive
+        task loses its whole batch, a stream member only its progress.
+        Covers eviction mid-staging/mid-batch: residencies (READY,
+        STAGING and SPILLED alike) vanish from the registry, so no later
+        routing decision can count on the lost copies.
         """
         worker = self.workers.pop(worker_id, None)
         if worker is None:
             return []
         self.worker_events.append((now, len(self.workers)))
         self.registry.drop_worker(worker_id)
-        requeued = []
-        for tid, (task, wid) in list(self.running.items()):
-            if wid == worker_id:
-                del self.running[tid]
-                task.attempts += 1
-                self.evicted_tasks += 1
-                self.evicted_inferences += task.n_inferences
-                self._requeue(task)             # retry first (paper: requeue)
-                requeued.append(task)
-        return requeued
+        victims = sorted((req for req, wid in self.running.values()
+                          if wid == worker_id),
+                         key=lambda r: r.request_id, reverse=True)
+        for req in victims:
+            del self.running[req.request_id]
+            req.attempts += 1
+            self.evicted_tasks += 1
+            self.evicted_inferences += (req.n_units if req.exclusive
+                                        else req.steps_done)
+            req.steps_done = 0        # decode state died with the worker
+            req.t_first_step = None
+            self._requeue(req)        # retry first (paper: requeue)
+        return victims[::-1]
 
     # ------------------------------------------------------------------
     # routing
@@ -169,83 +309,142 @@ class Scheduler:
     def _idle_workers(self) -> List[Worker]:
         return [w for w in self.workers.values() if w.idle]
 
-    def _heads(self) -> List[Task]:
+    def _heads(self) -> List[Request]:
         heads = [lane[0] for lane in self.lanes.values() if lane]
-        heads.sort(key=lambda t: t.task_id)
+        heads.sort(key=lambda r: r.request_id)
         return heads
 
-    def _usable_by(self, task: Task, w: Worker) -> bool:
-        return w.has_ready(task.recipe_key) or \
-            w.can_host(self.registry.recipes[task.recipe_key])
+    def _usable_by(self, req: Request, w: Worker) -> bool:
+        """Could ``w`` (eventually) serve ``req``?  The reservation
+        predicate: capacity-only (`could_host`), because a stream worker
+        that keeps admitting is never idle yet must still be reservable
+        for an aged head it could serve once its batch drains."""
+        if not req.exclusive and \
+                w.stream_slots_free(req.recipe_key, req.active_params) > 0:
+            return True
+        return w.has_ready(req.recipe_key) or \
+            w.could_host(self.registry.recipes[req.recipe_key])
+
+    def aging_bound_for(self, recipe_key: str) -> int:
+        """Effective skip bound for a lane head of ``recipe_key``.
+
+        Static ``int`` bounds pass through; ``"auto"`` derives the bound
+        from this recipe's observed warm/cold service-time ratio (a skip
+        costs at most one warm service; a cold placement costs a full
+        cold start) and falls back to the default until both sides have
+        been observed."""
+        if self.aging_bound != "auto":
+            return self.aging_bound
+        st = self._service.get(recipe_key)
+        if not st or not st[1] or not st[3]:
+            return AGING_BOUND_DEFAULT
+        return derive_aging_bound(st[0] / st[1], st[2] / st[3])
 
     def route(self) -> Optional[Assignment]:
-        """Match a routable (lane head, idle worker) pair, warm-first.
+        """Match a routable (lane head, worker) pair, warm-first.
 
         Scans lane heads oldest-first; with ``backfill`` enabled a blocked
         head is skipped rather than stalling the pool.  The oldest head
-        that has been passed over ``aging_bound`` times reserves every
-        worker able to host it."""
+        that has been passed over its aging bound reserves every worker
+        able to host it.  Stream requests have a third placement beyond
+        warm-idle and cold: ADMISSION into a live batch with free slots,
+        which needs no idle worker at all."""
         heads = self._heads()
         if not heads:
             return None
-        idle = self._idle_workers()
-        if not idle:
-            return None
         if not self.backfill:
             heads = heads[:1]           # seed policy: head-of-line only
-        starved = heads[0] if heads[0].skipped >= self.aging_bound else None
+        starved = (heads[0] if heads[0].skipped >=
+                   self.aging_bound_for(heads[0].recipe_key) else None)
 
-        def allowed(task: Task, w: Worker) -> bool:
-            if starved is None or task is starved:
+        def allowed(req: Request, w: Worker) -> bool:
+            if starved is None or req is starved:
                 return True
             return not self._usable_by(starved, w)
 
-        # pass 1: warm placements (library READY on an idle worker)
-        for task in heads:
-            key = task.recipe_key
+        idle = self._idle_workers()
+
+        def foundable(req: Request, w: Worker) -> bool:
+            # a stream request must JOIN a worker's open batch for its
+            # recipe, never found a second one on the same library
+            return req.exclusive or req.recipe_key not in w.open_streams
+
+        # pass 1: warm placements — idle READY worker, else admission
+        # into an in-flight dynamic batch with free slots
+        for req in heads:
+            key = req.recipe_key
             ready = self.registry.ready_workers(key)
             warm = [w for w in idle if w.worker_id in ready
-                    and w.has_ready(key) and allowed(task, w)]
+                    and w.has_ready(key) and foundable(req, w)
+                    and allowed(req, w)]
             if warm:
                 # fastest warm device first (work stealing does the rest)
                 w = min(warm, key=lambda w: w.device.infer_s)
-                return self._dispatch(task, w, warm=True)
+                return self._dispatch(req, w, warm=True)
+            if req.exclusive:
+                continue
+            joinable = [w for w in self.workers.values()
+                        if w.stream_slots_free(key, req.active_params) > 0
+                        and allowed(req, w)]
+            if joinable:
+                # founding a NEW batch on an idle worker beats joining
+                # when the lane backlog overflows the open batches' free
+                # slots (more capacity is needed anyway); otherwise join
+                # — admission is free, staging is not.
+                recipe = self.registry.recipes[key]
+                backlog = len(self.lanes[key])
+                free = sum(w.stream_slots_free(key, req.active_params)
+                           for w in joinable)
+                can_found = backlog > free and any(
+                    w.can_host(recipe) and foundable(req, w)
+                    and allowed(req, w) for w in idle)
+                if not can_found:
+                    w = min(joinable, key=lambda w: (
+                        w.device.infer_s,
+                        -w.stream_slots_free(key, req.active_params)))
+                    return self._dispatch(req, w, warm=True, join=True)
         # pass 2: cold placements (stage onto any capable idle worker)
-        for task in heads:
-            recipe = self.registry.recipes[task.recipe_key]
+        for req in heads:
+            recipe = self.registry.recipes[req.recipe_key]
             cands = [w for w in idle
-                     if w.can_host(recipe) and allowed(task, w)]
+                     if w.can_host(recipe) and foundable(req, w)
+                     and allowed(req, w)]
             if not cands:
                 continue
-            spilled = self.registry.spilled_workers(task.recipe_key)
+            spilled = self.registry.spilled_workers(req.recipe_key)
             # prefer promotion from a local spilled copy, then fastest
             w = min(cands, key=lambda w: (w.worker_id not in spilled,
                                           w.device.infer_s))
-            return self._dispatch(task, w, warm=False)
+            return self._dispatch(req, w, warm=False)
         return None
 
-    def _dispatch(self, task: Task, w: Worker, *, warm: bool) -> Assignment:
-        lane = self.lanes[task.recipe_key]
-        assert lane and lane[0] is task
+    def _dispatch(self, req: Request, w: Worker, *, warm: bool,
+                  join: bool = False) -> Assignment:
+        lane = self.lanes[req.recipe_key]
+        assert lane and lane[0] is req
         lane.popleft()
         # age every older head this dispatch jumped past
         jumped = False
         for other in self._heads():
-            if other.task_id < task.task_id:
+            if other.request_id < req.request_id:
                 other.skipped += 1
                 jumped = True
         if jumped:
             self.backfills += 1
-        self.running[task.task_id] = (task, w.worker_id)
+        self.running[req.request_id] = (req, w.worker_id)
+        if join:
+            self.admissions += 1
+            return Assignment(req, w, warm=True, peer_source=None,
+                              join=True)
         if warm:
-            return Assignment(task, w, warm=True, peer_source=None)
-        recipe = self.registry.recipes[task.recipe_key]
+            return Assignment(req, w, warm=True, peer_source=None)
+        recipe = self.registry.recipes[req.recipe_key]
         if w.has_local(recipe):
             # spilled (or disk-cached) copy: promote locally, no fetch
-            return Assignment(task, w, warm=False, peer_source=None,
+            return Assignment(req, w, warm=False, peer_source=None,
                               local_restage=True)
-        src, cross = self._pick_peer(task.recipe_key, w)
-        return Assignment(task, w, warm=False, peer_source=src,
+        src, cross = self._pick_peer(req.recipe_key, w)
+        return Assignment(req, w, warm=False, peer_source=src,
                           cross_zone=cross)
 
     def _pick_peer(self, key: str, dst: Worker) -> Tuple[Optional[str], bool]:
@@ -260,44 +459,75 @@ class Scheduler:
         return chosen.worker_id, chosen.zone != dst.zone
 
     # ------------------------------------------------------------------
-    # completion bookkeeping (executors call these)
+    # progress bookkeeping (executors call these)
     # ------------------------------------------------------------------
     def on_start(self, assignment: Assignment) -> None:
-        w, task = assignment.worker, assignment.task
+        w, req = assignment.worker, assignment.request
+        key = req.recipe_key
+        w.running_by_recipe[key] = w.running_by_recipe.get(key, 0) + 1
+        w.touch(key)
+        if assignment.join:
+            # admission into the live batch; no staging, no new slot
+            lib = w.libraries[key]
+            lib.admit(req, w.slot_budget(key, req.active_params))
+            return
         w.running += 1
-        w.running_by_recipe[task.recipe_key] = \
-            w.running_by_recipe.get(task.recipe_key, 0) + 1
-        w.touch(task.recipe_key)
+        recipe = self.registry.recipes[key]
+        if not req.exclusive:
+            # founding member of a new stream batch on this worker
+            lib = w.library_for(recipe)
+            lib.admit(req, w.slot_budget(key, req.active_params))
+            w.open_streams.add(key)
         if not assignment.warm:
-            recipe = self.registry.recipes[task.recipe_key]
-            for key in w.make_room(recipe):     # spill, don't drop
-                self.registry.mark_spilled(key, w.worker_id)
+            for k in w.make_room(recipe):       # spill, don't drop
+                self.registry.mark_spilled(k, w.worker_id)
                 self.spilled_libraries += 1
             w.staging = True
-            self.registry.mark_staging(task.recipe_key, w.worker_id)
+            self.registry.mark_staging(key, w.worker_id)
 
     def on_staged(self, assignment: Assignment) -> None:
         w = assignment.worker
         w.staging = False
-        self.registry.mark_ready(assignment.task.recipe_key, w.worker_id)
+        self.registry.mark_ready(assignment.request.recipe_key,
+                                 w.worker_id)
 
     def on_complete(self, assignment: Assignment, t_start: float,
-                    t_end: float) -> None:
-        task, w = assignment.task, assignment.worker
-        if task.task_id not in self.running:
+                    t_end: float,
+                    t_first_step: Optional[float] = None) -> None:
+        req, w = assignment.request, assignment.worker
+        if req.request_id not in self.running:
             return                          # stale (worker evicted mid-run)
-        del self.running[task.task_id]
-        w.running -= 1
-        n = w.running_by_recipe.get(task.recipe_key, 0)
-        w.running_by_recipe[task.recipe_key] = max(0, n - 1)
-        w.tasks_done += 1
-        w.inferences_done += task.n_inferences
-        self.completed_inferences += task.n_inferences
+        del self.running[req.request_id]
+        key = req.recipe_key
+        n = w.running_by_recipe.get(key, 0)
+        w.running_by_recipe[key] = max(0, n - 1)
+        if req.exclusive:
+            w.running -= 1                  # stream slots close via
+        w.tasks_done += 1                   # close_stream when the batch
+        w.inferences_done += req.n_units    # itself empties
+        self.completed_inferences += req.n_units
         self.progress_events.append((t_end, self.completed_inferences))
-        self.records.append(TaskRecord(
-            task.task_id, w.worker_id, w.device.name, t_start, t_end,
-            t_end - t_start, task.n_inferences, assignment.warm,
-            task.attempts))
+        st = self._service.setdefault(key, [0.0, 0, 0.0, 0])
+        i = 0 if assignment.warm else 2
+        st[i] += t_end - t_start
+        st[i + 1] += 1
+        if t_first_step is None:
+            t_first_step = req.t_first_step
+        self.records.append(RequestRecord(
+            req.request_id, w.worker_id, w.device.name, req.arrival_s,
+            t_start, t_end if t_first_step is None else t_first_step,
+            t_end, req.n_units, assignment.warm, req.attempts,
+            req.exclusive, assignment.join))
+
+    def close_stream(self, worker_id: str, recipe_key: str) -> None:
+        """The dynamic batch for ``recipe_key`` on ``worker_id`` emptied;
+        release its concurrency slot (executors call this)."""
+        w = self.workers.get(worker_id)
+        if w is None:
+            return
+        if recipe_key in w.open_streams:
+            w.open_streams.discard(recipe_key)
+            w.running = max(0, w.running - 1)
 
     # ------------------------------------------------------------------
     @property

@@ -11,12 +11,17 @@ once, and when a new recipe does not fit alongside them the worker *spills*
 the least-recently-used idle library (device/host → local disk, pins
 released) instead of tearing it down — switching back to a spilled recipe
 re-promotes from local disk rather than re-fetching over the network.
+
+A worker running a STREAM batch (continuous batching) occupies one
+concurrency slot with the batch as a whole; individual requests are
+admitted into the hosting library's dynamic batch up to its device-derived
+slot budget without going through the idle check.
 """
 from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Set
 
 from ..core import (ContextCache, ContextRecipe, Library, Tier, WorkerShape,
                     PAPER_WORKER_SHAPE, resident_footprint)
@@ -37,11 +42,12 @@ class Worker:
         self.cache = ContextCache(
             disk_bytes=self.shape.disk_gb * 10**9,
             host_bytes=self.shape.memory_gb * 10**9,
-            device_bytes=self.device.mem_gb * 10**9,
+            device_bytes=self.device_bytes,
         )
         self.libraries: Dict[str, Library] = {}
-        self.running: int = 0                 # tasks in flight
-        self.running_by_recipe: Dict[str, int] = {}
+        self.running: int = 0                 # occupied concurrency slots
+        self.running_by_recipe: Dict[str, int] = {}   # in-flight REQUESTS
+        self.open_streams: Set[str] = set()   # recipes with a live batch
         self.staging: bool = False            # context materialising
         self.tasks_done: int = 0
         self.inferences_done: int = 0
@@ -52,6 +58,40 @@ class Worker:
     @property
     def idle(self) -> bool:
         return self.running < self.shape.concurrency and not self.staging
+
+    @property
+    def device_bytes(self) -> int:
+        return self.device.mem_gb * 10**9
+
+    def slot_budget(self, recipe_key: str, active_params: float) -> int:
+        """Decode-slot budget for ``recipe_key``'s library HERE: device
+        memory not occupied by co-resident libraries' device bytes, fed
+        through :meth:`Library.slot_budget`.  (The library alone cannot
+        see its neighbours, so a multi-context worker must derate.)"""
+        lib = self.libraries.get(recipe_key)
+        if lib is None:
+            return 0
+        own = {e.key for e in lib.recipe.elements}
+        others = sum(
+            e.nbytes(Tier.DEVICE)
+            for other in self.libraries.values()
+            if other is not lib
+            for e in other.recipe.elements
+            if e.key not in own
+            and self.cache.tier_of(e.key) is Tier.DEVICE)
+        return lib.slot_budget(self.device_bytes - others, active_params)
+
+    def stream_slots_free(self, recipe_key: str,
+                          active_params: float) -> int:
+        """Free dynamic-batch slots for an OPEN stream of ``recipe_key``
+        on this worker (0 when no stream batch is live here)."""
+        if recipe_key not in self.open_streams:
+            return 0
+        lib = self.libraries.get(recipe_key)
+        if lib is None:
+            return 0
+        budget = self.slot_budget(recipe_key, active_params)
+        return max(0, budget - len(lib.batch))
 
     def _fits(self, recipes: List[ContextRecipe]) -> bool:
         """Would ``recipes`` fit fully resident together on this worker?
@@ -70,6 +110,14 @@ class Worker:
         """True if ``recipe`` could be made fully resident here, spilling
         every idle library if needed (running ones are immovable)."""
         return self._fits([recipe] + self._immovable(but=recipe.key))
+
+    def could_host(self, recipe: ContextRecipe) -> bool:
+        """Capacity-only host check: would ``recipe`` fit once current
+        work drains (every resident library is then spillable)?  Used by
+        the anti-starvation reservation — a worker that is never idle
+        because its stream batch keeps admitting must still be
+        reservable for an aged head it could eventually serve."""
+        return self._fits([recipe])
 
     def make_room(self, recipe: ContextRecipe) -> List[str]:
         """Spill idle resident libraries (LRU first) until ``recipe`` fits

@@ -8,27 +8,30 @@ Layers:
   transfer.py  topology-aware spanning-tree peer distribution
   policies.py  worker sizing, context modes, batch-size selection
 """
-from .context import (ContextElement, ContextRecipe, MaterializedContext,
-                      Tier, content_hash, model_context_recipe,
+from .context import (ContextElement, ContextRecipe, KV_BYTES_PER_PARAM,
+                      MAX_BATCH_SLOTS, MaterializedContext, Tier,
+                      content_hash, model_context_recipe,
                       partial_context_recipe, resident_footprint)
 from .cache import CacheFullError, ContextCache
 from .library import Library, StagingCost
 from .registry import ContextRegistry, HostState
 from .transfer import (Peer, TransferEdge, TransferPlan, pick_sources,
                        plan_spanning_tree)
-from .policies import (MODES, NAIVE, PARTIAL, PERVASIVE, PAPER_TASK_SHAPE,
-                       PAPER_WORKER_SHAPE, ContextMode, WarmPoolPolicy,
-                       WorkerShape, eviction_loss, expected_task_time,
-                       optimal_batch_size, worker_sizing)
+from .policies import (AGING_BOUND_DEFAULT, MODES, NAIVE, PARTIAL, PERVASIVE,
+                       PAPER_TASK_SHAPE, PAPER_WORKER_SHAPE, ContextMode,
+                       WarmPoolPolicy, WorkerShape, derive_aging_bound,
+                       eviction_loss, expected_task_time, optimal_batch_size,
+                       worker_sizing)
 
 __all__ = [
-    "CacheFullError", "ContextCache", "ContextElement", "ContextMode",
-    "ContextRecipe", "ContextRegistry", "HostState", "Library",
+    "AGING_BOUND_DEFAULT", "CacheFullError", "ContextCache",
+    "ContextElement", "ContextMode", "ContextRecipe", "ContextRegistry",
+    "HostState", "KV_BYTES_PER_PARAM", "Library", "MAX_BATCH_SLOTS",
     "MaterializedContext", "MODES", "NAIVE", "PARTIAL", "PERVASIVE",
     "PAPER_TASK_SHAPE", "PAPER_WORKER_SHAPE", "Peer", "StagingCost", "Tier",
     "TransferEdge", "TransferPlan", "WarmPoolPolicy", "WorkerShape",
-    "content_hash", "eviction_loss", "expected_task_time",
-    "model_context_recipe", "optimal_batch_size", "partial_context_recipe",
-    "pick_sources", "plan_spanning_tree", "resident_footprint",
-    "worker_sizing",
+    "content_hash", "derive_aging_bound", "eviction_loss",
+    "expected_task_time", "model_context_recipe", "optimal_batch_size",
+    "partial_context_recipe", "pick_sources", "plan_spanning_tree",
+    "resident_footprint", "worker_sizing",
 ]

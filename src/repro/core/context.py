@@ -87,6 +87,17 @@ def resident_footprint(elements, tier: Tier) -> int:
                if tier.order <= e.home.order)
 
 
+# Decode-state (KV cache + activations) bytes one admitted request holds on
+# the accelerator, as a fraction of the model's active-parameter count.  Used
+# to derive a library's continuous-batching slot budget when the recipe does
+# not pin an explicit ``slot_bytes``.
+KV_BYTES_PER_PARAM = 0.25
+# One library never grows its dynamic batch past this many slots, regardless
+# of free device memory (straggler/jitter control, same spirit as vLLM's
+# max_num_seqs).
+MAX_BATCH_SLOTS = 32
+
+
 @dataclass(frozen=True)
 class ContextRecipe:
     """The full recipe for a function's context (paper §5.3.1).
@@ -100,6 +111,9 @@ class ContextRecipe:
     # static per-activation cost in seconds (fork-exec of the library
     # process, import time) paid once per worker even with a warm cache:
     activation_s: float = 0.0
+    # device bytes ONE admitted request occupies while decoding (KV cache,
+    # sampling state).  0 = derive from active params via KV_BYTES_PER_PARAM.
+    slot_bytes: int = 0
 
     @property
     def key(self) -> str:
@@ -118,6 +132,12 @@ class ContextRecipe:
     def transfer_bytes(self) -> int:
         """Bytes that move over the network when peer-transferring."""
         return self.nbytes(Tier.DISK)
+
+    def decode_slot_bytes(self, active_params: float) -> int:
+        """Device bytes one in-flight request pins while decoding."""
+        if self.slot_bytes:
+            return self.slot_bytes
+        return max(int(active_params * KV_BYTES_PER_PARAM), 1)
 
     def with_elements(self, *extra: ContextElement) -> "ContextRecipe":
         return dataclasses.replace(self, elements=self.elements + extra)

@@ -16,11 +16,13 @@ bound function.
 from __future__ import annotations
 
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, List, Optional, Set
 
 from .cache import ContextCache
-from .context import ContextRecipe, MaterializedContext, Tier
+from .context import (ContextRecipe, MAX_BATCH_SLOTS, MaterializedContext,
+                      Tier)
 
 
 @dataclass
@@ -43,6 +45,16 @@ class Library:
     a library that loses the device/host capacity race is *spilled* — its
     elements demoted to local disk and its pins released — rather than torn
     down, so re-hosting pays load+device but never the network fetch.
+
+    A library also owns a *dynamic batch*: the set of admitted requests it
+    decodes together.  Membership changes between steps — :meth:`admit`
+    adds a request (it starts stepping at the next step boundary, via
+    :meth:`activate`), :meth:`step` advances every active member by one
+    decode step and returns the ones that hit their budget, and
+    :meth:`drain` removes the unfinished members (eviction / shutdown).
+    The slot budget is a function of the hosting device's free memory, so
+    the same request stream batches differently across a heterogeneous
+    pool.
     """
 
     def __init__(self, recipe: ContextRecipe, cache: ContextCache):
@@ -52,6 +64,68 @@ class Library:
         self.ready = False
         self.invocations = 0
         self.spills = 0
+        # continuous-batching state: request_id -> request
+        self.batch: "OrderedDict[int, Any]" = OrderedDict()
+        self.joining: Set[int] = set()      # admitted, start at next boundary
+
+    # ------------------------------------------------------------------
+    # Continuous batching: the admission interface
+    # ------------------------------------------------------------------
+    def slot_budget(self, device_bytes: int, active_params: float) -> int:
+        """How many requests this library may decode concurrently here.
+
+        Derived from the hardware catalog: device memory left after the
+        recipe's resident bytes, divided by the per-request decode-state
+        footprint, clamped to [1, MAX_BATCH_SLOTS]."""
+        free = device_bytes - self.recipe.nbytes(Tier.DEVICE)
+        per_slot = self.recipe.decode_slot_bytes(active_params)
+        return max(1, min(MAX_BATCH_SLOTS, free // per_slot))
+
+    def admit(self, request, budget: int) -> bool:
+        """Add ``request`` to the dynamic batch if a slot is free.  The
+        request starts stepping at the next boundary (:meth:`activate`)."""
+        if len(self.batch) >= budget:
+            return False
+        self.batch[request.request_id] = request
+        self.joining.add(request.request_id)
+        return True
+
+    def activate(self, only: Optional[Set[int]] = None) -> List[Any]:
+        """Boundary reached: newly admitted members begin stepping.
+
+        ``only`` restricts activation to a subset of the joining ids —
+        the sim runner uses it so a request admitted at time t can never
+        be activated at an earlier (lazily settled) boundary."""
+        rids = self.joining if only is None else \
+            (self.joining & set(only))
+        started = [self.batch[rid] for rid in rids if rid in self.batch]
+        self.joining -= set(rids)
+        return started
+
+    def step(self) -> List[Any]:
+        """Advance every ACTIVE member one decode step; pop & return the
+        requests that completed their unit budget."""
+        finished = []
+        for rid, req in list(self.batch.items()):
+            if rid in self.joining:
+                continue
+            req.steps_done += 1
+            if req.steps_done >= req.n_units:
+                del self.batch[rid]
+                finished.append(req)
+        return finished
+
+    def drain(self) -> List[Any]:
+        """Remove every unfinished member (eviction / spill / teardown)."""
+        out = list(self.batch.values())
+        self.batch.clear()
+        self.joining.clear()
+        return out
+
+    @property
+    def stepping(self) -> int:
+        """Members actually decoding (admitted minus still-joining)."""
+        return len(self.batch) - len(self.joining)
 
     # ------------------------------------------------------------------
     # Sim path: compute cost, update the cache accounting
@@ -135,6 +209,7 @@ class Library:
         """
         if not self.ready:
             return
+        self.drain()                # callers gate on an empty batch
         for e in self.recipe.elements:
             try:
                 self.cache.pin(e.key, False)
@@ -150,6 +225,7 @@ class Library:
         self.spills += 1
 
     def teardown(self) -> None:
+        self.drain()
         for e in self.recipe.elements:
             try:
                 self.cache.pin(e.key, False)

@@ -119,6 +119,25 @@ def optimal_batch_size(n_total: int, n_workers: int, *, infer_s: float,
     return best
 
 
+AGING_BOUND_DEFAULT = 8
+
+
+def derive_aging_bound(warm_s: float, cold_s: float, *, lo: int = 2,
+                       hi: int = 64) -> int:
+    """Aging bound from observed per-recipe service times.
+
+    A starved lane head tolerates being skipped while warm-routed younger
+    requests drain, because each skip costs at most one warm service time
+    but placing the head cold costs a full cold start.  The break-even
+    number of skips is the cold/warm service-time ratio; clamp it so a
+    pathological ratio can neither starve the head forever nor disable
+    backfill entirely.  Falls back to the static default without data.
+    """
+    if warm_s <= 0 or cold_s <= 0:
+        return AGING_BOUND_DEFAULT
+    return max(lo, min(hi, round(cold_s / warm_s)))
+
+
 @dataclass(frozen=True)
 class WarmPoolPolicy:
     """Proactive demand-driven context replication (beyond-paper §5.3.1).

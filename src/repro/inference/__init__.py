@@ -1,7 +1,9 @@
-"""Inference: batched engine + the Prompt-for-Fact application."""
+"""Inference: batched engine, streaming decoder + the PfF application."""
 from .engine import GenerationResult, InferenceEngine
 from .pff import (MAX_NEW, PROMPT_LEN, build_context_recipe, infer_claims,
                   sweep_accuracy)
+from .streaming import StreamingDecoder, make_pff_step_fn, stream_verdict
 
 __all__ = ["GenerationResult", "InferenceEngine", "MAX_NEW", "PROMPT_LEN",
-           "build_context_recipe", "infer_claims", "sweep_accuracy"]
+           "StreamingDecoder", "build_context_recipe", "infer_claims",
+           "make_pff_step_fn", "stream_verdict", "sweep_accuracy"]

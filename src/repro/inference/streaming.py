@@ -1,0 +1,137 @@
+"""Live continuous-batching decoder: re-formed padded batches per step.
+
+The LIVE leg of the request-stream redesign.  A library's dynamic batch
+changes membership between decode steps, so the device batch cannot be a
+fixed (B, S) array compiled once per task.  :class:`StreamingDecoder`
+keeps per-request token state on the host and, at EVERY step, re-forms
+the padded JAX batch for the current membership:
+
+* batch dim padded up to the next power of two;
+* sequence dim padded up to the next multiple of 8;
+
+so however requests churn, the number of distinct compiled shapes — and
+hence XLA recompiles — is O(log max_batch · max_len / 8), not O(steps).
+
+Decoding runs through the model's full-forward path (prompt + generated
+so far each step) with per-row logit gather at each request's own last
+position; causal attention makes right-padding inert, so the streamed
+greedy tokens are exactly what a per-request full-forward loop produces
+(asserted in tests/test_streaming_live.py).
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Sequence
+
+import jax
+import numpy as np
+
+from ..data.prompts import parse_verdict
+from ..data.tokenizer import PAD
+from ..models import model as M
+from .pff import PROMPT_LEN
+
+
+def _next_pow2(n: int) -> int:
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+def _round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+class StreamingDecoder:
+    """Greedy decoder over a membership-changing request batch."""
+
+    def __init__(self, cfg, params, tokenizer, template, *,
+                 prompt_len: int = PROMPT_LEN):
+        self.cfg = cfg
+        self.params = params
+        self.tokenizer = tokenizer
+        self.template = template
+        self.prompt_len = prompt_len
+        self._tokens: Dict[int, List[int]] = {}   # rid -> prompt+generated
+        self._prompt_end: Dict[int, int] = {}
+        self._fwd = jax.jit(
+            lambda p, toks: M.forward(cfg, p, {"tokens": toks}))
+        self._shapes: set = set()                 # compile-shape audit
+
+    # -- membership -----------------------------------------------------
+    def ensure(self, rid: int, claim) -> None:
+        """Admit ``rid``: tokenize its prompt (idempotent)."""
+        if rid in self._tokens:
+            return
+        ids = self.tokenizer.encode(
+            self.template.render(claim))[:self.prompt_len]
+        self._tokens[rid] = list(ids)
+        self._prompt_end[rid] = len(ids)
+
+    def finish(self, rid: int) -> List[int]:
+        """Release ``rid``'s state; returns its generated token ids."""
+        toks = self._tokens.pop(rid, [])
+        end = self._prompt_end.pop(rid, len(toks))
+        return toks[end:]
+
+    # -- the step -------------------------------------------------------
+    def step(self, rids: Sequence[int]) -> Dict[int, int]:
+        """One greedy decode step for the CURRENT membership.
+
+        Re-forms the padded (B, S) batch — B/S bucketed — runs the full
+        forward, gathers each row's logits at its own last position, and
+        appends the argmax token.  Returns {rid: new_token}."""
+        rids = list(rids)
+        if not rids:
+            return {}
+        seqs = [self._tokens[r] for r in rids]
+        lens = [len(s) for s in seqs]
+        B = _next_pow2(len(rids))
+        S = _round_up(max(lens), 8)
+        arr = np.full((B, S), PAD, dtype=np.int32)
+        for i, s in enumerate(seqs):
+            arr[i, :len(s)] = s
+        self._shapes.add((B, S))
+        logits = np.asarray(self._fwd(self.params, arr))
+        out: Dict[int, int] = {}
+        for i, rid in enumerate(rids):
+            nxt = int(np.argmax(logits[i, lens[i] - 1]))
+            self._tokens[rid].append(nxt)
+            out[rid] = nxt
+        return out
+
+    @property
+    def shape_buckets(self) -> int:
+        """Distinct (B, S) buckets seen — an upper bound on recompiles."""
+        return len(self._shapes)
+
+
+def make_pff_step_fn(prompt_len: int = PROMPT_LEN):
+    """Step function for :class:`~repro.cluster.LiveExecutor.step_fns`.
+
+    Lazily builds a :class:`StreamingDecoder` inside the library's
+    payloads (it belongs to the hosted context: it dies with a spill and
+    is rebuilt on re-materialisation) and advances the current members by
+    one token.  Request payloads are the claims to verify."""
+    def step_fn(payloads, members):
+        dec = payloads.get("_stream_decoder")
+        if dec is None:
+            engine = payloads["xla_executable"]
+            ci = payloads["context_inputs"]
+            dec = StreamingDecoder(engine.cfg, engine.params,
+                                   ci["tokenizer"], ci["template"],
+                                   prompt_len=prompt_len)
+            payloads["_stream_decoder"] = dec
+        for r in members:
+            dec.ensure(r.request_id, r.payload)
+        out = dec.step([r.request_id for r in members])
+        for r in members:
+            if r.steps_done + 1 >= r.n_units:    # last step: free state
+                dec.finish(r.request_id)
+        return out
+    return step_fn
+
+
+def stream_verdict(tokenizer, step_tokens: Iterable[int]) -> str:
+    """Decode one request's accumulated step outputs into a verdict."""
+    return parse_verdict(tokenizer.decode(list(step_tokens)))

@@ -3,11 +3,20 @@
 Runs the Prompt-for-Fact application through the REAL context-management
 stack on this host: a pool of simulated workers (sharing this container's
 device) is driven by the LiveExecutor; contexts are really materialised
-(imports, weights, jit) and really reused.  Reports per-mode throughput —
-the live analogue of the paper's pv2 vs pv4 comparison.
+(imports, weights, jit) and really reused.
 
-  PYTHONPATH=src python -m repro.launch.serve --claims 64 --batch 8 \
-      --mode pervasive --workers 3
+Two submission modes:
+
+* ``--stream`` (default) — the request-stream API: one request per claim
+  with a decode-step budget; resident libraries continuously admit
+  requests into their in-flight batch (the padded JAX batch is re-formed
+  between steps with bucketed shapes).  Reports throughput AND the
+  per-request latency distributions (queue wait, time-to-first-step).
+* ``--batch-tasks`` — the deprecated run-to-completion batch path (the
+  paper's original pv2/pv4 shape), kept as the comparison baseline.
+
+  PYTHONPATH=src python -m repro.launch.serve --claims 64 \
+      --mode pervasive --workers 3 --stream
 """
 from __future__ import annotations
 
@@ -15,59 +24,97 @@ import argparse
 import sys
 import time
 
-from repro.cluster import LiveExecutor, Scheduler, Worker
+from repro.cluster import (Application, LiveExecutor, Scheduler, Worker,
+                           format_latency)
 from repro.cluster.hardware import GPU_CATALOG
 from repro.configs import get_smoke_config
 from repro.core import MODES
 from repro.data import accuracy, claim_batches, generate_claims
-from repro.inference import build_context_recipe, infer_claims
+from repro.data.tokenizer import ByteTokenizer
+from repro.inference import (MAX_NEW, build_context_recipe, infer_claims,
+                             make_pff_step_fn, stream_verdict)
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="smollm2-1.7b")
     ap.add_argument("--claims", type=int, default=64)
-    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=8,
+                    help="claims per task in --batch-tasks mode")
     ap.add_argument("--workers", type=int, default=2)
     ap.add_argument("--mode", default="pervasive",
                     choices=sorted(MODES))
     ap.add_argument("--template", default="with_evidence")
+    group = ap.add_mutually_exclusive_group()
+    group.add_argument("--stream", action="store_true", default=True,
+                       help="request-stream API with continuous batching "
+                            "(default)")
+    group.add_argument("--batch-tasks", dest="stream",
+                       action="store_false",
+                       help="deprecated run-to-completion batch tasks")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch)
     claims = generate_claims(args.claims, seed=1)
     recipe = build_context_recipe(cfg, args.template)
     mode = MODES[args.mode]
+    if args.stream and not mode.state_resident:
+        # continuous batching presupposes a resident context; the
+        # partial/naive baselines only exist as run-to-completion tasks
+        print(f"[serve] mode={args.mode} is not state-resident; "
+              f"falling back to --batch-tasks")
+        args.stream = False
 
     sched = Scheduler()
-    key = sched.register_context(recipe)
-    for w in range(args.workers):
+    app = Application(sched, default_mode=mode)
+    key = app.register(recipe)
+    for _ in range(args.workers):
         sched.add_worker(Worker(GPU_CATALOG["NVIDIA A10"], zone="z0"))
-    batches = claim_batches(claims, args.batch)
-    from repro.cluster.scheduler import Task
-    for b in batches:
-        sched.submit(Task(key, len(b), mode, payload=b))
 
-    ex = LiveExecutor(sched, {key: infer_claims})
     t0 = time.perf_counter()
-    ex.run()
+    if args.stream:
+        ex = LiveExecutor(sched, step_fns={key: make_pff_step_fn()})
+        for c in claims:
+            app.submit(key, decode_steps=MAX_NEW, payload=c,
+                       arrival_s=ex.now())
+        ex.run()
+        tok = ByteTokenizer(cfg.vocab_size)
+        preds = [stream_verdict(tok, ex.results[r.request_id])
+                 for r in app.requests]
+        n_done = len(preds)
+    else:
+        import warnings
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            from repro.cluster.scheduler import Task
+            for b in claim_batches(claims, args.batch):
+                sched.submit(Task(key, len(b), mode, payload=b))
+        ex = LiveExecutor(sched, {key: infer_claims})
+        ex.run()
+        preds = []
+        for tid in sorted(ex.results):
+            preds.extend(ex.results[tid])
+        n_done = len(preds)
     dt = time.perf_counter() - t0
 
-    preds = []
-    for tid in sorted(ex.results):
-        preds.extend(ex.results[tid])
     acc = accuracy(preds, claims)
     recs = sched.records
     cold = [r.exec_s for r in recs if not r.warm]
     warm = [r.exec_s for r in recs if r.warm]
-    print(f"[serve] mode={args.mode} workers={args.workers} "
-          f"claims={len(claims)} batch={args.batch}")
-    print(f"  wall {dt:.2f}s  throughput {len(claims)/dt:.1f} inf/s  "
+    api = "stream" if args.stream else "batch-tasks"
+    print(f"[serve] api={api} mode={args.mode} workers={args.workers} "
+          f"claims={len(claims)}")
+    print(f"  wall {dt:.2f}s  throughput {n_done/dt:.1f} inf/s  "
           f"accuracy {acc:.3f}")
     if cold:
-        print(f"  cold tasks: {len(cold)}  mean {sum(cold)/len(cold):.2f}s")
+        print(f"  cold requests: {len(cold)}  "
+              f"mean {sum(cold)/len(cold):.2f}s")
     if warm:
-        print(f"  warm tasks: {len(warm)}  mean {sum(warm)/len(warm):.3f}s")
+        print(f"  warm requests: {len(warm)}  "
+              f"mean {sum(warm)/len(warm):.3f}s")
+    if args.stream:
+        print("  " + format_latency(app.latency_summary()))
+        print(f"  admissions into live batches: {sched.admissions}")
     return 0
 
 

@@ -1,0 +1,420 @@
+"""Request-stream API + continuous batching: invariants and satellites.
+
+Covers the redesign's contract: slot budgets are never exceeded, no
+request starves past the aging bound, eviction mid-batch requeues only
+unfinished requests, sim and live executors agree on completed-work
+accounting, aging_bound="auto" derives from observed service times, and
+the factory's default eviction priority is spill-aware.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core import (AGING_BOUND_DEFAULT, ContextElement, ContextRecipe,
+                        PERVASIVE, Tier, derive_aging_bound)
+from repro.cluster import (Application, GPU_CATALOG, LiveExecutor, Request,
+                           Scheduler, SimExecutor, Worker, latency_summary,
+                           make_sim)
+from repro.configs import get_config
+
+from benchmarks.common import BIG_AP, BIG_RECIPE, MIXED_SHAPE
+
+CFG = get_config("smollm2-1.7b")
+AP = CFG.n_active_params()
+from repro.core import model_context_recipe
+RECIPE = model_context_recipe(CFG, include_compile=False)
+
+A10 = GPU_CATALOG["NVIDIA A10"]
+
+
+def tiny_live_recipe(name="stream::tiny"):
+    """A context whose loaders really run but cost nothing (live tests)."""
+    return ContextRecipe(name, (
+        ContextElement("deps", nbytes_disk=1000, nbytes_host=100,
+                       version="t", loader=lambda: {"ok": True}),
+        ContextElement("weights", nbytes_disk=1000, nbytes_host=100,
+                       version="t", loader=lambda: object()),
+    ))
+
+
+class TestRequestModel:
+    def test_task_shim_is_exclusive_request(self):
+        from repro.cluster.scheduler import Task
+        with pytest.warns(DeprecationWarning):
+            t = Task("k", 25, PERVASIVE, payload="p")
+        assert isinstance(t, Request)
+        assert t.exclusive and t.n_inferences == 25 and t.n_units == 25
+        assert t.task_id == t.request_id
+
+    def test_submit_sweep_expands_to_exclusive_requests(self):
+        sched = Scheduler()
+        key = sched.register_context(RECIPE)
+        with pytest.warns(DeprecationWarning):
+            n = sched.submit_sweep(key, 1_000, 300, PERVASIVE)
+        assert n == 4
+        q = sched.queue
+        assert [r.n_units for r in q] == [300, 300, 300, 100]
+        assert all(r.exclusive for r in q)
+
+    def test_prompt_units_count_as_work(self):
+        r = Request("k", decode_steps=8, prompt_units=2)
+        assert r.n_units == 10
+
+    def test_bad_aging_bound_rejected(self):
+        with pytest.raises(ValueError):
+            Scheduler(aging_bound=3.5)
+
+    def test_stream_requests_must_be_state_resident(self):
+        from repro.core import PARTIAL
+        sched = Scheduler()
+        key = sched.register_context(RECIPE)
+        with pytest.raises(ValueError, match="state-resident"):
+            sched.submit(Request(key, decode_steps=4, mode=PARTIAL))
+        # the run-to-completion baseline path still accepts any mode
+        sched.submit(Request(key, decode_steps=4, mode=PARTIAL,
+                             exclusive=True))
+
+    def test_joiner_never_activates_before_admission(self):
+        """Regression: a request admitted at time t must not be credited
+        with decode steps at lazily settled boundaries before t."""
+        sched, ex, fac = make_sim(devices=[A10])
+        app = Application(sched)
+        key = app.register(RECIPE, active_params=AP)
+        app.submit_stream(ex, [
+            dict(recipe_key=key, decode_steps=400, arrival_s=0.0),
+            dict(recipe_key=key, decode_steps=50, arrival_s=60.0),
+        ])
+        fac.reconcile(1)
+        ex.run()
+        recs = sorted(app.records(), key=lambda r: r.request_id)
+        late = recs[1]
+        assert late.joined
+        assert late.ttfs_s >= 0, "first step cannot predate arrival"
+        # 50 steps at the 2-member rate cannot finish faster than the
+        # batch-2 step time allows
+        step2 = A10.step_time(AP, 2)
+        assert late.t_end - late.t_arrival >= 50 * step2 - 1.0
+        assert sched.completed_inferences == 450
+
+
+class TestSlotBudget:
+    def test_budget_from_hardware_catalog(self):
+        w = Worker(A10)
+        lib = w.library_for(RECIPE)
+        budget = lib.slot_budget(w.device_bytes, AP)
+        titan = Worker(GPU_CATALOG["NVIDIA TITAN X (Pascal)"])
+        budget_titan = titan.library_for(RECIPE).slot_budget(
+            titan.device_bytes, AP)
+        assert budget > budget_titan > 0, \
+            "slot budgets must track device memory"
+
+    def test_explicit_slot_bytes_override(self):
+        r = dataclasses.replace(RECIPE, fn_name="infer::fat-kv",
+                                slot_bytes=5_000_000_000)
+        w = Worker(A10)
+        lib = w.library_for(r)
+        assert lib.slot_budget(w.device_bytes, AP) == 4
+
+    def test_budget_derated_by_co_resident_libraries(self):
+        """A multi-context worker must not hand a stream the device
+        bytes its co-resident libraries occupy."""
+        w = Worker(A10, shape=MIXED_SHAPE)       # 24 GB device
+        # big recipe resident on device: 16 GB of the 24 are taken
+        lib_big = w.library_for(BIG_RECIPE)
+        lib_big.materialize_cost(w.device, fetch_bw=float("inf"))
+        lib_small = w.library_for(RECIPE)
+        alone = lib_small.slot_budget(w.device_bytes, AP)
+        shared = w.slot_budget(RECIPE.key, AP)
+        assert shared < alone, \
+            "co-resident device bytes must shrink the slot budget"
+
+    def test_slot_budget_never_exceeded_during_run(self):
+        """Invariant: at EVERY event, every dynamic batch fits its
+        budget (checked stepwise through the DES)."""
+        fat = dataclasses.replace(RECIPE, fn_name="infer::fat-kv",
+                                  slot_bytes=5_000_000_000)   # 4 slots/A10
+        sched, ex, fac = make_sim(devices=[A10] * 2)
+        app = Application(sched)
+        key = app.register(fat, active_params=AP)
+        specs = [dict(recipe_key=key, decode_steps=3 + (i % 7),
+                      arrival_s=0.05 * i) for i in range(60)]
+        app.submit_stream(ex, specs)
+        fac.reconcile(2)
+        ex.pump()
+        while ex.loop.step():
+            for w in sched.workers.values():
+                for lib in w.libraries.values():
+                    assert len(lib.batch) <= lib.slot_budget(
+                        w.device_bytes, AP)
+        assert sched.completed_inferences == sum(
+            s["decode_steps"] for s in specs)
+        assert sched.admissions > 0
+
+    def test_membership_changes_between_steps(self):
+        """A request admitted mid-flight joins the SAME batch (no new
+        cold start) and both finish."""
+        sched, ex, fac = make_sim(devices=[A10])
+        app = Application(sched)
+        key = app.register(RECIPE, active_params=AP)
+        app.submit_stream(ex, [
+            dict(recipe_key=key, decode_steps=200, arrival_s=0.0),
+            dict(recipe_key=key, decode_steps=10, arrival_s=40.0),
+        ])
+        fac.reconcile(1)
+        ex.run()
+        recs = sorted(app.records(), key=lambda r: r.request_id)
+        assert len(recs) == 2
+        assert recs[1].joined and recs[1].warm, \
+            "the late request must be admitted, not cold-started"
+        assert sched.completed_inferences == 210
+        # joining mid-batch: its first step lands shortly after arrival,
+        # not after the long request's 200 steps
+        assert recs[1].ttfs_s < 30.0
+
+
+class TestConcurrentWorker:
+    def test_never_founds_second_batch_for_same_recipe(self):
+        """A concurrency-2 worker stays idle-capable while its stream
+        batch runs; later requests must JOIN that batch, not found a
+        second one on the same library."""
+        from repro.core import WorkerShape
+        shape = WorkerShape(cores=4, memory_gb=10, disk_gb=70, gpus=2,
+                            concurrency=2)
+        sched, ex, fac = make_sim(devices=[A10], worker_shape=shape)
+        app = Application(sched)
+        key = app.register(RECIPE, active_params=AP)
+        for _ in range(6):
+            app.submit(key, decode_steps=12)
+        fac.reconcile(1)
+        ex.run()
+        assert sched.completed_inferences == 72
+        assert len(sched.records) == 6
+        assert sum(1 for r in sched.records if not r.joined) == 1, \
+            "exactly one founding member"
+
+
+class TestNoStarvation:
+    def _stream_world(self, aging_bound=2):
+        sched = Scheduler(aging_bound=aging_bound)
+        k_small = sched.register_context(RECIPE)
+        k_big = sched.register_context(BIG_RECIPE)
+        w = Worker(A10, shape=MIXED_SHAPE)
+        sched.add_worker(w)
+        return sched, k_small, k_big, w
+
+    def test_aged_head_blocks_further_admissions(self):
+        """A starved exclusive head reserves even a NEVER-IDLE stream
+        worker: younger stream requests stop being admitted once the
+        head ages out, so the batch drains and the head lands."""
+        sched, k_small, k_big, w = self._stream_world(aging_bound=2)
+        # founding stream member, materialised and decoding
+        r0 = Request(k_small, decode_steps=100, active_params=AP)
+        sched.submit(r0)
+        a0 = sched.route()
+        assert a0 is not None and not a0.join
+        sched.on_start(a0)
+        w.libraries[k_small].materialize_cost(w.device,
+                                              fetch_bw=float("inf"))
+        sched.on_staged(a0)
+        # an exclusive big request that cannot place (worker busy)
+        big = Request(k_big, decode_steps=10, active_params=BIG_AP,
+                      exclusive=True)
+        sched.submit(big)
+        # younger stream requests keep arriving and joining...
+        joined = 0
+        for i in range(5):
+            sched.submit(Request(k_small, decode_steps=10,
+                                 active_params=AP))
+            a = sched.route()
+            if a is None:
+                break
+            assert a.join
+            sched.on_start(a)
+            joined += 1
+        # ...until the big head hit its bound and reserved the worker
+        assert joined == sched.aging_bound == big.skipped
+        assert sched.route() is None, \
+            "reserved worker must admit no younger request"
+
+    def test_starved_head_lands_once_batch_drains(self):
+        sched, k_small, k_big, w = self._stream_world(aging_bound=1)
+        r0 = Request(k_small, decode_steps=5, active_params=AP)
+        sched.submit(r0)
+        a0 = sched.route()
+        sched.on_start(a0)
+        w.libraries[k_small].materialize_cost(w.device,
+                                              fetch_bw=float("inf"))
+        sched.on_staged(a0)
+        big = Request(k_big, decode_steps=10, active_params=BIG_AP,
+                      exclusive=True)
+        sched.submit(big)
+        sched.submit(Request(k_small, decode_steps=5, active_params=AP))
+        a1 = sched.route()                  # ages the big head to bound
+        sched.on_start(a1)
+        assert big.skipped == 1
+        assert sched.route() is None
+        # batch drains: members complete, stream closes, worker idles
+        lib = w.libraries[k_small]
+        lib.activate()
+        for _ in range(5):
+            done = lib.step()
+        for r in done:
+            pass
+        for rid, a in ((r0.request_id, a0), (a1.request.request_id, a1)):
+            sched.on_complete(a, 0.0, 1.0)
+        sched.close_stream(w.worker_id, k_small)
+        a_big = sched.route()
+        assert a_big is not None and a_big.request is big
+
+
+class TestEvictionMidBatch:
+    def test_requeues_only_unfinished(self):
+        sched, ex, fac = make_sim(devices=[A10])
+        app = Application(sched)
+        key = app.register(RECIPE, active_params=AP)
+        for steps in (4, 40, 40):
+            app.submit(key, decode_steps=steps)
+        fac.reconcile(1)
+        ex.pump()
+        ex.loop.run(stop=lambda: sched.completed_inferences > 0)
+        assert sched.completed_inferences == 4, "short member finished"
+        assert len(sched.records) == 1
+        wid = next(iter(sched.workers))
+        requeued = sched.on_evict(wid, now=ex.loop.now)
+        assert len(requeued) == 2, "only unfinished members requeue"
+        assert all(r.steps_done == 0 and r.t_first_step is None
+                   for r in requeued)
+        assert sched.evicted_tasks == 2
+        assert len(sched.records) == 1, "finished member keeps its record"
+        fac.reconcile(1)                    # replacement worker joins
+        ex.run()
+        assert sched.completed_inferences == 84
+        assert len(sched.records) == 3
+        late = [r for r in sched.records if r.attempts > 0]
+        assert len(late) == 2
+
+
+class TestSimLiveAgreement:
+    def test_completed_work_accounting_matches(self):
+        """Same request multiset through both executors: identical
+        completed-work totals, and both report per-request latency."""
+        steps = [3, 5, 7, 2, 6]
+        # -- sim --------------------------------------------------------
+        sim_recipe = tiny_live_recipe("agree::sim")
+        sched_s, ex_s, fac_s = make_sim(devices=[A10] * 2)
+        app_s = Application(sched_s)
+        key_s = app_s.register(sim_recipe, active_params=AP)
+        for d in steps:
+            app_s.submit(key_s, decode_steps=d)
+        fac_s.reconcile(2)
+        ex_s.run()
+        # -- live -------------------------------------------------------
+        live_recipe = tiny_live_recipe("agree::live")
+        sched_l = Scheduler()
+        app_l = Application(sched_l)
+        key_l = app_l.register(live_recipe, active_params=AP)
+        for _ in range(2):
+            sched_l.add_worker(Worker(A10))
+        for d in steps:
+            app_l.submit(key_l, decode_steps=d)
+        ex_l = LiveExecutor(sched_l, step_fns={
+            key_l: lambda payloads, members: {m.request_id: 1
+                                              for m in members}})
+        ex_l.run()
+        # -- agreement --------------------------------------------------
+        total = sum(steps)
+        assert sched_s.completed_inferences == total
+        assert sched_l.completed_inferences == total
+        for app in (app_s, app_l):
+            recs = app.records()
+            assert len(recs) == len(steps)
+            assert sorted(r.n_units for r in recs) == sorted(steps)
+            assert all(r.queue_wait_s >= 0 for r in recs)
+            assert all(r.ttfs_s >= r.queue_wait_s for r in recs)
+            summary = latency_summary(recs)
+            assert summary["n"] == len(steps)
+            assert summary["ttfs_p95_s"] >= 0
+        # live step outputs: one fragment per decode step
+        for r in app_l.requests:
+            assert len(ex_l.results[r.request_id]) == r.n_units
+
+
+class TestAgingAuto:
+    def test_auto_falls_back_without_data(self):
+        sched = Scheduler(aging_bound="auto")
+        key = sched.register_context(RECIPE)
+        assert sched.aging_bound_for(key) == AGING_BOUND_DEFAULT
+
+    def test_auto_tracks_observed_ratio(self):
+        sched = Scheduler(aging_bound="auto")
+        key = sched.register_context(RECIPE)
+        # observed: warm requests ~1s, cold starts ~55s
+        sched._service[key] = [10.0, 10, 550.0, 10]
+        assert sched.aging_bound_for(key) == 55
+        # pathological ratios stay clamped
+        sched._service[key] = [1.0, 1, 1000.0, 1]
+        assert sched.aging_bound_for(key) == 64
+        sched._service[key] = [10.0, 1, 1.0, 1]
+        assert sched.aging_bound_for(key) == 2
+
+    def test_derive_aging_bound_helper(self):
+        assert derive_aging_bound(1.0, 8.0) == 8
+        assert derive_aging_bound(0.0, 8.0) == AGING_BOUND_DEFAULT
+        assert derive_aging_bound(1.0, 1e9, hi=64) == 64
+
+    def test_service_stats_populated_by_completions(self):
+        sched, ex, fac = make_sim(devices=[A10] * 2,
+                                  aging_bound="auto")
+        app = Application(sched)
+        key = app.register(RECIPE, active_params=AP)
+        for i in range(6):
+            app.submit(key, decode_steps=20)
+        fac.reconcile(2)
+        ex.run()
+        assert sched.completed_inferences == 120
+        st = sched._service[key]
+        assert st[1] > 0 and st[3] > 0, "warm AND cold observed"
+        bound = sched.aging_bound_for(key)
+        assert 2 <= bound <= 64
+
+    def test_auto_sweep_completes(self):
+        sched, ex, fac = make_sim(aging_bound="auto")
+        key = sched.register_context(RECIPE)
+        with pytest.warns(DeprecationWarning):
+            sched.submit_sweep(key, 2_000, 100, PERVASIVE,
+                               active_params=AP)
+        fac.reconcile(4)
+        ex.run()
+        assert sched.completed_inferences == 2_000
+
+
+class TestSpillAwareEviction:
+    def _warm(self, sched, w, recipe, key):
+        lib = w.library_for(recipe)
+        lib.materialize_cost(w.device, fetch_bw=float("inf"))
+        sched.registry.mark_ready(key, w.worker_id)
+
+    def test_default_priority_prefers_replicated_hosts(self):
+        other = dataclasses.replace(RECIPE, fn_name="infer::other")
+        sched, ex, fac = make_sim(devices=[A10] * 3)
+        k_sole = sched.register_context(RECIPE)
+        k_repl = sched.register_context(other)
+        fac.reconcile(3)
+        w0, w1, w2 = sched.workers.values()
+        self._warm(sched, w0, RECIPE, k_sole)      # the ONLY copy
+        self._warm(sched, w1, other, k_repl)       # replicated on w1+w2
+        self._warm(sched, w2, other, k_repl)
+        fac.reconcile(2)
+        assert w0.worker_id in sched.workers, \
+            "the sole warm copy must be reclaimed last"
+        assert sched.registry.replication(k_repl) == 1, \
+            "the replicated recipe lost exactly one of its copies"
+
+    def test_workers_hosting_nothing_evicted_first(self):
+        sched, ex, fac = make_sim(devices=[A10] * 2)
+        key = sched.register_context(RECIPE)
+        fac.reconcile(2)
+        w0, w1 = sched.workers.values()
+        self._warm(sched, w0, RECIPE, key)
+        fac.reconcile(1)
+        assert list(sched.workers.values()) == [w0]
