@@ -25,12 +25,16 @@ def main(argv=None) -> int:
     from . import (bench_table1_hardware, bench_fig4_scaling_efforts,
                    bench_fig5_table2_task_times, bench_fig6_busy_cluster,
                    bench_fig7_resilience, bench_claims, bench_roofline,
-                   bench_batch_policy, bench_continuous_batching)
+                   bench_batch_policy, bench_context_plane,
+                   bench_continuous_batching)
 
     t0 = time.time()
     if args.smoke:
         bench_table1_hardware.main()
         bench_continuous_batching.main(n_requests=120, n_workers=8)
+        # asserts plan/executed byte-accounting equality and the
+        # budgeted-vs-idle staging-makespan criterion
+        bench_context_plane.main(smoke=True)
         bench_roofline.main()
         print(f"\nsmoke benchmarks done in {time.time()-t0:.1f}s")
         return 0
@@ -46,6 +50,7 @@ def main(argv=None) -> int:
     bench_batch_policy.main(n_total)
     bench_batch_policy.main_mixed()
     bench_continuous_batching.main()
+    bench_context_plane.main()
     bench_roofline.main()
     print(f"\nall benchmarks done in {time.time()-t0:.1f}s")
     return 0

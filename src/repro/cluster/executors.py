@@ -25,14 +25,72 @@ from __future__ import annotations
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
-from ..core import (ContextMode, NAIVE, PARTIAL, PERVASIVE, Tier,
-                    WarmPoolPolicy)
+from ..core import (ContextMode, NAIVE, OpKind, PARTIAL, PERVASIVE,
+                    PlacementPlan, PlanOp, Tier, WarmPoolPolicy)
 from .events import EventLoop
 from .hardware import ClusterSpec
 from .scheduler import Assignment, Scheduler
 from .worker import Worker
 
 _EPS = 1e-9
+
+
+class _PlanOpExecution:
+    """The ONE plan-op execution path both executors share.
+
+    The context plane compiles intents into :class:`PlacementPlan` ops;
+    this mixin walks the ops, makes worker-side room (authoritative
+    spills), and feeds the op lifecycle back to the plane.  Only
+    :meth:`_materialize_op` differs per backend — the sim charges the
+    calibrated staging cost on the event loop, live mode really runs the
+    loaders — which is exactly the dual-backend discipline the scheduler
+    already follows.
+    """
+
+    def execute_plan(self, plan: PlacementPlan) -> None:
+        plane = self.sched.plane
+        for op in plan.ops:
+            if op.kind in (OpKind.FETCH, OpKind.PEER_COPY, OpKind.PROMOTE):
+                self._execute_acquire_op(op)
+            elif op.kind is OpKind.SPILL:
+                # both a Release compilation's demotion and an acquire
+                # op's preview; executing the preview up front is what
+                # make_room would do anyway (and make_room still backstops
+                # any spill the preview missed)
+                self._execute_spill_op(op)
+            elif op.kind is OpKind.EVICT:
+                plane.note_released(op.recipe_key, op.worker_id)
+
+    def _execute_spill_op(self, op: PlanOp) -> None:
+        sched = self.sched
+        w = sched.workers.get(op.worker_id)
+        if w is None:
+            return
+        lib = w.libraries.get(op.recipe_key)
+        if lib is None or not lib.ready \
+                or w.running_by_recipe.get(op.recipe_key, 0) > 0:
+            return                      # gone, already spilled, or busy
+        lib.spill()
+        sched.plane.note_spilled(op.recipe_key, op.worker_id)
+        sched.spilled_libraries += 1
+
+    def _execute_acquire_op(self, op: PlanOp) -> None:
+        sched = self.sched
+        plane = sched.plane
+        w = sched.workers.get(op.worker_id)
+        if w is None or not w.idle or w.has_ready(op.recipe_key):
+            plane.op_aborted(op)        # pool moved under the plan
+            return
+        recipe = plane.registry.recipes[op.recipe_key]
+        for k in w.make_room(recipe):
+            plane.note_spilled(k, w.worker_id)
+            sched.spilled_libraries += 1
+        w.staging = True
+        plane.op_started(op)
+        self._materialize_op(op, w, recipe)
+
+    def _materialize_op(self, op: PlanOp, w: Worker, recipe) -> None:
+        raise NotImplementedError
 
 
 class _StreamRun:
@@ -183,7 +241,7 @@ class _StreamRun:
             self._reprice()
 
 
-class SimExecutor:
+class SimExecutor(_PlanOpExecution):
     """Discrete-event executor with the calibrated cluster time model.
 
     ``prestage=True`` enables proactive spanning-tree context distribution
@@ -202,6 +260,7 @@ class SimExecutor:
                  warm_pool: Optional[WarmPoolPolicy] = None):
         self.sched = scheduler
         self.loop = loop or EventLoop()
+        scheduler.clock = lambda: self.loop.now
         self.cluster: ClusterSpec = scheduler.cluster
         self.prestage_enabled = prestage
         self.fanout_cap = fanout_cap
@@ -210,6 +269,7 @@ class SimExecutor:
         self._fs_streams = 0
         self._peer_streams: Dict[str, int] = {}   # outbound per source
         self._streams: Dict[Tuple[str, str], _StreamRun] = {}
+        self._budget_retry = None       # pending deferred-replication timer
         # arrivals scheduled on the loop but not yet submitted
         # (Application.submit_stream); keeps run() from stopping early
         self.pending_arrivals = 0
@@ -235,33 +295,38 @@ class SimExecutor:
                    and w.can_host(recipe)]
         if not targets or not sources:
             return 0
+        plane = self.sched.plane
         plan = plan_spanning_tree(recipe.transfer_bytes, sources, targets,
                                   fanout_cap=self.fanout_cap,
                                   t0=self.loop.now)
+        zones = {w.worker_id: w.zone for w in self.sched.workers.values()}
         for edge in plan.edges:
             w = self.sched.workers.get(edge.dst)
             if w is None:
                 continue
             w.staging = True
-            reg.mark_staging(recipe_key, edge.dst)
+            plane.note_staging(recipe_key, edge.dst)
 
-            def arrive(wid=edge.dst):
+            def arrive(wid=edge.dst, src=edge.src):
                 w = self.sched.workers.get(wid)
                 if w is None:
                     return                      # evicted while in flight
                 for k in w.make_room(recipe):
-                    reg.mark_spilled(k, wid)
+                    plane.note_spilled(k, wid)
                     self.sched.spilled_libraries += 1
                 lib = w.library_for(recipe)
                 cost = lib.materialize_cost(w.device, already_local=False,
                                             fetch_bw=float("inf"))
+                # the tree edge's bytes landed: meter them per zone pair
+                plane.record_transfer(recipe_key, zones.get(src, w.zone),
+                                      w.zone, cost.fetch_bytes)
 
                 def ready_cb(wid=wid):
                     w = self.sched.workers.get(wid)
                     if w is None:
                         return
                     w.staging = False
-                    reg.mark_ready(recipe_key, wid)
+                    plane.note_ready(recipe_key, wid)
                     self.pump()
 
                 self.loop.after(cost.total_s, ready_cb)
@@ -271,50 +336,54 @@ class SimExecutor:
 
     # -- warm-pool replication (demand-driven, beyond prestage) ------------
     def _apply_warm_pool(self) -> int:
-        """Stage hot recipes onto leftover idle workers per the policy."""
+        """Compile Replicate intents (recovery + policy) through the
+        context plane and execute the budget-admitted ops.  Intents the
+        budget window deferred are retried — not dropped — once the
+        window can have slid, even if no other event re-pumps first."""
         if self.warm_pool is None:
             return 0
-        plan = self.warm_pool.plan(self.sched)
-        for key, wid in plan:
-            self._stage_replica(key, wid)
-        return len(plan)
+        plane = self.sched.plane
+        view = self.sched.view(now=self.loop.now)
+        intents = list(plane.recovery_intents(view))
+        intents += self.warm_pool.intents(view)
+        if not intents:
+            return 0
+        plan = plane.compile(intents, view)
+        plane.commit(plan, now=view.now)
+        self.execute_plan(plan)
+        if any(d.retriable for d in plan.deferred) \
+                and self._budget_retry is None:
+            def retry():
+                self._budget_retry = None
+                self.pump()
+            self._budget_retry = self.loop.after(
+                plane.budget.window_s / 2, retry)
+        return len(plan.acquire_ops())
 
-    def _stage_replica(self, recipe_key: str, wid: str) -> None:
-        w = self.sched.workers.get(wid)
-        if w is None or not w.idle:
-            return
-        reg = self.sched.registry
-        recipe = reg.recipes[recipe_key]
-        for k in w.make_room(recipe):
-            reg.mark_spilled(k, wid)
-            self.sched.spilled_libraries += 1
-        w.staging = True
-        reg.mark_staging(recipe_key, wid)
+    # -- shared plan-op path: the sim's staging-time backend ---------------
+    def _materialize_op(self, op, w: Worker, recipe) -> None:
         lib = w.library_for(recipe)
-        src = None
-        if w.has_local(recipe):
+        if op.kind is OpKind.PROMOTE:
             fetch_bw = None                     # promotion only, no fetch
-        else:
-            src, cross = self.sched._pick_peer(recipe_key, w)
-            if src is not None:
-                base = (self.cluster.peer_bw_cross if cross
-                        else self.cluster.peer_bw_local)
-                fetch_bw = base / (self._peer_streams.get(src, 0) + 1)
-            else:
-                fetch_bw = self._fs_bw()
+        elif op.kind is OpKind.PEER_COPY:
+            base = (self.cluster.peer_bw_cross if op.cross_zone
+                    else self.cluster.peer_bw_local)
+            fetch_bw = base / (self._peer_streams.get(op.src_worker, 0) + 1)
+        else:                                   # FETCH via the shared fs
+            fetch_bw = self._fs_bw()
         cost = lib.materialize_cost(w.device, fetch_bw=fetch_bw)
         if cost.fetch_s > 0:
-            if src is not None:
-                self._take_peer_stream(src, cost.fetch_s)
+            if op.kind is OpKind.PEER_COPY:
+                self._take_peer_stream(op.src_worker, cost.fetch_s)
             else:
                 self._with_fs_stream(cost.fetch_s)
 
-        def ready_cb(wid=wid):
+        def ready_cb(wid=op.worker_id):
             w = self.sched.workers.get(wid)
             if w is None:
-                return                          # evicted while staging
+                return                          # evicted: plane refunded
             w.staging = False
-            reg.mark_ready(recipe_key, wid)
+            self.sched.plane.op_completed(op, moved_bytes=cost.fetch_bytes)
             self.pump()
 
         self.loop.after(cost.total_s, ready_cb)
@@ -367,6 +436,7 @@ class SimExecutor:
         else:
             fetch_bw = self._fs_bw()
         cost = lib.materialize_cost(w.device, fetch_bw=fetch_bw)
+        a.moved_bytes = cost.fetch_bytes    # plan/executed byte accounting
         if cost.fetch_s > 0:
             if a.peer_source is not None:
                 self._take_peer_stream(a.peer_source, cost.fetch_s)
@@ -443,8 +513,10 @@ class SimExecutor:
                 self.sched.on_staged(a)
 
         def complete():
-            if tid not in self.sched.running:
+            cur = self.sched.running.get(tid)
+            if cur is None or cur[1] != wid:
                 return                  # evicted mid-run; already requeued
+                                        # (and possibly re-dispatched)
             self.sched.on_complete(a, t0, self.loop.now,
                                    t_first_step=t0 + staging_s + step_s)
             self._post_exec(a)
@@ -463,7 +535,7 @@ class SimExecutor:
         return self.sched.makespan()
 
 
-class LiveExecutor:
+class LiveExecutor(_PlanOpExecution):
     """Synchronous wall-clock executor: contexts and requests really run.
 
     ``fns[recipe_key]`` is the bound function ``fn(payloads, payload)``
@@ -490,6 +562,7 @@ class LiveExecutor:
                  *, warm_pool: Optional[WarmPoolPolicy] = None,
                  step_fns: Optional[Dict[str, Callable[..., Any]]] = None):
         self.sched = scheduler
+        scheduler.clock = self.now
         self.fns = fns or {}
         self.step_fns = step_fns or {}
         self.warm_pool = warm_pool
@@ -504,26 +577,30 @@ class LiveExecutor:
     _now = now                          # deprecated alias
 
     def _apply_warm_pool(self) -> int:
-        """Materialise warm replicas for hot recipes on idle workers (the
-        same policy the sim exercises — here the loaders really run)."""
+        """Compile Replicate intents through the context plane and run the
+        SAME plan ops the sim executes — here the loaders really run."""
         if self.warm_pool is None:
             return 0
-        reg = self.sched.registry
-        plan = self.warm_pool.plan(self.sched)
-        for key, wid in plan:
-            w = self.sched.workers.get(wid)
-            if w is None or not w.idle:
-                continue
-            recipe = reg.recipes[key]
-            for k in w.make_room(recipe):
-                reg.mark_spilled(k, wid)
-                self.sched.spilled_libraries += 1
-            reg.mark_staging(key, wid)
-            lib = w.library_for(recipe)
-            if not lib.ready:
-                lib.materialize()
-            reg.mark_ready(key, wid)
-        return len(plan)
+        plane = self.sched.plane
+        view = self.sched.view(now=self.now())
+        intents = list(plane.recovery_intents(view))
+        intents += self.warm_pool.intents(view)
+        if not intents:
+            return 0
+        plan = plane.compile(intents, view)
+        plane.commit(plan, now=view.now)
+        self.execute_plan(plan)
+        return len(plan.acquire_ops())
+
+    # -- shared plan-op path: live staging really runs the loaders ---------
+    def _materialize_op(self, op, w: Worker, recipe) -> None:
+        lib = w.library_for(recipe)
+        if not lib.ready:
+            lib.materialize()
+        w.staging = False
+        # live loaders do not move the plan's network bytes (everything is
+        # on this container); account the op as priced
+        self.sched.plane.op_completed(op)
 
     # -- dispatch -------------------------------------------------------
     def _run_exclusive(self, a: Assignment) -> None:

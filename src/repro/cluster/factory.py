@@ -21,7 +21,7 @@ from __future__ import annotations
 import itertools
 from typing import Callable, Iterable, Iterator, List, Optional
 
-from ..core import (HostState, WarmPoolPolicy, WorkerShape,
+from ..core import (HostState, LinkBudget, WarmPoolPolicy, WorkerShape,
                     PAPER_WORKER_SHAPE)
 from .events import EventLoop
 from .executors import SimExecutor
@@ -31,9 +31,12 @@ from .traces import Trace
 from .worker import Worker
 
 
-def spill_aware_evict_priority(scheduler: Scheduler
-                               ) -> Callable[[Worker], tuple]:
+def spill_aware_evict_priority(view) -> Callable[[Worker], tuple]:
     """Registry-consulting eviction priority (ROADMAP: spill-aware).
+
+    A PURE function of a :class:`~repro.core.ClusterView` — anything
+    exposing a read-only ``registry`` works, so pre-plane callers that
+    pass the scheduler itself keep working.
 
     A worker's score is the minimum number of OTHER ready replicas over
     the recipes it currently hosts READY — the worker holding the last
@@ -41,8 +44,9 @@ def spill_aware_evict_priority(scheduler: Scheduler
     hosting nothing (or only recipes replicated elsewhere) goes first.
     Ties break toward the newest joiner (the seed policy).
     """
+    reg = view.registry
+
     def priority(w: Worker) -> tuple:
-        reg = scheduler.registry
         hosted = [k for k in w.libraries
                   if reg.state(k, w.worker_id) is HostState.READY]
         if not hosted:
@@ -65,10 +69,10 @@ class Factory:
         self._zone_counter = itertools.count()
         self.workers_per_zone = workers_per_zone
         self.worker_shape = worker_shape or PAPER_WORKER_SHAPE
-        # higher priority value = evicted first (default: spill-aware —
-        # reclaim workers whose contexts are replicated elsewhere)
-        self.evict_priority = evict_priority or \
-            spill_aware_evict_priority(scheduler)
+        # higher priority value = evicted first; None resolves to the
+        # spill-aware default over a fresh ClusterView at eviction time
+        # (reclaim workers whose contexts are replicated elsewhere)
+        self.evict_priority = evict_priority
 
     def _next_zone(self) -> str:
         return f"z{next(self._zone_counter) // self.workers_per_zone}"
@@ -87,8 +91,10 @@ class Factory:
                     self.ex.prestage(key)
             self.ex.pump()
         elif target < cur:
+            prio = self.evict_priority or \
+                spill_aware_evict_priority(self.sched.view(now))
             victims = sorted(self.sched.workers.values(),
-                             key=self.evict_priority, reverse=True)
+                             key=prio, reverse=True)
             for w in victims[:cur - target]:
                 self.sched.on_evict(w.worker_id, now)
             self.ex.pump()
@@ -108,9 +114,11 @@ def make_sim(devices: Optional[List[DeviceModel]] = None,
              worker_shape: Optional[WorkerShape] = None,
              backfill: bool = True, aging_bound=8,
              warm_pool: Optional[WarmPoolPolicy] = None,
+             link_budget: Optional[LinkBudget] = None,
              prestage: bool = False):
     """Returns (scheduler, executor, factory) wired together."""
-    sched = Scheduler(backfill=backfill, aging_bound=aging_bound)
+    sched = Scheduler(backfill=backfill, aging_bound=aging_bound,
+                      link_budget=link_budget)
     ex = SimExecutor(sched, prestage=prestage, warm_pool=warm_pool)
     devices = devices if devices is not None else paper_20gpu_pool()
     fac = Factory(sched, ex, devices, workers_per_zone=workers_per_zone,

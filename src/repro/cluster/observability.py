@@ -20,6 +20,7 @@ import math
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from ..core.plane import METER_FIELDS
 from .scheduler import RequestRecord, Scheduler
 
 
@@ -63,6 +64,41 @@ def format_latency(summary: Dict[str, float], label: str = "") -> str:
             f"p95 {summary['ttfs_p95_s']:.2f}s | "
             f"e2e p50 {summary['e2e_p50_s']:.2f}s "
             f"p95 {summary['e2e_p95_s']:.2f}s")
+
+
+def zone_byte_summary(plane) -> Dict[str, Dict[str, float]]:
+    """Per-zone context-transfer bytes from the plane's MOVED meters,
+    plus the plan/executed delta and deferral counters — the run-summary
+    view of the cross-zone budget's cost model."""
+    out: Dict[str, Dict[str, float]] = {}
+    planned = plane.planned.as_dict()
+    moved = plane.moved.as_dict()
+    empty = {f: 0 for f in METER_FIELDS}
+    for zone in sorted(set(planned) | set(moved)):
+        row = dict(empty, **moved.get(zone, {}))
+        row["planned_minus_moved"] = sum(
+            planned.get(zone, {}).get(f, 0) - row[f] for f in empty)
+        out[zone] = row
+    return out
+
+
+def format_zone_bytes(plane, label: str = "") -> str:
+    """One line per zone: in/out GB by link class, then plane counters."""
+    gb = 1e9
+    lines = [f"[zones{' ' + label if label else ''}] "
+             f"ops {plane.ops_completed}/{plane.ops_committed} completed, "
+             f"{plane.deferred_intents} budget deferral event(s) — each "
+             f"round a replica waits counts once"]
+    for zone, row in zone_byte_summary(plane).items():
+        lines.append(
+            f"  {zone}: in {row['in_local']/gb:.1f} GB local / "
+            f"{row['in_cross']/gb:.1f} GB cross / "
+            f"{row['in_fs']/gb:.1f} GB fs | out "
+            f"{row['out_local']/gb:.1f} GB local / "
+            f"{row['out_cross']/gb:.1f} GB cross"
+            + (f" | plan-exec delta {row['planned_minus_moved']/gb:.2f} GB"
+               if row["planned_minus_moved"] else ""))
+    return "\n".join(lines)
 
 
 @dataclass

@@ -12,12 +12,19 @@ still works: a task is simply an *exclusive* request that occupies its
 worker run-to-completion, which is also the baseline the benchmarks
 compare against.
 
-The :class:`Scheduler` stays *time-free*: it owns the ready lanes, the
-worker pool, the context registry, and all placement decisions, but never
-looks at a clock.  The executors (sim: discrete-event; live: wall clock)
-pump :meth:`route` and feed back :meth:`on_complete` / :meth:`on_evict`,
-so the paper's management layer — the contribution under test — is
-byte-for-byte identical in both backends.
+The :class:`Scheduler` stays *time-free* for placement ordering: it owns
+the ready lanes, the worker pool, and all placement decisions, but never
+orders events by a clock.  The executors (sim: discrete-event; live: wall
+clock) pump :meth:`route` and feed back :meth:`on_complete` /
+:meth:`on_evict`, so the paper's management layer — the contribution
+under test — is byte-for-byte identical in both backends.  (The one
+clock consumer is the context plane's sliding LINK-BUDGET window; the
+executors install their time source on :attr:`Scheduler.clock`.)
+
+Context operations are no longer hand-rolled here: cold placements
+compile an :class:`~repro.core.Acquire` intent through the
+:class:`~repro.core.ContextPlane` (see :mod:`repro.core.plane`), which
+prices the staging bytes per zone and owns every registry write.
 
 Routing policy (paper §5.1/§5.3.2, plus context-aware backfill and
 continuous admission):
@@ -49,18 +56,23 @@ as the baseline in benchmarks/bench_fig6_busy_cluster.py).
 from __future__ import annotations
 
 import itertools
+import math
 import warnings
 from collections import OrderedDict, deque
 from dataclasses import dataclass, field
-from typing import Any, Deque, Dict, List, Optional, Tuple, Union
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple, Union
 
-from ..core import (AGING_BOUND_DEFAULT, ContextRegistry, ContextRecipe,
-                    ContextMode, PERVASIVE, Peer, derive_aging_bound,
-                    pick_sources)
+from ..core import (AGING_BOUND_DEFAULT, Acquire, ClusterView, ContextPlane,
+                    ContextRecipe, ContextMode, LinkBudget, PERVASIVE,
+                    PlacementPlan, OpKind, derive_aging_bound)
 from .hardware import ClusterSpec, PAPER_CLUSTER, REF_ACTIVE_PARAMS
 from .worker import Worker
 
 _request_ids = itertools.count()
+
+# time constant of the per-recipe arrival-rate EWMA the warm-pool policy
+# reads (ClusterView.arrival_rate); ~the horizon of a staging decision
+ARRIVAL_EWMA_TAU_S = 30.0
 
 
 @dataclass
@@ -131,6 +143,10 @@ class Assignment:
     local_restage: bool = False       # cold, but promoted from local disk
     join: bool = False                # admitted into an in-flight batch
     t_dispatch: float = 0.0           # set by the executor at dispatch
+    # cold placements carry the context plane's compiled Acquire plan;
+    # peer_source/cross_zone/local_restage above are derived views of it
+    plan: Optional[PlacementPlan] = None
+    moved_bytes: int = 0              # measured fetch bytes (sim executor)
 
     @property
     def task(self) -> Request:        # deprecated alias
@@ -187,14 +203,21 @@ TaskRecord = RequestRecord            # deprecated alias
 class Scheduler:
     def __init__(self, cluster: ClusterSpec = PAPER_CLUSTER, *,
                  backfill: bool = True,
-                 aging_bound: Union[int, str] = AGING_BOUND_DEFAULT):
+                 aging_bound: Union[int, str] = AGING_BOUND_DEFAULT,
+                 link_budget: Optional[LinkBudget] = None):
         self.cluster = cluster
         self.backfill = backfill
         if aging_bound != "auto" and not isinstance(aging_bound, int):
             raise ValueError(f"aging_bound must be an int or 'auto', "
                              f"got {aging_bound!r}")
         self.aging_bound = aging_bound
-        self.registry = ContextRegistry()
+        # the context plane owns ALL registry writes; `registry` stays a
+        # public READ alias (the globally consistent residency view)
+        self.plane = ContextPlane(budget=link_budget)
+        self.registry = self.plane.registry
+        # placement ordering never reads a clock, but the plane's budget
+        # window does; executors install their time source here
+        self.clock: Callable[[], float] = lambda: 0.0
         # per-recipe FIFO lanes; global order recovered via request_id
         self.lanes: "OrderedDict[str, Deque[Request]]" = OrderedDict()
         self.workers: Dict[str, Worker] = {}
@@ -213,12 +236,36 @@ class Scheduler:
         # per-recipe observed service times: [warm_sum, warm_n, cold_sum,
         # cold_n] — feeds aging_bound="auto"
         self._service: Dict[str, List[float]] = {}
+        # per-recipe arrival EWMA: [last_arrival_s, rate_per_s]
+        self._arrivals: Dict[str, List[float]] = {}
 
     # ------------------------------------------------------------------
     # registration / submission
     # ------------------------------------------------------------------
     def register_context(self, recipe: ContextRecipe) -> str:
-        return self.registry.register(recipe)
+        return self.plane.register(recipe)
+
+    def view(self, now: Optional[float] = None) -> ClusterView:
+        """Read-only snapshot for the context plane / pure policies."""
+        demand: Dict[str, int] = {}
+        for key, lane in self.lanes.items():
+            demand[key] = demand.get(key, 0) + len(lane)
+        for req, _wid in self.running.values():
+            demand[req.recipe_key] = demand.get(req.recipe_key, 0) + 1
+        return ClusterView(
+            workers=self.workers, registry=self.registry, demand=demand,
+            arrival_rate={k: st[1] for k, st in self._arrivals.items()},
+            now=self.clock() if now is None else now)
+
+    def _note_arrival(self, key: str, t: float) -> None:
+        st = self._arrivals.get(key)
+        if st is None:
+            self._arrivals[key] = [t, 0.0]
+            return
+        dt = max(t - st[0], 1e-3)       # bursts at one instant: floor dt
+        alpha = 1.0 - math.exp(-dt / ARRIVAL_EWMA_TAU_S)
+        st[1] += alpha * (1.0 / dt - st[1])
+        st[0] = t
 
     def submit(self, request: Request) -> None:
         if not request.exclusive and not request.mode.state_resident:
@@ -231,6 +278,7 @@ class Scheduler:
                 "work as exclusive=True run-to-completion requests")
         self.lanes.setdefault(request.recipe_key, deque()).append(request)
         self.submitted += 1
+        self._note_arrival(request.recipe_key, request.arrival_s)
 
     def submit_sweep(self, recipe_key: str, n_total: int, batch: int,
                      mode: ContextMode = PERVASIVE,
@@ -288,7 +336,9 @@ class Scheduler:
         if worker is None:
             return []
         self.worker_events.append((now, len(self.workers)))
-        self.registry.drop_worker(worker_id)
+        # the plane refunds the worker's in-flight staging ops and leaves
+        # LOST tombstones it later turns into re-replication intents
+        self.plane.drop_worker(worker_id, now)
         victims = sorted((req for req, wid in self.running.values()
                           if wid == worker_id),
                          key=lambda r: r.request_id, reverse=True)
@@ -438,25 +488,31 @@ class Scheduler:
                               join=True)
         if warm:
             return Assignment(req, w, warm=True, peer_source=None)
-        recipe = self.registry.recipes[req.recipe_key]
-        if w.has_local(recipe):
+        if not req.mode.deps_cached and not req.mode.weights_cached:
+            # naive mode manages no context: nothing for the plane to plan
+            return Assignment(req, w, warm=False, peer_source=None)
+        # demand-critical placement: compile an Acquire intent.  The plane
+        # prices the staging bytes, picks the peer source (in-zone first)
+        # and previews the spills; Acquire is charged to the zone meters
+        # but never deferred — a routed request must not starve behind a
+        # byte budget (only proactive Replicate intents defer).
+        plan = self.plane.compile([Acquire(req.recipe_key, w.worker_id)],
+                                  self.view())
+        op = plan.acquire_op()
+        if op.kind is OpKind.PROMOTE:
             # spilled (or disk-cached) copy: promote locally, no fetch
             return Assignment(req, w, warm=False, peer_source=None,
-                              local_restage=True)
-        src, cross = self._pick_peer(req.recipe_key, w)
-        return Assignment(req, w, warm=False, peer_source=src,
-                          cross_zone=cross)
+                              local_restage=True, plan=plan)
+        return Assignment(req, w, warm=False, peer_source=op.src_worker,
+                          cross_zone=op.cross_zone, plan=plan)
 
     def _pick_peer(self, key: str, dst: Worker) -> Tuple[Optional[str], bool]:
-        ready = self.registry.ready_workers(key) - {dst.worker_id}
-        if not ready:
+        """DEPRECATED shim: peer-source choice now lives in the context
+        plane's Acquire compilation (kept one PR for external callers)."""
+        src = self.plane._pick_source(key, dst, self.view())
+        if src is None:
             return None, False
-        peers = [Peer(wid, self.workers[wid].zone) for wid in ready
-                 if wid in self.workers]
-        if not peers:
-            return None, False
-        chosen = pick_sources(peers, dst.zone, max_sources=1)[0]
-        return chosen.worker_id, chosen.zone != dst.zone
+        return src.worker_id, src.zone != dst.zone
 
     # ------------------------------------------------------------------
     # progress bookkeeping (executors call these)
@@ -480,23 +536,40 @@ class Scheduler:
             w.open_streams.add(key)
         if not assignment.warm:
             for k in w.make_room(recipe):       # spill, don't drop
-                self.registry.mark_spilled(k, w.worker_id)
+                self.plane.note_spilled(k, w.worker_id)
                 self.spilled_libraries += 1
             w.staging = True
-            self.registry.mark_staging(key, w.worker_id)
+            if assignment.plan is not None:
+                # charge the plan's priced bytes to the zone meters and
+                # the budget window, then open the staging op
+                self.plane.commit(assignment.plan,
+                                  now=assignment.t_dispatch)
+                self.plane.op_started(assignment.plan.acquire_op())
+            else:
+                self.plane.note_staging(key, w.worker_id)
 
     def on_staged(self, assignment: Assignment) -> None:
         w = assignment.worker
         w.staging = False
-        self.registry.mark_ready(assignment.request.recipe_key,
-                                 w.worker_id)
+        op = (assignment.plan.acquire_op() if assignment.plan is not None
+              else None)
+        if op is not None:
+            self.plane.op_completed(op, moved_bytes=assignment.moved_bytes
+                                    if assignment.moved_bytes else None)
+        else:
+            self.plane.note_ready(assignment.request.recipe_key,
+                                  w.worker_id)
 
     def on_complete(self, assignment: Assignment, t_start: float,
                     t_end: float,
                     t_first_step: Optional[float] = None) -> None:
         req, w = assignment.request, assignment.worker
-        if req.request_id not in self.running:
-            return                          # stale (worker evicted mid-run)
+        cur = self.running.get(req.request_id)
+        if cur is None or cur[1] != w.worker_id:
+            # stale: worker evicted mid-run — and possibly the request
+            # already re-dispatched elsewhere, which this event must not
+            # complete on the dead worker's behalf
+            return
         del self.running[req.request_id]
         key = req.recipe_key
         n = w.running_by_recipe.get(key, 0)

@@ -119,6 +119,26 @@ class Worker:
         reservable for an aged head it could eventually serve."""
         return self._fits([recipe])
 
+    def spill_preview(self, recipe: ContextRecipe) -> List[str]:
+        """Non-mutating preview of :meth:`make_room`: the recipe keys that
+        would spill to make ``recipe`` fully resident here.  The context
+        plane compiles these into advisory SPILL ops; execution still
+        calls :meth:`make_room` (authoritative)."""
+        spilled: List[str] = []
+        while True:
+            keep = [lib.recipe for k, lib in self.libraries.items()
+                    if lib.ready and k != recipe.key and k not in spilled]
+            if self._fits([recipe] + keep):
+                return spilled
+            victims = [k for k, lib in self.libraries.items()
+                       if lib.ready and k != recipe.key
+                       and k not in spilled
+                       and self.running_by_recipe.get(k, 0) == 0]
+            if not victims:
+                return spilled
+            spilled.append(min(victims,
+                               key=lambda k: self._last_used.get(k, -1)))
+
     def make_room(self, recipe: ContextRecipe) -> List[str]:
         """Spill idle resident libraries (LRU first) until ``recipe`` fits
         alongside what must stay.  Returns the spilled recipe keys, which

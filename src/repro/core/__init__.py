@@ -4,9 +4,12 @@ Layers:
   context.py   recipes, keys, tiers, materialised state
   cache.py     per-worker tiered byte-accounted LRU
   library.py   per-context hosting process (materialise once, invoke many)
-  registry.py  scheduler-side global residency view
+  registry.py  scheduler-side global residency view (raw state store)
+  plane.py     the context plane: declarative intents -> priced, budgeted
+               placement plans; the ONLY registry-writing module
   transfer.py  topology-aware spanning-tree peer distribution
-  policies.py  worker sizing, context modes, batch-size selection
+  policies.py  worker sizing, context modes, batch-size selection,
+               warm-pool intents (pure over a ClusterView)
 """
 from .context import (ContextElement, ContextRecipe, KV_BYTES_PER_PARAM,
                       MAX_BATCH_SLOTS, MaterializedContext, Tier,
@@ -15,6 +18,9 @@ from .context import (ContextElement, ContextRecipe, KV_BYTES_PER_PARAM,
 from .cache import CacheFullError, ContextCache
 from .library import Library, StagingCost
 from .registry import ContextRegistry, HostState
+from .plane import (Acquire, ClusterView, ContextPlane, DeferredIntent,
+                    Intent, LinkBudget, OpKind, PlacementPlan, PlanOp,
+                    Release, Replicate, ZoneMeters)
 from .transfer import (Peer, TransferEdge, TransferPlan, pick_sources,
                        plan_spanning_tree)
 from .policies import (AGING_BOUND_DEFAULT, MODES, NAIVE, PARTIAL, PERVASIVE,
@@ -24,14 +30,17 @@ from .policies import (AGING_BOUND_DEFAULT, MODES, NAIVE, PARTIAL, PERVASIVE,
                        worker_sizing)
 
 __all__ = [
-    "AGING_BOUND_DEFAULT", "CacheFullError", "ContextCache",
-    "ContextElement", "ContextMode", "ContextRecipe", "ContextRegistry",
-    "HostState", "KV_BYTES_PER_PARAM", "Library", "MAX_BATCH_SLOTS",
-    "MaterializedContext", "MODES", "NAIVE", "PARTIAL", "PERVASIVE",
-    "PAPER_TASK_SHAPE", "PAPER_WORKER_SHAPE", "Peer", "StagingCost", "Tier",
-    "TransferEdge", "TransferPlan", "WarmPoolPolicy", "WorkerShape",
-    "content_hash", "derive_aging_bound", "eviction_loss",
-    "expected_task_time", "model_context_recipe", "optimal_batch_size",
-    "partial_context_recipe", "pick_sources", "plan_spanning_tree",
-    "resident_footprint", "worker_sizing",
+    "AGING_BOUND_DEFAULT", "Acquire", "CacheFullError", "ClusterView",
+    "ContextCache", "ContextElement", "ContextMode", "ContextPlane",
+    "ContextRecipe", "ContextRegistry", "DeferredIntent", "HostState",
+    "Intent", "KV_BYTES_PER_PARAM", "Library", "LinkBudget",
+    "MAX_BATCH_SLOTS", "MaterializedContext", "MODES", "NAIVE", "OpKind",
+    "PARTIAL", "PERVASIVE", "PAPER_TASK_SHAPE", "PAPER_WORKER_SHAPE",
+    "Peer", "PlacementPlan", "PlanOp", "Release", "Replicate",
+    "StagingCost", "Tier", "TransferEdge", "TransferPlan",
+    "WarmPoolPolicy", "WorkerShape", "ZoneMeters", "content_hash",
+    "derive_aging_bound", "eviction_loss", "expected_task_time",
+    "model_context_recipe", "optimal_batch_size", "partial_context_recipe",
+    "pick_sources", "plan_spanning_tree", "resident_footprint",
+    "worker_sizing",
 ]

@@ -84,6 +84,15 @@ class ContextCache:
     def keys(self) -> Set[str]:
         return set(self._entries)
 
+    def missing_fetch_bytes(self, elements) -> int:
+        """Network bytes a staging of ``elements`` would have to fetch:
+        the packed (disk) size of every element not resident at any tier.
+        This is the pricing primitive the context plane uses, and by
+        construction it equals the bytes :meth:`Library.materialize_cost`
+        charges to its fetch phase against this cache."""
+        return sum(e.nbytes_disk for e in elements
+                   if e.key not in self._entries)
+
     # -- mutation --------------------------------------------------------
     def _bytes_at(self, element: ContextElement, tier: Tier,
                   at: Tier) -> int:

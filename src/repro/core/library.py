@@ -27,11 +27,18 @@ from .context import (ContextRecipe, MAX_BATCH_SLOTS, MaterializedContext,
 
 @dataclass
 class StagingCost:
-    """Seconds spent per staging phase of one materialisation."""
+    """Seconds spent per staging phase of one materialisation.
+
+    ``fetch_bytes`` counts the bytes the fetch phase actually moved over
+    the network — the context plane compares it against the bytes its
+    :class:`~repro.core.plane.PlacementPlan` priced for the same op, so
+    plan/executed byte accounting can be asserted equal.
+    """
     fetch_s: float = 0.0      # network/shared-fs → local disk
     load_s: float = 0.0       # disk → host memory (deserialise)
     device_s: float = 0.0     # host → accelerator
     activation_s: float = 0.0  # fork-exec + import
+    fetch_bytes: int = 0      # bytes moved over the network by the fetch
 
     @property
     def total_s(self) -> float:
@@ -146,6 +153,7 @@ class Library:
             if tier is None and not already_local:
                 bw = fetch_bw or hw.disk_bw
                 cost.fetch_s += e.nbytes_disk / bw
+                cost.fetch_bytes += e.nbytes_disk
                 tier = Tier.DISK
             elif tier is None:
                 tier = Tier.DISK

@@ -1,0 +1,595 @@
+"""The context plane: declarative placement intents, priced and budgeted.
+
+The paper's thesis is that *pervasive context management* — not
+scheduling alone — makes opportunistic resources usable.  Before this
+module, the context operations (staging, peer transfer, spill,
+re-promotion, replication) were scattered across the scheduler, the two
+executors and the factory, each mutating :class:`ContextRegistry` ad hoc
+and none accounting for the cross-zone bytes it generated.  Aladdin
+(arXiv 2405.06856) argues placement and scaling must share one cost
+model; SageServe (arXiv 2502.14617) argues proactive scaling needs
+arrival-rate signals.  Both land here:
+
+* callers express **intents** — :class:`Acquire` (make a recipe READY on
+  a specific worker), :class:`Replicate` (hold ``n`` warm copies),
+  :class:`Release` (give a residency back) — instead of hand-rolling
+  registry transitions;
+* the plane **compiles** intents against a read-only :class:`ClusterView`
+  snapshot into a typed :class:`PlacementPlan` of ops (``FETCH``,
+  ``PEER_COPY``, ``PROMOTE``, ``SPILL``, ``EVICT``), each priced in
+  bytes over the link classes :mod:`repro.core.transfer` distinguishes
+  (in-zone NIC vs cross-zone DCN vs shared filesystem);
+* a :class:`LinkBudget` meters per-zone in/out bytes over a sliding
+  window; proactive ``Replicate`` ops that would blow a zone's window
+  are **deferred** (recorded on the plan, re-emitted by the policy next
+  round) — never silently dropped — so hot-recipe replication can no
+  longer saturate the cross-zone links the spanning-tree transfers use.
+  Demand-critical ``Acquire`` ops are charged to the meters but always
+  admitted: a queued request must not starve behind a byte budget;
+* the plane is the ONLY module that writes the registry (grep-enforced
+  by tests/test_context_plane.py): executors feed op lifecycle events
+  back through :meth:`op_started` / :meth:`op_completed` /
+  :meth:`op_aborted`, and worker loss flows through :meth:`drop_worker`,
+  which turns residencies into LOST tombstones and emits re-replication
+  intents via :meth:`recovery_intents`.
+
+Both executors run the SAME plan ops; only the source of time differs
+(see ``_PlanOpExecution`` in :mod:`repro.cluster.executors`).
+"""
+from __future__ import annotations
+
+from collections import defaultdict, deque
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import (Any, Deque, Dict, Iterable, List, Mapping, Optional,
+                    Sequence, Set, Tuple, Union)
+
+from .registry import ContextRegistry, HostState
+from .transfer import Peer, pick_sources
+
+
+# ---------------------------------------------------------------------------
+# Intents — what callers declare
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Acquire:
+    """Make ``recipe_key`` READY on ``worker_id`` (demand-critical: a
+    request was routed there).  Never deferred by the budget."""
+    recipe_key: str
+    worker_id: str
+
+
+@dataclass(frozen=True)
+class Replicate:
+    """Hold ``n`` warm (READY or staging) copies of ``recipe_key``
+    somewhere suitable.  Proactive: the budget may defer part of it."""
+    recipe_key: str
+    n: int
+
+
+@dataclass(frozen=True)
+class Release:
+    """Give back ``worker_id``'s residency of ``recipe_key``: spill a
+    READY copy to local disk, or drop a SPILLED record entirely."""
+    recipe_key: str
+    worker_id: str
+
+
+Intent = Union[Acquire, Replicate, Release]
+
+
+# ---------------------------------------------------------------------------
+# Plans — what the compiler emits
+# ---------------------------------------------------------------------------
+
+class OpKind(str, Enum):
+    FETCH = "fetch"            # shared filesystem -> worker local disk
+    PEER_COPY = "peer_copy"    # ready peer -> worker local disk
+    PROMOTE = "promote"        # local disk -> host/device (no network)
+    SPILL = "spill"            # co-resident library demoted to local disk
+    EVICT = "evict"            # residency record dropped (spilled copy)
+
+
+ACQUIRE_KINDS = (OpKind.FETCH, OpKind.PEER_COPY, OpKind.PROMOTE)
+
+
+@dataclass
+class PlanOp:
+    """One placement operation, priced in network bytes."""
+    kind: OpKind
+    recipe_key: str
+    worker_id: str
+    nbytes: int = 0                    # network bytes this op moves
+    src_worker: Optional[str] = None   # PEER_COPY only
+    src_zone: Optional[str] = None
+    dst_zone: str = "z0"
+
+    @property
+    def cross_zone(self) -> bool:
+        return self.src_zone is not None and self.src_zone != self.dst_zone
+
+
+# deferral reasons: only budget-window deferrals are worth retrying on a
+# timer — the window's charges expire, so headroom WILL return; a missing
+# worker needs a pool change, which re-pumps the dispatch loop anyway
+DEFER_BUDGET = "zone link budget window exhausted"
+DEFER_NO_WORKER = "no eligible worker"
+
+
+@dataclass(frozen=True)
+class DeferredIntent:
+    intent: Intent
+    reason: str
+    short: int = 1                     # replicas trimmed off the intent
+
+    @property
+    def retriable(self) -> bool:
+        return self.reason == DEFER_BUDGET
+
+
+@dataclass
+class PlacementPlan:
+    """Typed op list plus the intents the budget deferred."""
+    ops: List[PlanOp] = field(default_factory=list)
+    deferred: List[DeferredIntent] = field(default_factory=list)
+
+    def acquire_op(self) -> Optional[PlanOp]:
+        """The (single) network/promotion op of an Acquire compilation."""
+        for op in self.ops:
+            if op.kind in ACQUIRE_KINDS:
+                return op
+        return None
+
+    def acquire_ops(self) -> List[PlanOp]:
+        return [op for op in self.ops if op.kind in ACQUIRE_KINDS]
+
+    @property
+    def planned_bytes(self) -> int:
+        return sum(op.nbytes for op in self.ops)
+
+
+# ---------------------------------------------------------------------------
+# The cost model: per-zone byte meters + windowed budget
+# ---------------------------------------------------------------------------
+
+# meter fields per zone; "local"/"cross" are the peer link classes
+# transfer.py distinguishes, "fs" is the shared-filesystem ingress path
+METER_FIELDS = ("in_local", "out_local", "in_cross", "out_cross", "in_fs")
+
+
+class ZoneMeters:
+    """Cumulative per-zone byte counters by direction and link class."""
+
+    def __init__(self):
+        self.data: Dict[str, Dict[str, int]] = {}
+
+    def add(self, zone: str, fld: str, nbytes: int) -> None:
+        z = self.data.setdefault(zone, {f: 0 for f in METER_FIELDS})
+        z[fld] += nbytes
+
+    def get(self, zone: str, fld: str) -> int:
+        return self.data.get(zone, {}).get(fld, 0)
+
+    def total(self, fld: Optional[str] = None) -> int:
+        flds = METER_FIELDS if fld is None else (fld,)
+        return sum(z[f] for z in self.data.values() for f in flds)
+
+    def as_dict(self) -> Dict[str, Dict[str, int]]:
+        return {zone: dict(flds) for zone, flds in sorted(self.data.items())}
+
+    def charge_op(self, op: PlanOp, sign: int = 1) -> None:
+        n = sign * op.nbytes
+        if op.nbytes <= 0 or op.kind not in (OpKind.FETCH, OpKind.PEER_COPY):
+            return
+        if op.kind is OpKind.FETCH:
+            self.add(op.dst_zone, "in_fs", n)
+        elif op.cross_zone:
+            self.add(op.src_zone, "out_cross", n)
+            self.add(op.dst_zone, "in_cross", n)
+        else:
+            self.add(op.src_zone, "out_local", n)
+            self.add(op.dst_zone, "in_local", n)
+
+
+class LinkBudget:
+    """Sliding-window per-zone byte budget over the peer link classes.
+
+    ``cross_bytes_per_window`` / ``local_bytes_per_window`` cap the bytes
+    a zone may send OR receive over the respective link class inside any
+    ``window_s`` window; ``None`` means unbounded (the default — budgets
+    are opt-in, and an unbudgeted plane prices but never defers).  Charges
+    expire as the window slides, so deferred replication is retried — not
+    dropped — once the link drains.
+    """
+
+    def __init__(self, *, cross_bytes_per_window: Optional[float] = None,
+                 local_bytes_per_window: Optional[float] = None,
+                 window_s: float = 60.0):
+        self.cross_bytes_per_window = cross_bytes_per_window
+        self.local_bytes_per_window = local_bytes_per_window
+        self.window_s = window_s
+        # (zone, cls) -> deque[(t, nbytes)]
+        self._charges: Dict[Tuple[str, str], Deque[Tuple[float, int]]] = \
+            defaultdict(deque)
+
+    @property
+    def bounded(self) -> bool:
+        return (self.cross_bytes_per_window is not None
+                or self.local_bytes_per_window is not None)
+
+    def _cap(self, cls: str) -> Optional[float]:
+        return (self.cross_bytes_per_window if cls == "cross"
+                else self.local_bytes_per_window)
+
+    def charged(self, zone: str, cls: str, now: float) -> int:
+        q = self._charges[(zone, cls)]
+        while q and q[0][0] <= now - self.window_s:
+            q.popleft()
+        return sum(n for _, n in q)
+
+    def headroom(self, zone: str, cls: str, now: float) -> float:
+        cap = self._cap(cls)
+        if cap is None:
+            return float("inf")
+        return max(0.0, cap - self.charged(zone, cls, now))
+
+    def _zones_of(self, op: PlanOp) -> Tuple[str, List[str]]:
+        cls = "cross" if op.cross_zone else "local"
+        zones = [op.dst_zone]
+        if op.src_zone is not None and op.src_zone != op.dst_zone:
+            zones.append(op.src_zone)
+        return cls, zones
+
+    def admits(self, op: PlanOp, now: float,
+               pending: Optional[Dict[Tuple[str, str], int]] = None) -> bool:
+        """Would ``op`` fit every involved zone's window right now?
+        ``pending`` carries same-plan charges not yet committed."""
+        if op.kind not in (OpKind.PEER_COPY,) or op.nbytes <= 0:
+            return True                 # FETCH rides the shared fs, not
+        cls, zones = self._zones_of(op)  # the peer links; PROMOTE is local
+        for z in zones:
+            extra = (pending or {}).get((z, cls), 0)
+            if self.headroom(z, cls, now) < op.nbytes + extra:
+                return False
+        return True
+
+    def charge(self, op: PlanOp, now: float) -> None:
+        if op.kind is not OpKind.PEER_COPY or op.nbytes <= 0:
+            return
+        cls, zones = self._zones_of(op)
+        for z in zones:
+            self._charges[(z, cls)].append((now, op.nbytes))
+
+    def refund(self, op: PlanOp, now: float) -> None:
+        """Remove the most recent matching charge (op aborted)."""
+        if op.kind is not OpKind.PEER_COPY or op.nbytes <= 0:
+            return
+        cls, zones = self._zones_of(op)
+        for z in zones:
+            q = self._charges[(z, cls)]
+            for i in range(len(q) - 1, -1, -1):
+                if q[i][1] == op.nbytes:
+                    del q[i]
+                    break
+
+
+# ---------------------------------------------------------------------------
+# ClusterView — the read-only snapshot intents compile against
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ClusterView:
+    """Read-only view of the pool for intent compilation.
+
+    Holds live references (workers, registry) but the contract is strict:
+    compilation MUST NOT mutate anything reachable from a view.  Policies
+    (:class:`~repro.core.policies.WarmPoolPolicy`, eviction priority) are
+    pure functions of a view, which is what makes them unit-testable
+    without a scheduler.
+    """
+    workers: Mapping[str, Any]                 # worker_id -> Worker-like
+    registry: ContextRegistry
+    demand: Mapping[str, int] = field(default_factory=dict)
+    arrival_rate: Mapping[str, float] = field(default_factory=dict)
+    now: float = 0.0
+
+    @property
+    def n_workers(self) -> int:
+        return len(self.workers)
+
+    def idle_workers(self) -> List[Any]:
+        return [w for w in self.workers.values() if w.idle]
+
+    def missing_bytes(self, worker, recipe) -> int:
+        """Network bytes an Acquire of ``recipe`` on ``worker`` moves."""
+        return worker.cache.missing_fetch_bytes(recipe.elements)
+
+
+# ---------------------------------------------------------------------------
+# The plane
+# ---------------------------------------------------------------------------
+
+class ContextPlane:
+    """Compiles intents into priced plans and owns every registry write.
+
+    Lifecycle of a network op::
+
+        compile() -> commit(plan) -> op_started -> op_completed
+                         |                |-> op_aborted (worker lost)
+                         |-> budget + planned meters charged
+        drop_worker() refunds a worker's in-flight ops and tombstones
+        its residencies; recovery_intents() turns fresh tombstones into
+        Replicate intents.
+
+    ``planned`` meters the bytes committed plans priced; ``moved`` meters
+    the bytes executors reported actually moving.  For a drained system
+    the two MUST agree per zone/class — the sim property test and the
+    bench smoke job assert exactly that.
+    """
+
+    def __init__(self, registry: Optional[ContextRegistry] = None,
+                 budget: Optional[LinkBudget] = None):
+        self.registry = registry or ContextRegistry()
+        self.budget = budget or LinkBudget()
+        self.planned = ZoneMeters()
+        self.moved = ZoneMeters()
+        self.ops_committed = 0
+        self.ops_completed = 0
+        self.ops_aborted = 0
+        self.deferred_intents = 0
+        self._inflight: Dict[Tuple[str, str], PlanOp] = {}
+        self._tombstones: Dict[str, int] = {}     # recipe -> lost READY copies
+
+    # -- registration ------------------------------------------------------
+    def register(self, recipe) -> str:
+        return self.registry.register(recipe)
+
+    # -- compilation -------------------------------------------------------
+    def compile(self, intents: Iterable[Intent],
+                view: ClusterView) -> PlacementPlan:
+        """Compile ``intents`` against ``view`` into a priced plan.
+
+        Pure with respect to plane state: nothing is charged until
+        :meth:`commit`.  Op order follows intent order; within one plan a
+        worker is claimed at most once.
+        """
+        plan = PlacementPlan()
+        taken: Set[str] = set()
+        pending: Dict[Tuple[str, str], int] = defaultdict(int)
+        placed: Dict[str, int] = defaultdict(int)   # per-key, this plan
+        for intent in intents:
+            if isinstance(intent, Acquire):
+                self._compile_acquire(intent, view, plan, taken)
+            elif isinstance(intent, Replicate):
+                self._compile_replicate(intent, view, plan, taken, pending,
+                                        placed)
+            elif isinstance(intent, Release):
+                self._compile_release(intent, plan)
+            else:
+                raise TypeError(f"unknown intent {intent!r}")
+        return plan
+
+    def _acquire_op_for(self, key: str, worker, view: ClusterView,
+                        plan: PlacementPlan) -> PlanOp:
+        """SPILL previews + the network/promotion op placing ``key``."""
+        recipe = self.registry.recipes[key]
+        for k in worker.spill_preview(recipe):
+            plan.ops.append(PlanOp(OpKind.SPILL, k, worker.worker_id,
+                                   dst_zone=worker.zone))
+        if worker.has_local(recipe):
+            return PlanOp(OpKind.PROMOTE, key, worker.worker_id,
+                          dst_zone=worker.zone)
+        nbytes = view.missing_bytes(worker, recipe)
+        src = self._pick_source(key, worker, view)
+        if src is None:
+            return PlanOp(OpKind.FETCH, key, worker.worker_id,
+                          nbytes=nbytes, dst_zone=worker.zone)
+        return PlanOp(OpKind.PEER_COPY, key, worker.worker_id,
+                      nbytes=nbytes, src_worker=src.worker_id,
+                      src_zone=src.zone, dst_zone=worker.zone)
+
+    def _pick_source(self, key: str, dst, view: ClusterView) -> Optional[Peer]:
+        ready = self.registry.ready_workers(key) - {dst.worker_id}
+        peers = [Peer(wid, view.workers[wid].zone) for wid in ready
+                 if wid in view.workers]
+        if not peers:
+            return None
+        return pick_sources(peers, dst.zone, max_sources=1)[0]
+
+    def _compile_acquire(self, intent: Acquire, view: ClusterView,
+                         plan: PlacementPlan, taken: Set[str]) -> None:
+        w = view.workers[intent.worker_id]
+        op = self._acquire_op_for(intent.recipe_key, w, view, plan)
+        plan.ops.append(op)
+        taken.add(intent.worker_id)
+
+    def _compile_replicate(self, intent: Replicate, view: ClusterView,
+                           plan: PlacementPlan, taken: Set[str],
+                           pending: Dict[Tuple[str, str], int],
+                           placed: Dict[str, int]) -> None:
+        key, reg = intent.recipe_key, self.registry
+        # compile() is pure w.r.t. the registry, so count the replicas
+        # THIS plan already placed for the key (recovery and policy
+        # intents for the same recipe must not each place a full set)
+        have = len(reg.ready_workers(key) | reg.staging_workers(key)) \
+            + placed[key]
+        need = intent.n - have
+        if need <= 0:
+            return
+        recipe = reg.recipes[key]
+        spilled = reg.spilled_workers(key)
+        cands = [w for w in view.idle_workers()
+                 if w.worker_id not in taken
+                 and (reg.state(key, w.worker_id) is None
+                      or w.worker_id in spilled)
+                 and w.can_host(recipe)]
+        # spilled local copies first (promotion beats any fetch), then the
+        # fastest device — the ordering the pre-plane WarmPoolPolicy used
+        cands.sort(key=lambda w: (w.worker_id not in spilled,
+                                  w.device.infer_s))
+        n_placed = 0
+        window_limited = False
+        for w in cands:
+            if n_placed >= need:
+                break
+            op = self._acquire_op_for(key, w, view, plan)
+            if not self.budget.admits(op, view.now, pending):
+                window_limited = True
+                continue            # try the next candidate (may be local)
+            plan.ops.append(op)
+            if op.kind is OpKind.PEER_COPY and op.nbytes > 0:
+                cls = "cross" if op.cross_zone else "local"
+                pending[(op.dst_zone, cls)] += op.nbytes
+                if op.src_zone is not None and op.src_zone != op.dst_zone:
+                    pending[(op.src_zone, cls)] += op.nbytes
+            taken.add(w.worker_id)
+            n_placed += 1
+            placed[key] += 1
+        if n_placed < need:
+            plan.deferred.append(DeferredIntent(
+                intent, DEFER_BUDGET if window_limited
+                else DEFER_NO_WORKER, short=need - n_placed))
+
+    def _compile_release(self, intent: Release, plan: PlacementPlan) -> None:
+        state = self.registry.state(intent.recipe_key, intent.worker_id)
+        if state is HostState.READY:
+            plan.ops.append(PlanOp(OpKind.SPILL, intent.recipe_key,
+                                   intent.worker_id))
+        elif state is HostState.SPILLED:
+            plan.ops.append(PlanOp(OpKind.EVICT, intent.recipe_key,
+                                   intent.worker_id))
+
+    # -- commitment & execution feedback ----------------------------------
+    def commit(self, plan: PlacementPlan, now: float = 0.0) -> None:
+        """Charge the budget window and the planned meters for ``plan``.
+
+        Every acquire op becomes in-flight from here: an op the executor
+        abandons (worker evicted, pool moved under the plan) is refunded
+        by :meth:`op_aborted` / :meth:`drop_worker`, keeping the
+        planned/moved meters equal for drained systems.
+
+        ``deferred_intents`` counts deferral EVENTS cumulatively: a
+        replica that waits across N compile rounds counts N times (it is
+        a pressure gauge, not a population count)."""
+        self.deferred_intents += sum(d.short for d in plan.deferred)
+        for op in plan.ops:
+            if op.kind in ACQUIRE_KINDS:
+                self.ops_committed += 1
+                self.planned.charge_op(op)
+                self.budget.charge(op, now)
+                self._inflight[(op.recipe_key, op.worker_id)] = op
+
+    def op_started(self, op: PlanOp) -> None:
+        """Executor began staging ``op`` (worker-side room already made)."""
+        self.registry.mark_staging(op.recipe_key, op.worker_id)
+        self._inflight[(op.recipe_key, op.worker_id)] = op
+
+    def op_completed(self, op: PlanOp,
+                     moved_bytes: Optional[int] = None) -> None:
+        """Staging finished: residency READY, moved meters charged.
+
+        ``moved_bytes`` is the byte count the executor measured (the sim
+        reports :attr:`StagingCost.fetch_bytes`); ``None`` means "as
+        priced" (live mode, where loaders do not move plan bytes)."""
+        self._inflight.pop((op.recipe_key, op.worker_id), None)
+        self.registry.mark_ready(op.recipe_key, op.worker_id)
+        measured = op.nbytes if moved_bytes is None else moved_bytes
+        self.moved.charge_op(PlanOp(op.kind, op.recipe_key, op.worker_id,
+                                    nbytes=measured,
+                                    src_worker=op.src_worker,
+                                    src_zone=op.src_zone,
+                                    dst_zone=op.dst_zone))
+        self.ops_completed += 1
+
+    def op_aborted(self, op: PlanOp, now: float = 0.0) -> None:
+        """Op abandoned before completion: refund budget and planned
+        meters so plan/executed accounting stays equal.  Idempotent —
+        :meth:`drop_worker` already refunds a lost worker's ops."""
+        if self._inflight.pop((op.recipe_key, op.worker_id), None) is None:
+            return
+        self.planned.charge_op(op, sign=-1)
+        self.budget.refund(op, now)
+        self.ops_aborted += 1
+
+    # -- direct transitions (non-op execution feedback) --------------------
+    def note_staging(self, key: str, worker_id: str) -> None:
+        """Residency entering STAGING outside a compiled op (prestage
+        tree edges, mode-less staging)."""
+        self.registry.mark_staging(key, worker_id)
+
+    def note_ready(self, key: str, worker_id: str) -> None:
+        self.registry.mark_ready(key, worker_id)
+
+    def note_spilled(self, key: str, worker_id: str) -> None:
+        self.registry.mark_spilled(key, worker_id)
+
+    def note_released(self, key: str, worker_id: str) -> None:
+        self.registry.forget(key, worker_id)
+
+    def record_transfer(self, key: str, src_zone: str, dst_zone: str,
+                        nbytes: int) -> None:
+        """Meter a transfer executed outside compiled ops (the prestage
+        spanning tree): charged to planned AND moved at arrival, so the
+        equality invariant covers it trivially."""
+        op = PlanOp(OpKind.PEER_COPY, key, "", nbytes=nbytes,
+                    src_worker="", src_zone=src_zone, dst_zone=dst_zone)
+        self.planned.charge_op(op)
+        self.moved.charge_op(op)
+
+    # -- worker loss & recovery -------------------------------------------
+    def drop_worker(self, worker_id: str, now: float = 0.0) -> List[str]:
+        """Worker evicted: refund its in-flight ops, tombstone its
+        residencies (``HostState.LOST``), count lost READY copies for
+        re-replication.  Returns the lost recipe keys.
+
+        Only READY losses are actionable (a warm copy died); LOST records
+        for STAGING/SPILLED residencies carry no recovery signal and are
+        forgotten immediately so ``registry.hosts`` does not grow with
+        every eviction under a churny availability trace."""
+        for (key, wid), op in list(self._inflight.items()):
+            if wid == worker_id:
+                self.op_aborted(op, now)
+        reg = self.registry
+        was_ready = {key for key, hosts in reg.hosts.items()
+                     if hosts.get(worker_id) is HostState.READY}
+        lost = reg.drop_worker(worker_id)
+        for key in lost:
+            if key in was_ready:
+                self._tombstones[key] = self._tombstones.get(key, 0) + 1
+            else:
+                reg.forget(key, worker_id)
+        return lost
+
+    def recovery_intents(self, view: ClusterView) -> List[Replicate]:
+        """Consume tombstones: recipes that lost their last warm copy
+        while demand exists get a ``Replicate(key, 1)`` intent.  Resolved
+        tombstones (a copy exists again, or demand is gone) are forgotten
+        along with their LOST registry records."""
+        out: List[Replicate] = []
+        reg = self.registry
+        for key in list(self._tombstones):
+            if reg.ready_workers(key) or reg.staging_workers(key) \
+                    or view.demand.get(key, 0) <= 0:
+                del self._tombstones[key]
+                for wid in reg.lost_workers(key):
+                    reg.forget(key, wid)
+                continue
+            out.append(Replicate(key, 1))
+        return out
+
+    @property
+    def inflight_ops(self) -> int:
+        return len(self._inflight)
+
+    # -- introspection -----------------------------------------------------
+    def meters(self) -> Dict[str, Dict[str, Dict[str, int]]]:
+        return {"planned": self.planned.as_dict(),
+                "moved": self.moved.as_dict()}
+
+    def stats(self) -> Dict[str, int]:
+        return {"ops_committed": self.ops_committed,
+                "ops_completed": self.ops_completed,
+                "ops_aborted": self.ops_aborted,
+                "deferred_intents": self.deferred_intents,
+                "inflight_ops": self.inflight_ops}

@@ -13,8 +13,11 @@ sim reproduces them empirically and the benchmarks assert both agree.
 from __future__ import annotations
 
 import math
+import warnings
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
+
+from .plane import ClusterView, Replicate
 
 
 @dataclass(frozen=True)
@@ -142,65 +145,66 @@ def derive_aging_bound(warm_s: float, cold_s: float, *, lo: int = 2,
 class WarmPoolPolicy:
     """Proactive demand-driven context replication (beyond-paper §5.3.1).
 
-    The spanning-tree prestage replicates a context to *every* joiner; this
-    policy instead sizes a warm pool per recipe from its live demand
-    (queued + running tasks) and stages replicas onto idle capable workers
-    ahead of dispatch, so the next task of a hot recipe routes warm instead
-    of paying a cold start.
+    The spanning-tree prestage replicates a context to *every* joiner;
+    this policy instead sizes a warm pool per recipe from its live demand
+    and emits :class:`~repro.core.plane.Replicate` intents, which the
+    context plane compiles into budget-checked staging ops on idle
+    capable workers — so the next request of a hot recipe routes warm
+    instead of paying a cold start.
 
-    ``plan`` is duck-typed over the scheduler (lanes / registry / workers)
-    so core stays import-free of the cluster layer; both the sim and live
-    executors call it after draining their dispatch loop.
+    :meth:`intents` is a PURE function of a
+    :class:`~repro.core.plane.ClusterView`: it names *how many* warm
+    copies each recipe deserves and leaves worker selection, pricing and
+    budget admission to the plane.
+
+    ``arrival_horizon_s > 0`` adds an EWMA arrival-rate term (SageServe's
+    proactive-scaling signal): demand is inflated by the requests
+    expected to arrive within the horizon, so Replicate intents are
+    emitted BEFORE the backlog forms, not after.
     """
     tasks_per_replica: int = 8      # backlog one warm replica absorbs
     max_fraction: float = 0.5       # pool share one recipe may pre-claim
     min_replicas: int = 1           # keep-warm floor while demand exists
+    arrival_horizon_s: float = 0.0  # EWMA look-ahead (0 = reactive only)
 
-    def target_replicas(self, demand_tasks: int, n_workers: int) -> int:
+    def target_replicas(self, demand_tasks: float, n_workers: int) -> int:
         if demand_tasks <= 0 or n_workers <= 0:
             return 0
         cap = max(int(n_workers * self.max_fraction), 1)
         want = math.ceil(demand_tasks / self.tasks_per_replica)
         return min(max(want, self.min_replicas), cap)
 
-    def plan(self, sched) -> List[Tuple[str, str]]:
-        """(recipe_key, worker_id) staging actions for the current state.
-
-        Hottest recipes claim idle workers first; a worker is a candidate
-        when it is idle, not already hosting/staging the recipe, and can
-        host it after spilling its idle libraries.  Workers holding a
-        spilled copy are preferred (re-promotion skips the fetch).
-        """
-        idle = [w for w in sched.workers.values() if w.idle]
-        if not idle:
-            return []
-        demand: Dict[str, int] = {}
-        for key, lane in sched.lanes.items():
-            demand[key] = demand.get(key, 0) + len(lane)
-        for task, _wid in sched.running.values():
-            demand[task.recipe_key] = demand.get(task.recipe_key, 0) + 1
-        out: List[Tuple[str, str]] = []
-        taken: set = set()
-        n_workers = len(sched.workers)
-        for key in sorted(demand, key=demand.get, reverse=True):
-            want = self.target_replicas(demand[key], n_workers)
-            have = len(sched.registry.ready_workers(key)
-                       | sched.registry.staging_workers(key))
-            if want <= have:
-                continue
-            recipe = sched.registry.recipes[key]
-            spilled = sched.registry.spilled_workers(key)
-            cands = [w for w in idle
-                     if w.worker_id not in taken
-                     and (sched.registry.state(key, w.worker_id) is None
-                          or w.worker_id in spilled)
-                     and w.can_host(recipe)]
-            cands.sort(key=lambda w: (w.worker_id not in spilled,
-                                      w.device.infer_s))
-            for w in cands[:want - have]:
-                out.append((key, w.worker_id))
-                taken.add(w.worker_id)
+    def intents(self, view: ClusterView) -> List[Replicate]:
+        """Replicate intents for the current demand, hottest first."""
+        out: List[Replicate] = []
+        reg = view.registry
+        for key in sorted(view.demand, key=view.demand.get, reverse=True):
+            demand = float(view.demand[key])
+            if self.arrival_horizon_s > 0:
+                demand += view.arrival_rate.get(key, 0.0) \
+                    * self.arrival_horizon_s
+            want = self.target_replicas(demand, view.n_workers)
+            have = len(reg.ready_workers(key) | reg.staging_workers(key))
+            if want > have:
+                out.append(Replicate(key, want))
         return out
+
+    def plan(self, sched) -> List[Tuple[str, str]]:
+        """DEPRECATED shim: (recipe_key, worker_id) staging pairs.
+
+        Pre-plane callers got worker picks straight from the policy; new
+        code compiles :meth:`intents` through the scheduler's context
+        plane (which also enforces the link budget) and executes the
+        resulting ops.
+        """
+        warnings.warn("WarmPoolPolicy.plan(scheduler) is deprecated; "
+                      "compile WarmPoolPolicy.intents(view) through the "
+                      "ContextPlane instead", DeprecationWarning,
+                      stacklevel=2)
+        view = sched.view()
+        plan = sched.plane.compile(self.intents(view), view)
+        return [(op.recipe_key, op.worker_id)
+                for op in plan.acquire_ops()]
 
 
 def worker_sizing(total_gpus_hint: int, *,

@@ -5,6 +5,11 @@ application" (paper §5.1): which recipe is hosted where, which workers are
 warming up, and which tasks are waiting on which context.  The scheduler
 consults this registry to (a) route tasks to warm workers first and (b)
 pick peer-transfer sources for cold workers.
+
+WRITE DISCIPLINE: this class is the raw state store.  Every mutation in
+``src/repro`` goes through :class:`repro.core.plane.ContextPlane` (the
+single-writer module, grep-enforced by tests/test_context_plane.py);
+calling ``mark_*`` directly is reserved for the plane and for tests.
 """
 from __future__ import annotations
 
@@ -49,13 +54,24 @@ class ContextRegistry:
         self.hosts[key][worker_id] = HostState.SPILLED
 
     def drop_worker(self, worker_id: str) -> List[str]:
-        """Worker evicted: forget all its residencies. Returns lost keys."""
+        """Worker evicted: record its residencies as LOST. Returns lost keys.
+
+        The residencies are NOT silently deleted — each surviving entry is
+        a tombstone the context plane consumes to trigger re-replication
+        of recipes whose warm copies died with the worker.  Use
+        :meth:`forget` to clear a tombstone once it has been acted on.
+        """
         lost = []
         for key, hosts in self.hosts.items():
-            if worker_id in hosts:
-                del hosts[worker_id]
+            state = hosts.get(worker_id)
+            if state is not None and state is not HostState.LOST:
+                hosts[worker_id] = HostState.LOST
                 lost.append(key)
         return lost
+
+    def forget(self, key: str, worker_id: str) -> None:
+        """Erase one residency record (tombstone consumed / copy released)."""
+        self.hosts.get(key, {}).pop(worker_id, None)
 
     # -- queries ----------------------------------------------------------
     def ready_workers(self, key: str) -> Set[str]:
@@ -70,8 +86,16 @@ class ContextRegistry:
         return {w for w, s in self.hosts.get(key, {}).items()
                 if s is HostState.SPILLED}
 
+    def lost_workers(self, key: str) -> Set[str]:
+        """Tombstones: workers evicted while hosting ``key``."""
+        return {w for w, s in self.hosts.get(key, {}).items()
+                if s is HostState.LOST}
+
     def workers_with(self, key: str) -> Set[str]:
-        return set(self.hosts.get(key, {}))
+        """Workers holding (or staging/spilling) a live copy — LOST
+        tombstones are bookkeeping, not copies, and are excluded."""
+        return {w for w, s in self.hosts.get(key, {}).items()
+                if s is not HostState.LOST}
 
     def state(self, key: str, worker_id: str) -> Optional[HostState]:
         return self.hosts.get(key, {}).get(worker_id)

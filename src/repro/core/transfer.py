@@ -44,6 +44,13 @@ class TransferEdge:
 @dataclass
 class TransferPlan:
     edges: List[TransferEdge] = field(default_factory=list)
+    # dst-indexed arrival times (each target receives exactly one edge), so
+    # per-worker lookups are O(1) instead of a linear scan over the tree
+    _arrival: Dict[str, float] = field(default_factory=dict, repr=False)
+
+    def add(self, edge: TransferEdge) -> None:
+        self.edges.append(edge)
+        self._arrival[edge.dst] = edge.end_s
 
     @property
     def makespan_s(self) -> float:
@@ -54,10 +61,10 @@ class TransferPlan:
         return sum(e.cross_zone for e in self.edges)
 
     def arrival(self, worker_id: str) -> Optional[float]:
-        for e in self.edges:
-            if e.dst == worker_id:
-                return e.end_s
-        return None
+        if len(self._arrival) != len(self.edges):
+            # edges were appended directly (pre-`add` callers); reindex
+            self._arrival = {e.dst: e.end_s for e in self.edges}
+        return self._arrival.get(worker_id)
 
 
 def plan_spanning_tree(nbytes: int, sources: Sequence[Peer],
@@ -106,8 +113,8 @@ def plan_spanning_tree(nbytes: int, sources: Sequence[Peer],
         del remaining[dst.worker_id]
         bw = src.bw_cross if cross else src.bw_local
         t_end = t_free + nbytes / bw
-        plan.edges.append(TransferEdge(src.worker_id, dst.worker_id,
-                                       nbytes, t_free, t_end, cross))
+        plan.add(TransferEdge(src.worker_id, dst.worker_id,
+                              nbytes, t_free, t_end, cross))
         heapq.heappush(heap, (t_end, seq, src)); seq += 1
         for _ in range(max(1, fanout_cap)):
             heapq.heappush(heap, (t_end, seq, dst)); seq += 1
@@ -116,7 +123,15 @@ def plan_spanning_tree(nbytes: int, sources: Sequence[Peer],
 
 def pick_sources(ready_workers: Sequence[Peer], dst_zone: str,
                  *, max_sources: int = 1) -> List[Peer]:
-    """Scheduler policy: in-zone ready hosts first, then any."""
-    local = [p for p in ready_workers if p.zone == dst_zone]
-    rest = [p for p in ready_workers if p.zone != dst_zone]
+    """Scheduler policy: in-zone ready hosts first, then any.
+
+    Within each zone class, ties break toward the peer with the higher
+    local NIC bandwidth (`bw_local`) — the fan-out it will serve once the
+    copy lands runs over that link.  The sort is stable, so peers with
+    equal bandwidth keep their incoming order (back-compat with the
+    original first-match policy)."""
+    local = sorted((p for p in ready_workers if p.zone == dst_zone),
+                   key=lambda p: -p.bw_local)
+    rest = sorted((p for p in ready_workers if p.zone != dst_zone),
+                  key=lambda p: -p.bw_local)
     return (local + rest)[:max_sources]

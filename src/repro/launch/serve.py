@@ -25,7 +25,7 @@ import sys
 import time
 
 from repro.cluster import (Application, LiveExecutor, Scheduler, Worker,
-                           format_latency)
+                           format_latency, format_zone_bytes)
 from repro.cluster.hardware import GPU_CATALOG
 from repro.configs import get_smoke_config
 from repro.core import MODES
@@ -115,6 +115,8 @@ def main(argv=None) -> int:
     if args.stream:
         print("  " + format_latency(app.latency_summary()))
         print(f"  admissions into live batches: {sched.admissions}")
+    # context-plane run summary: per-zone transfer bytes + op counters
+    print(format_zone_bytes(sched.plane))
     return 0
 
 

@@ -1,0 +1,429 @@
+"""The context plane: single-writer discipline, priced/budgeted plans,
+LOST tombstones, arrival-aware warm pool, and plan/executed byte parity.
+"""
+import pathlib
+import re
+
+import pytest
+
+from repro.core import (Acquire, ClusterView, HostState, LinkBudget, OpKind,
+                        PERVASIVE, Peer, Release, Replicate, Tier,
+                        WarmPoolPolicy, model_context_recipe, pick_sources,
+                        plan_spanning_tree)
+from repro.cluster import (GPU_CATALOG, LiveExecutor, Request, Scheduler,
+                           SimExecutor, Worker, make_sim, traces,
+                           zone_byte_summary)
+from repro.cluster.scheduler import Task
+from repro.configs import get_config
+
+from benchmarks.common import BIG_AP, BIG_RECIPE, MIXED_SHAPE
+
+CFG = get_config("smollm2-1.7b")
+RECIPE = model_context_recipe(CFG, include_compile=False)
+AP = CFG.n_active_params()
+A10 = GPU_CATALOG["NVIDIA A10"]
+SRC = pathlib.Path(__file__).resolve().parent.parent / "src" / "repro"
+
+
+def warm(sched, w, recipe, key):
+    w.library_for(recipe).materialize_cost(w.device, fetch_bw=float("inf"))
+    sched.plane.note_ready(key, w.worker_id)
+
+
+# ---------------------------------------------------------------------------
+# Single-writer discipline (grep-enforced)
+# ---------------------------------------------------------------------------
+
+REGISTRY_WRITE = re.compile(
+    r"\b(?:registry|reg)\s*\.\s*"
+    r"(register|mark_staging|mark_ready|mark_spilled|drop_worker|forget)"
+    r"\s*\(")
+ALLOWED = {("core", "plane.py"), ("core", "registry.py")}
+
+
+def test_all_registry_writes_live_in_the_plane():
+    """Every ContextRegistry mutation in src/repro flows through
+    core/plane.py — the tentpole's architectural invariant."""
+    offenders = []
+    for path in SRC.rglob("*.py"):
+        if tuple(path.parts[-2:]) in ALLOWED:
+            continue
+        for i, line in enumerate(path.read_text().splitlines(), 1):
+            if "``" in line or line.lstrip().startswith("#"):
+                continue                # docs (migration tables), comments
+            if REGISTRY_WRITE.search(line):
+                offenders.append(f"{path.relative_to(SRC)}:{i}: "
+                                 f"{line.strip()}")
+    assert not offenders, (
+        "registry mutations outside core/plane.py:\n" + "\n".join(offenders))
+
+
+# ---------------------------------------------------------------------------
+# Acquire compilation: the priced op per placement situation
+# ---------------------------------------------------------------------------
+
+class TestAcquireCompile:
+    def test_fetch_when_no_ready_peer(self):
+        sched = Scheduler()
+        key = sched.register_context(RECIPE)
+        w = Worker(A10, zone="z1")
+        sched.add_worker(w)
+        plan = sched.plane.compile([Acquire(key, w.worker_id)],
+                                   sched.view())
+        op = plan.acquire_op()
+        assert op.kind is OpKind.FETCH
+        assert op.nbytes == RECIPE.transfer_bytes
+        assert op.dst_zone == "z1"
+
+    def test_peer_copy_prefers_in_zone_source(self):
+        sched = Scheduler()
+        key = sched.register_context(RECIPE)
+        near = Worker(A10, zone="z1")
+        far = Worker(A10, zone="z0")
+        dst = Worker(A10, zone="z1")
+        for w in (near, far, dst):
+            sched.add_worker(w)
+        warm(sched, near, RECIPE, key)
+        warm(sched, far, RECIPE, key)
+        plan = sched.plane.compile([Acquire(key, dst.worker_id)],
+                                   sched.view())
+        op = plan.acquire_op()
+        assert op.kind is OpKind.PEER_COPY
+        assert op.src_worker == near.worker_id and not op.cross_zone
+
+    def test_promote_for_spilled_local_copy_and_spill_preview(self):
+        sched = Scheduler()
+        k_small = sched.register_context(RECIPE)
+        k_big = sched.register_context(BIG_RECIPE)
+        w = Worker(A10, shape=MIXED_SHAPE)
+        sched.add_worker(w)
+        warm(sched, w, RECIPE, k_small)
+        # acquiring the big recipe must preview the small library's spill
+        plan = sched.plane.compile([Acquire(k_big, w.worker_id)],
+                                   sched.view())
+        kinds = [op.kind for op in plan.ops]
+        assert kinds == [OpKind.SPILL, OpKind.FETCH]
+        assert plan.ops[0].recipe_key == k_small
+        # spill it for real: re-acquiring the small recipe is a PROMOTE
+        w.libraries[k_small].spill()
+        sched.plane.note_spilled(k_small, w.worker_id)
+        plan2 = sched.plane.compile([Acquire(k_small, w.worker_id)],
+                                    sched.view())
+        op = plan2.acquire_op()
+        assert op.kind is OpKind.PROMOTE and op.nbytes == 0
+
+    def test_same_key_intents_share_one_plan_budget(self):
+        """Recovery and policy can both emit Replicate for one recipe in
+        the same round; the plan must not place a full set for each."""
+        sched = Scheduler()
+        key = sched.register_context(RECIPE)
+        seed = Worker(A10, zone="z0")
+        sched.add_worker(seed)
+        warm(sched, seed, RECIPE, key)
+        for _ in range(6):
+            sched.add_worker(Worker(A10, zone="z1"))
+        plan = sched.plane.compile([Replicate(key, 1), Replicate(key, 3)],
+                                   sched.view())
+        assert len(plan.acquire_ops()) == 2      # 3 wanted, 1 ready seed
+
+    def test_release_spill_op_really_executes(self):
+        sched = Scheduler()
+        ex = SimExecutor(sched)
+        key = sched.register_context(RECIPE)
+        w = Worker(A10)
+        sched.add_worker(w)
+        warm(sched, w, RECIPE, key)
+        plan = sched.plane.compile([Release(key, w.worker_id)],
+                                   sched.view())
+        ex.execute_plan(plan)
+        assert not w.libraries[key].ready and w.libraries[key].spills == 1
+        assert sched.registry.spilled_workers(key) == {w.worker_id}
+        weights = RECIPE.element("weights")
+        assert w.cache.tier_of(weights.key) is Tier.DISK
+
+    def test_release_spills_then_evicts(self):
+        sched = Scheduler()
+        key = sched.register_context(RECIPE)
+        w = Worker(A10)
+        sched.add_worker(w)
+        warm(sched, w, RECIPE, key)
+        plan = sched.plane.compile([Release(key, w.worker_id)],
+                                   sched.view())
+        assert [op.kind for op in plan.ops] == [OpKind.SPILL]
+        sched.plane.note_spilled(key, w.worker_id)
+        plan2 = sched.plane.compile([Release(key, w.worker_id)],
+                                    sched.view())
+        assert [op.kind for op in plan2.ops] == [OpKind.EVICT]
+
+
+# ---------------------------------------------------------------------------
+# LOST tombstones + recovery (satellite: drop_worker fix)
+# ---------------------------------------------------------------------------
+
+class TestLostTombstones:
+    def test_drop_worker_marks_lost_not_delete(self):
+        sched = Scheduler()
+        key = sched.register_context(RECIPE)
+        w = Worker(A10)
+        sched.add_worker(w)
+        warm(sched, w, RECIPE, key)
+        lost = sched.plane.drop_worker(w.worker_id)
+        reg = sched.registry
+        assert lost == [key]
+        assert reg.state(key, w.worker_id) is HostState.LOST
+        assert reg.lost_workers(key) == {w.worker_id}
+        # tombstones are bookkeeping, not copies
+        assert reg.workers_with(key) == set()
+        assert reg.replication(key) == 0
+
+    def test_recovery_intent_emitted_while_demand_exists(self):
+        sched = Scheduler()
+        key = sched.register_context(RECIPE)
+        w = Worker(A10)
+        sched.add_worker(w)
+        warm(sched, w, RECIPE, key)
+        sched.submit(Request(key, decode_steps=8, exclusive=True))
+        sched.on_evict(w.worker_id)
+        intents = sched.plane.recovery_intents(sched.view())
+        assert intents == [Replicate(key, 1)]
+        # the tombstone survives until the loss is recovered
+        assert sched.plane.recovery_intents(sched.view()) == [
+            Replicate(key, 1)]
+        # a copy comes back: tombstone + LOST records are consumed
+        w2 = Worker(A10)
+        sched.add_worker(w2)
+        warm(sched, w2, RECIPE, key)
+        assert sched.plane.recovery_intents(sched.view()) == []
+        assert sched.registry.lost_workers(key) == set()
+
+    def test_sim_rereplicates_after_losing_last_warm_copy(self):
+        policy = WarmPoolPolicy(min_replicas=1, tasks_per_replica=1000)
+        sched, ex, fac = make_sim(devices=[A10] * 3, warm_pool=policy)
+        key = sched.register_context(RECIPE)
+        sched.submit(Task(key, 400, PERVASIVE, active_params=AP))
+        sched.submit(Task(key, 400, PERVASIVE, active_params=AP))
+        fac.reconcile(2)
+        ex.pump()
+        ex.loop.run(until=120.0, stop=lambda: False)
+        wid = next(iter(sched.registry.ready_workers(key)))
+        sched.on_evict(wid, now=ex.loop.now)
+        fac.reconcile(2)                # replacement joins cold
+        ex.run()
+        assert sched.completed_inferences == 800
+        assert sched.registry.replication(key) >= 1
+
+
+# ---------------------------------------------------------------------------
+# LinkBudget: zone at budget DEFERS, never drops (satellite regression)
+# ---------------------------------------------------------------------------
+
+class TestLinkBudget:
+    def _pool(self, budget):
+        sched = Scheduler(link_budget=budget)
+        key = sched.register_context(RECIPE)
+        seed = Worker(A10, zone="z0")
+        sched.add_worker(seed)
+        warm(sched, seed, RECIPE, key)
+        joiners = [Worker(A10, zone="z1") for _ in range(3)]
+        for w in joiners:
+            sched.add_worker(w)
+        return sched, key
+
+    def test_zone_at_budget_defers_not_drops(self):
+        nb = RECIPE.transfer_bytes
+        sched, key = self._pool(LinkBudget(cross_bytes_per_window=1.5 * nb,
+                                           window_s=60.0))
+        plane = sched.plane
+        plan = plane.compile([Replicate(key, 4)], sched.view(now=0.0))
+        # one cross copy fits the window; the other two are DEFERRED,
+        # recorded on the plan — not silently dropped
+        assert len(plan.acquire_ops()) == 1
+        assert len(plan.deferred) == 1
+        assert plan.deferred[0].intent == Replicate(key, 4)
+        assert plan.deferred[0].short == 2
+        plane.commit(plan, now=0.0)
+        plane.op_started(plan.acquire_op())
+        # inside the window the zone stays saturated: everything defers
+        plan2 = plane.compile([Replicate(key, 4)], sched.view(now=10.0))
+        assert not plan2.acquire_ops() and plan2.deferred
+        # the window slides: the deferred replica is admitted again
+        plan3 = plane.compile([Replicate(key, 4)], sched.view(now=70.0))
+        assert len(plan3.acquire_ops()) == 1
+        assert plane.deferred_intents >= 2
+
+    def test_unbounded_budget_never_defers(self):
+        sched, key = self._pool(None)
+        plan = sched.plane.compile([Replicate(key, 4)], sched.view())
+        assert len(plan.acquire_ops()) == 3 and not plan.deferred
+
+    def test_acquire_is_never_deferred(self):
+        nb = RECIPE.transfer_bytes
+        sched, key = self._pool(LinkBudget(cross_bytes_per_window=0.5 * nb,
+                                           window_s=60.0))
+        wid = [w for w in sched.workers.values() if w.zone == "z1"][0]
+        plan = sched.plane.compile([Acquire(key, wid.worker_id)],
+                                   sched.view())
+        assert plan.acquire_op().kind is OpKind.PEER_COPY
+        assert not plan.deferred
+
+
+# ---------------------------------------------------------------------------
+# Arrival-aware warm pool (satellite: EWMA sizing)
+# ---------------------------------------------------------------------------
+
+class TestArrivalAwareWarmPool:
+    def test_scheduler_tracks_arrival_ewma(self):
+        sched = Scheduler()
+        key = sched.register_context(RECIPE)
+        for i in range(150):
+            sched.submit(Request(key, decode_steps=4,
+                                 arrival_s=float(i)))
+        rate = sched.view().arrival_rate[key]
+        assert rate == pytest.approx(1.0, rel=0.1)
+
+    def test_horizon_emits_replicate_before_backlog(self):
+        sched = Scheduler()
+        key = sched.register_context(RECIPE)
+        for _ in range(4):
+            sched.add_worker(Worker(A10))
+        # steady 2 req/s arrivals, but the queue itself is still short
+        for i in range(40):
+            sched.submit(Request(key, decode_steps=4,
+                                 arrival_s=i * 0.5))
+        for lane in sched.lanes.values():
+            kept = [lane.popleft() for _ in range(1)]
+            lane.clear()
+            lane.extend(kept)
+        reactive = WarmPoolPolicy(tasks_per_replica=4, max_fraction=1.0)
+        proactive = WarmPoolPolicy(tasks_per_replica=4, max_fraction=1.0,
+                                   arrival_horizon_s=8.0)
+        view = sched.view()
+        n_reactive = {r.recipe_key: r.n for r in reactive.intents(view)}
+        n_proactive = {r.recipe_key: r.n for r in proactive.intents(view)}
+        assert n_proactive[key] > n_reactive.get(key, 0), \
+            "the EWMA term must size the pool ahead of the backlog"
+
+
+# ---------------------------------------------------------------------------
+# Transfer satellites: dst-indexed arrival, bw tie-break
+# ---------------------------------------------------------------------------
+
+class TestTransferSatellites:
+    def test_arrival_is_dst_indexed_and_correct(self):
+        srcs = [Peer("s0", "z0")]
+        tgts = [Peer(f"t{i}", f"z{i % 3}") for i in range(12)]
+        plan = plan_spanning_tree(10**9, srcs, tgts, fanout_cap=2)
+        for e in plan.edges:
+            assert plan.arrival(e.dst) == e.end_s
+        assert plan.arrival("not-a-worker") is None
+        # direct edge appends (legacy callers) still resolve
+        plan.edges.append(type(plan.edges[0])("s0", "tX", 10**9,
+                                              0.0, 1.0, False))
+        assert plan.arrival("tX") == 1.0
+
+    def test_pick_sources_prefers_higher_local_bandwidth_on_ties(self):
+        slow = Peer("slow", "z1", bw_local=5e9)
+        fast = Peer("fast", "z1", bw_local=20e9)
+        other = Peer("other", "z0", bw_local=50e9)
+        assert pick_sources([slow, fast, other], "z1")[0] is fast
+        # zone preference still dominates raw bandwidth
+        assert pick_sources([slow, other], "z1")[0] is slow
+
+
+# ---------------------------------------------------------------------------
+# Plan/executed byte parity (satellite: property + deterministic)
+# ---------------------------------------------------------------------------
+
+def assert_bytes_balanced(sched):
+    plane = sched.plane
+    assert plane.inflight_ops == 0
+    assert plane.planned.as_dict() == plane.moved.as_dict(), \
+        zone_byte_summary(plane)
+
+
+class TestByteParity:
+    def test_sim_moves_exactly_the_priced_bytes(self):
+        """Cold dispatches, warm-pool replication, spills and an eviction
+        mid-run: per zone and link class the executor moves exactly what
+        the committed plans priced."""
+        policy = WarmPoolPolicy(tasks_per_replica=2, max_fraction=1.0)
+        sched, ex, fac = make_sim(devices=[A10] * 9, warm_pool=policy,
+                                  workers_per_zone=3,
+                                  trace=[(0.0, 9), (40.0, 5), (80.0, 9)])
+        key = sched.register_context(RECIPE)
+        sched.submit_sweep(key, 6_000, 250, PERVASIVE, active_params=AP)
+        ex.run()
+        ex.loop.run()                   # drain trailing staging events
+        assert sched.completed_inferences == 6_000
+        assert_bytes_balanced(sched)
+        assert sched.plane.moved.total() > 0
+
+    def test_budgeted_run_still_completes_all_work(self):
+        budget = LinkBudget(cross_bytes_per_window=RECIPE.transfer_bytes,
+                            window_s=30.0)
+        policy = WarmPoolPolicy(tasks_per_replica=2, max_fraction=1.0)
+        sched, ex, fac = make_sim(devices=[A10] * 6, warm_pool=policy,
+                                  workers_per_zone=2, link_budget=budget)
+        key = sched.register_context(RECIPE)
+        sched.submit_sweep(key, 4_000, 250, PERVASIVE, active_params=AP)
+        fac.reconcile(6)
+        ex.run()
+        ex.loop.run()
+        assert sched.completed_inferences == 4_000
+        assert_bytes_balanced(sched)
+
+    def test_live_executor_runs_the_same_plan_ops(self):
+        from repro.core import ContextElement, ContextRecipe
+        tiny = ContextRecipe("plane::tiny", (
+            ContextElement("deps", nbytes_disk=1000, nbytes_host=100,
+                           version="t", loader=lambda: {"ok": True}),
+            ContextElement("weights", nbytes_disk=1000, nbytes_host=100,
+                           version="t", loader=lambda: object()),
+        ))
+        policy = WarmPoolPolicy(min_replicas=3, tasks_per_replica=1000,
+                                max_fraction=1.0)
+        sched = Scheduler()
+        key = sched.register_context(tiny)
+        for _ in range(3):
+            sched.add_worker(Worker(A10))
+        for i in range(2):
+            sched.submit(Task(key, 1, PERVASIVE, payload=i))
+        ex = LiveExecutor(sched, {key: lambda payloads, p: p},
+                          warm_pool=policy)
+        ex.run()
+        assert sched.registry.replication(key) == 3
+        assert_bytes_balanced(sched)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                     # optional, like the other property
+    HAVE_HYPOTHESIS = False             # tests (requirements-dev.txt)
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(3, 8),           # workers
+           st.integers(1, 4),           # workers per zone
+           st.integers(2, 6),           # tasks
+           st.booleans(),               # budgeted?
+           st.integers(0, 1))           # eviction dip?
+    @settings(max_examples=20, deadline=None)
+    def test_priced_bytes_match_moved_bytes_property(
+            n_workers, per_zone, n_tasks, budgeted, dip):
+        budget = LinkBudget(
+            cross_bytes_per_window=1.2 * RECIPE.transfer_bytes,
+            window_s=45.0) if budgeted else None
+        policy = WarmPoolPolicy(tasks_per_replica=1, max_fraction=1.0)
+        trace = [(0.0, n_workers)]
+        if dip:
+            trace += [(35.0, max(1, n_workers // 2)), (70.0, n_workers)]
+        sched, ex, fac = make_sim(devices=[A10] * n_workers,
+                                  warm_pool=policy, link_budget=budget,
+                                  workers_per_zone=per_zone, trace=trace)
+        key = sched.register_context(RECIPE)
+        sched.submit_sweep(key, n_tasks * 200, 200, PERVASIVE,
+                           active_params=AP)
+        ex.run()
+        ex.loop.run()
+        assert sched.completed_inferences == n_tasks * 200
+        assert_bytes_balanced(sched)
