@@ -1,0 +1,114 @@
+"""Per-step LIVE decode latency vs prefix length: slot-cached vs full-forward.
+
+The slot-pool :class:`~repro.inference.StreamingDecoder` decodes a dynamic
+batch at O(1) FLOPs per token — the compiled step works on a FIXED
+(B_max, T) cache regardless of how long each row's prefix is — while the
+pre-slot full-forward path re-runs prompt+generated through ``M.forward``
+every step, O(S) per token.  This benchmark admits a small batch at several
+prompt lengths S into ONE pool (same T for every S: apples-to-apples),
+applies membership churn (finish + admit mid-run), and reports the median
+quiet-step latency plus the one-off admission (prefill) cost.
+
+Expected: slot-cached step time FLAT in S (admission cost grows — prefill
+is inherently O(S), paid once); full-forward step time grows with S.
+
+``--smoke`` (the CI guard): FAILS if the cached per-step time grows with S
+beyond a noise factor.
+"""
+from __future__ import annotations
+
+import argparse
+import statistics
+import sys
+import time
+
+import jax
+import numpy as np
+
+ROWS = 4                 # admitted batch per prompt length
+STEPS = 10               # timed quiet steps per prompt length
+DECODE_BUDGET = 24       # ring headroom past the longest prompt
+
+
+def _decoder(cfg, params, *, slot_cached, max_len):
+    from repro.inference import StreamingDecoder
+    return StreamingDecoder(cfg, params, None, None, slot_cached=slot_cached,
+                            max_len=max_len)
+
+
+def _measure(cfg, params, S, *, slot_cached, max_len, rows=ROWS,
+             steps=STEPS, seed=0):
+    """Admit ``rows`` prompts of length ``S``, churn one row mid-run, and
+    time the quiet (no-admission) steps.  Returns (step_ms, admit_ms)."""
+    rng = np.random.default_rng(seed)
+    dec = _decoder(cfg, params, slot_cached=slot_cached, max_len=max_len)
+    mk = lambda: list(rng.integers(4, cfg.vocab_size, S))
+    rids = list(range(rows))
+    for r in rids:
+        dec.ensure_tokens(r, mk())
+    t0 = time.perf_counter()
+    dec.step(rids)                               # admission prefill + compile
+    admit_s = time.perf_counter() - t0
+    dec.step(rids)                               # first cached step: compile
+    quiet = []
+    for i in range(steps):
+        if i == steps // 2:                      # membership churn mid-run
+            dec.finish(rids.pop(0))
+            nxt = rows + i
+            dec.ensure_tokens(nxt, mk())
+            rids.append(nxt)
+            dec.step(rids)                       # admission step (untimed)
+            continue
+        t0 = time.perf_counter()
+        dec.step(rids)
+        quiet.append(time.perf_counter() - t0)
+    for r in rids:
+        dec.finish(r)
+    return statistics.median(quiet) * 1e3, admit_s * 1e3
+
+
+def main(smoke: bool = False, lengths=None, steps: int = STEPS) -> int:
+    from repro.configs import get_smoke_config
+    from repro.models import model as M
+
+    lengths = lengths or ([32, 160] if smoke else [32, 64, 128, 256])
+    max_len = max(lengths) + DECODE_BUDGET
+    cfg = get_smoke_config("smollm2-1.7b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+
+    print("== live decode: per-step latency vs prefix length "
+          f"(B={ROWS}, pool T={max_len}, churn mid-run) ==")
+    print(f"{'S':>6} {'slot step ms':>14} {'full step ms':>14} "
+          f"{'slot admit ms':>14}")
+    slot_ms = {}
+    full_ms = {}
+    for S in lengths:
+        s_ms, a_ms = _measure(cfg, params, S, slot_cached=True,
+                              max_len=max_len, steps=steps)
+        f_ms, _ = _measure(cfg, params, S, slot_cached=False,
+                           max_len=max_len, steps=steps)
+        slot_ms[S], full_ms[S] = s_ms, f_ms
+        print(f"{S:>6} {s_ms:>14.2f} {f_ms:>14.2f} {a_ms:>14.2f}")
+
+    lo, hi = min(lengths), max(lengths)
+    grow_slot = slot_ms[hi] / slot_ms[lo]
+    grow_full = full_ms[hi] / full_ms[lo]
+    print(f"step-time growth {lo}→{hi}: slot-cached {grow_slot:.2f}x, "
+          f"full-forward {grow_full:.2f}x")
+    if smoke:
+        # the tentpole claim: cached step time is FLAT in prefix length
+        # (2.5x allows CI timer noise; a genuinely O(S) step would grow
+        # ~hi/lo = 5x here)
+        assert grow_slot < 2.5, \
+            f"slot-cached step time grew {grow_slot:.2f}x from S={lo} " \
+            f"to S={hi} — the cached decode path is not O(1) in S"
+        print("smoke OK: slot-cached per-step time flat in prefix length")
+    return 0
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI guard: fail if cached step time grows with S")
+    args = ap.parse_args()
+    sys.exit(main(smoke=args.smoke))

@@ -26,7 +26,7 @@ def main(argv=None) -> int:
                    bench_fig5_table2_task_times, bench_fig6_busy_cluster,
                    bench_fig7_resilience, bench_claims, bench_roofline,
                    bench_batch_policy, bench_context_plane,
-                   bench_continuous_batching)
+                   bench_continuous_batching, bench_live_decode)
 
     t0 = time.time()
     if args.smoke:
@@ -35,6 +35,8 @@ def main(argv=None) -> int:
         # asserts plan/executed byte-accounting equality and the
         # budgeted-vs-idle staging-makespan criterion
         bench_context_plane.main(smoke=True)
+        # asserts slot-cached per-step decode time flat in prefix length
+        bench_live_decode.main(smoke=True)
         bench_roofline.main()
         print(f"\nsmoke benchmarks done in {time.time()-t0:.1f}s")
         return 0
@@ -51,6 +53,7 @@ def main(argv=None) -> int:
     bench_batch_policy.main_mixed()
     bench_continuous_batching.main()
     bench_context_plane.main()
+    bench_live_decode.main()
     bench_roofline.main()
     print(f"\nall benchmarks done in {time.time()-t0:.1f}s")
     return 0

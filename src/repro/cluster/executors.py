@@ -12,9 +12,10 @@ Both executors drive the SAME :class:`~repro.cluster.scheduler.Scheduler`
 * :class:`LiveExecutor` — really materialises contexts (device_put, jit)
   and runs forward passes on this container's device, measuring wall
   time.  Stream batches are advanced one decode step at a time through a
-  per-recipe ``step_fn``; the JAX batch is RE-FORMED between steps with
-  bucketed shapes (see :mod:`repro.inference.streaming`) so membership
-  churn costs a bounded number of recompiles.
+  per-recipe ``step_fn``; the decode state lives in a persistent device
+  slot pool (see :mod:`repro.inference.streaming`) so membership churn
+  costs one admission prefill per joiner — never a re-prefill of rows
+  already in flight — and each step is O(1) in prefix length.
 
 Deprecated exclusive tasks (``Task`` / ``submit_sweep``) keep the
 pre-redesign run-to-completion path in both backends, which is also the
@@ -546,11 +547,12 @@ class LiveExecutor(_PlanOpExecution):
     step with the library payloads and the list of active member
     requests, it returns ``{request_id: step_output}``; outputs
     accumulate in ``results[request_id]`` (a list, one entry per step).
-    The step function re-forms its padded device batch between calls —
-    membership changed hands under it — with bucketed shapes so the
-    number of recompiles stays bounded
-    (:class:`repro.inference.streaming.StreamingDecoder` does exactly
-    this for the PfF application).
+    Membership changes hands between calls: the step function binds
+    joiners into a persistent slot pool (admission prefill), steps the
+    whole pool through one cached ``decode_step``, and frees finished
+    slots (:class:`repro.inference.streaming.StreamingDecoder` does
+    exactly this for the PfF application); the executor feeds the pool's
+    measured per-slot bytes back into the recipe's slot budget.
 
     All simulated workers share this container's device; what is real is
     the context lifecycle — import, weight materialisation, jit compile
@@ -660,6 +662,15 @@ class LiveExecutor(_PlanOpExecution):
                 outs = step_fn(lib.context.payloads, members)
                 for rid, frag in outs.items():
                     self.results.setdefault(rid, []).append(frag)
+                # slot budgets from measured memory: a step function that
+                # hosts a slot-pool decoder exposes the REAL per-slot cache
+                # footprint after its first admission prefill; feed it back
+                # so this recipe's slot budgets stop using the
+                # KV_BYTES_PER_PARAM analytic guess (ROADMAP item).
+                dec = lib.context.payloads.get("_stream_decoder")
+                measured = int(getattr(dec, "measured_slot_bytes", 0) or 0)
+                if measured and measured != lib.recipe.measured_slot_bytes:
+                    lib.recipe.record_slot_bytes(measured)
             finished = lib.step()
             now = self.now()
             stepped = True

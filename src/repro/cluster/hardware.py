@@ -38,7 +38,11 @@ REF_ACTIVE_PARAMS = 1.71e9          # SmolLM2-1.7B (the calibration anchor)
 # marginal cost (KV reads, sampling).  step_time(ap, 1) == infer_time(ap)
 # by construction, so the calibrated batch-task numbers are unchanged; a
 # full dynamic batch approaches a 1/DECODE_FIXED_FRAC ≈ 4x per-request
-# throughput gain — the headroom continuous admission harvests.
+# throughput gain — the headroom continuous admission harvests.  The live
+# slot-pool decoder (inference/streaming.py) realises the same shape: one
+# cached decode_step per batch whose cost is independent of each row's
+# prefix length, so sim and live step-time curves agree
+# (benchmarks/bench_live_decode.py).
 DECODE_FIXED_FRAC = 0.75
 
 

@@ -92,6 +92,14 @@ def resident_footprint(elements, tier: Tier) -> int:
 # to derive a library's continuous-batching slot budget when the recipe does
 # not pin an explicit ``slot_bytes``.
 KV_BYTES_PER_PARAM = 0.25
+
+# Live-measured per-slot decode-state bytes, keyed by recipe key: the live
+# executor records the REAL cache footprint (jax.Array.nbytes over the slot
+# pool's cache pytree / capacity) after the first admission prefill, and
+# every ContextRecipe instance with the same key sees it — replacing the
+# KV_BYTES_PER_PARAM analytic guess for slot budgets (ROADMAP: slot budgets
+# from measured memory).
+_MEASURED_SLOT_BYTES: Dict[str, int] = {}
 # One library never grows its dynamic batch past this many slots, regardless
 # of free device memory (straggler/jitter control, same spirit as vLLM's
 # max_num_seqs).
@@ -117,7 +125,11 @@ class ContextRecipe:
 
     @property
     def key(self) -> str:
-        return content_hash(self.fn_name, [e.key for e in self.elements])
+        k = self.__dict__.get("_key")      # memoised: hot in scheduler loops
+        if k is None:
+            k = content_hash(self.fn_name, [e.key for e in self.elements])
+            object.__setattr__(self, "_key", k)
+        return k
 
     def element(self, name: str) -> ContextElement:
         for e in self.elements:
@@ -134,10 +146,30 @@ class ContextRecipe:
         return self.nbytes(Tier.DISK)
 
     def decode_slot_bytes(self, active_params: float) -> int:
-        """Device bytes one in-flight request pins while decoding."""
+        """Device bytes one in-flight request pins while decoding.
+
+        Preference order: an explicit ``slot_bytes`` pin, then the
+        live-measured per-slot footprint (``record_slot_bytes``), then the
+        ``KV_BYTES_PER_PARAM`` analytic estimate."""
         if self.slot_bytes:
             return self.slot_bytes
+        measured = _MEASURED_SLOT_BYTES.get(self.key)
+        if measured:
+            return measured
         return max(int(active_params * KV_BYTES_PER_PARAM), 1)
+
+    def record_slot_bytes(self, nbytes: int) -> None:
+        """Feed back a live-measured per-slot decode footprint (bytes).
+
+        Latest measurement wins: the figure reflects the measuring pool's
+        ring length (its ``max_len``), so a decoder re-built with a longer
+        ring simply re-records after its first admission."""
+        if nbytes > 0:
+            _MEASURED_SLOT_BYTES[self.key] = int(nbytes)
+
+    @property
+    def measured_slot_bytes(self) -> int:
+        return _MEASURED_SLOT_BYTES.get(self.key, 0)
 
     def with_elements(self, *extra: ContextElement) -> "ContextRecipe":
         return dataclasses.replace(self, elements=self.elements + extra)

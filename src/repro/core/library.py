@@ -83,7 +83,11 @@ class Library:
 
         Derived from the hardware catalog: device memory left after the
         recipe's resident bytes, divided by the per-request decode-state
-        footprint, clamped to [1, MAX_BATCH_SLOTS]."""
+        footprint, clamped to [1, MAX_BATCH_SLOTS].  In live mode the
+        footprint is the MEASURED per-slot cache bytes once the executor
+        has fed one back (see ``ContextRecipe.record_slot_bytes``); the
+        analytic ``KV_BYTES_PER_PARAM`` estimate only seeds the first
+        admission."""
         free = device_bytes - self.recipe.nbytes(Tier.DEVICE)
         per_slot = self.recipe.decode_slot_bytes(active_params)
         return max(1, min(MAX_BATCH_SLOTS, free // per_slot))

@@ -2,8 +2,10 @@
 from .engine import GenerationResult, InferenceEngine
 from .pff import (MAX_NEW, PROMPT_LEN, build_context_recipe, infer_claims,
                   sweep_accuracy)
-from .streaming import StreamingDecoder, make_pff_step_fn, stream_verdict
+from .streaming import (SlotPool, StreamingDecoder, make_pff_step_fn,
+                        stream_verdict)
 
 __all__ = ["GenerationResult", "InferenceEngine", "MAX_NEW", "PROMPT_LEN",
-           "StreamingDecoder", "build_context_recipe", "infer_claims",
-           "make_pff_step_fn", "stream_verdict", "sweep_accuracy"]
+           "SlotPool", "StreamingDecoder", "build_context_recipe",
+           "infer_claims", "make_pff_step_fn", "stream_verdict",
+           "sweep_accuracy"]

@@ -5,12 +5,19 @@ The engine is the computational payload the context-management layer hosts:
 executables, and the tokenizer together form the *pervasive context*; an
 :class:`InferenceEngine` instance is exactly what a library process keeps
 alive between tasks.
+
+The decode loop never round-trips logits to the host: the greedy path is a
+single ``lax.scan`` over the whole budget (one dispatch per ``generate``),
+and the sampled path fuses token selection into the jitted step (one small
+int32 transfer per token instead of a materialised (B, V) logits array) —
+so the engine baseline the slot-pool streaming decoder is measured against
+is compute-bound, not dispatch-bound.
 """
 from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,7 +41,8 @@ class InferenceEngine:
         # the compiled executables are part of the context (DESIGN.md §2)
         self._prefill = jax.jit(
             functools.partial(M.prefill, cfg, max_len=max_len))
-        self._decode = jax.jit(functools.partial(M.decode_step, cfg))
+        self._decode_sample = jax.jit(self._decode_sample_impl)
+        self._greedy_loops: Dict[int, Any] = {}   # n_steps -> compiled scan
 
     # ------------------------------------------------------------------
     def generate(self, batch: Dict[str, Any], *, max_new: int = 16,
@@ -46,16 +54,50 @@ class InferenceEngine:
         assert S + max_new <= self.max_len, (S, max_new, self.max_len)
         logits, cache = self._prefill(self.params, batch)
         key = jax.random.PRNGKey(seed)
-        out: List[jnp.ndarray] = []
+        if temperature <= 0.0:
+            tok0 = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            out = self._greedy_loop(max_new - 1)(self.params, cache, tok0)
+            toks = jnp.concatenate([tok0[:, None], out], axis=1)
+            return GenerationResult(np.asarray(toks), S, max_new)
         tok = self._select(logits[:, -1], temperature, key)
-        out.append(tok)
+        out = [tok]
         for i in range(max_new - 1):
-            logits, cache = self._decode(self.params, cache, tok[:, None])
-            key = jax.random.fold_in(key, i)
-            tok = self._select(logits[:, -1], temperature, key)
+            tok, cache = self._decode_sample(
+                self.params, cache, tok, jax.random.fold_in(key, i),
+                jnp.float32(temperature))
             out.append(tok)
         return GenerationResult(np.asarray(jnp.stack(out, axis=1)), S,
                                 max_new)
+
+    def _decode_sample_impl(self, params, cache, tok, key, temperature
+                            ) -> Tuple[jnp.ndarray, Any]:
+        """One decode step with sampling FUSED: only the (B,) int32 token
+        leaves the device, never the (B, V) logits."""
+        logits, cache = M.decode_step(self.cfg, params, cache, tok[:, None])
+        nxt = jax.random.categorical(key, logits[:, -1] / temperature,
+                                     axis=-1).astype(jnp.int32)
+        return nxt, cache
+
+    def _greedy_loop(self, n_steps: int):
+        """Whole greedy continuation as ONE jitted ``lax.scan`` dispatch."""
+        fn = self._greedy_loops.get(n_steps)
+        if fn is None:
+            cfg = self.cfg
+
+            def loop(params, cache, tok0):
+                def body(carry, _):
+                    cache, tok = carry
+                    logits, cache = M.decode_step(cfg, params, cache,
+                                                  tok[:, None])
+                    nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+                    return (cache, nxt), nxt
+
+                (_, _), toks = jax.lax.scan(body, (cache, tok0), None,
+                                            length=n_steps)
+                return toks.T                      # (B, n_steps)
+
+            fn = self._greedy_loops[n_steps] = jax.jit(loop)
+        return fn
 
     @staticmethod
     def _select(logits, temperature: float, key) -> jnp.ndarray:

@@ -1,26 +1,41 @@
-"""Live continuous-batching decoder: re-formed padded batches per step.
+"""Live continuous-batching decoder: a persistent slot pool of KV state.
 
 The LIVE leg of the request-stream redesign.  A library's dynamic batch
 changes membership between decode steps, so the device batch cannot be a
 fixed (B, S) array compiled once per task.  :class:`StreamingDecoder`
-keeps per-request token state on the host and, at EVERY step, re-forms
-the padded JAX batch for the current membership:
+keeps the decode state RESIDENT on the device instead: a
+:class:`SlotPool` of ``capacity`` rows of KV cache (ring length
+``max_len``) that requests bind to on admission and free on completion.
 
-* batch dim padded up to the next power of two;
-* sequence dim padded up to the next multiple of 8;
+* **admit** — a new request's prompt runs through a prompt-only prefill
+  (``M.prefill_into_slots``) that scatters its K/V + position into the
+  shared cache at its slot, without touching live rows;
+* **step** — ONE cached ``M.decode_step`` over all slots advances every
+  active row by one token at O(1) FLOPs/token (each row embeds/RoPEs at
+  its own position, ring-writes at its own slot, masks at its own
+  length via the vector-``n_valid`` decode-attention kernel);
+* **finish** — the slot returns to the free list; its stale K/V is fully
+  overwritten by the next tenant's admission prefill, so reuse never
+  leaks context across requests.
 
-so however requests churn, the number of distinct compiled shapes — and
-hence XLA recompiles — is O(log max_batch · max_len / 8), not O(steps).
+Compiled-shape accounting: the decode step compiles once per pool
+capacity (capacities grow by doubling), prefill once per (admission
+batch bucket, prompt-length bucket) — O(log) shapes total, and crucially
+O(1) in the number of decode steps, where the previous full-forward
+re-run was O(S) FLOPs per token.  Per-slot cache bytes are MEASURED
+after the first admission (``measured_slot_bytes``) and fed back into
+``ContextRecipe.decode_slot_bytes`` by the live executor, replacing the
+``KV_BYTES_PER_PARAM`` analytic guess when sizing slot budgets.
 
-Decoding runs through the model's full-forward path (prompt + generated
-so far each step) with per-row logit gather at each request's own last
-position; causal attention makes right-padding inert, so the streamed
-greedy tokens are exactly what a per-request full-forward loop produces
-(asserted in tests/test_streaming_live.py).
+The pre-slot full-forward path (prompt + generated prefix re-run through
+``M.forward`` every step; right-padding inert under causal attention)
+survives as ``slot_cached=False`` — the token-exactness reference the
+slot path is asserted against in tests/test_streaming_live.py.
 """
 from __future__ import annotations
 
-from typing import Dict, Iterable, List, Sequence
+import functools
+from typing import Dict, Iterable, List, Optional, Sequence
 
 import jax
 import numpy as np
@@ -42,21 +57,73 @@ def _round_up(n: int, m: int) -> int:
     return ((n + m - 1) // m) * m
 
 
+class SlotPool:
+    """Fixed-capacity allocator binding request ids to cache rows."""
+
+    def __init__(self, capacity: int = 0):
+        self.capacity = capacity
+        self.slot_of: Dict[int, int] = {}
+        self._free: List[int] = list(range(capacity - 1, -1, -1))
+
+    def bind(self, rid: int) -> int:
+        slot = self._free.pop()
+        self.slot_of[rid] = slot
+        return slot
+
+    def release(self, rid: int) -> Optional[int]:
+        slot = self.slot_of.pop(rid, None)
+        if slot is not None:
+            self._free.append(slot)
+        return slot
+
+    def grow(self, capacity: int) -> None:
+        assert capacity >= self.capacity
+        self._free[:0] = range(capacity - 1, self.capacity - 1, -1)
+        self.capacity = capacity
+
+    @property
+    def free(self) -> int:
+        return len(self._free)
+
+    def __len__(self) -> int:
+        return len(self.slot_of)
+
+
 class StreamingDecoder:
-    """Greedy decoder over a membership-changing request batch."""
+    """Greedy decoder over a membership-changing request batch.
+
+    ``slot_cached=True`` (default): persistent slot-pool decode, O(1) per
+    token.  ``slot_cached=False``: the full-forward reference path, O(S)
+    per token.  Both produce identical greedy tokens while sequences stay
+    within ``max_len`` (asserted in tests under membership churn).
+
+    ``b_max`` pre-sizes the pool (typically the library's slot budget, so
+    the decode step compiles exactly once); it is a sizing hint, not a
+    hard cap — if the scheduler ever admits beyond it the pool doubles
+    rather than dropping in-flight requests.
+    """
 
     def __init__(self, cfg, params, tokenizer, template, *,
-                 prompt_len: int = PROMPT_LEN):
+                 prompt_len: int = PROMPT_LEN, slot_cached: bool = True,
+                 max_len: Optional[int] = None, b_max: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.tokenizer = tokenizer
         self.template = template
         self.prompt_len = prompt_len
+        self.slot_cached = slot_cached
+        self.max_len = max_len or prompt_len + 64
         self._tokens: Dict[int, List[int]] = {}   # rid -> prompt+generated
         self._prompt_end: Dict[int, int] = {}
         self._fwd = jax.jit(
             lambda p, toks: M.forward(cfg, p, {"tokens": toks}))
+        self._decode = jax.jit(functools.partial(M.decode_step, cfg))
+        self._prefill_slots = jax.jit(functools.partial(
+            M.prefill_into_slots, cfg, max_len=self.max_len))
         self._shapes: set = set()                 # compile-shape audit
+        self.pool = SlotPool(b_max or 0)
+        self._cache = None                        # device cache pytree
+        self.measured_slot_bytes = 0              # real per-slot footprint
 
     # -- membership -----------------------------------------------------
     def ensure(self, rid: int, claim) -> None:
@@ -65,11 +132,20 @@ class StreamingDecoder:
             return
         ids = self.tokenizer.encode(
             self.template.render(claim))[:self.prompt_len]
-        self._tokens[rid] = list(ids)
-        self._prompt_end[rid] = len(ids)
+        self.ensure_tokens(rid, list(ids))
+
+    def ensure_tokens(self, rid: int, token_ids: List[int]) -> None:
+        """Admit ``rid`` with pre-tokenized prompt ids (idempotent)."""
+        if rid in self._tokens:
+            return
+        self._tokens[rid] = list(token_ids)
+        self._prompt_end[rid] = len(token_ids)
 
     def finish(self, rid: int) -> List[int]:
-        """Release ``rid``'s state; returns its generated token ids."""
+        """Release ``rid``'s state (and its slot); returns its generated
+        token ids.  The freed slot's stale K/V is inert: the next tenant's
+        admission prefill overwrites the whole cache row."""
+        self.pool.release(rid)
         toks = self._tokens.pop(rid, [])
         end = self._prompt_end.pop(rid, len(toks))
         return toks[end:]
@@ -78,12 +154,104 @@ class StreamingDecoder:
     def step(self, rids: Sequence[int]) -> Dict[int, int]:
         """One greedy decode step for the CURRENT membership.
 
-        Re-forms the padded (B, S) batch — B/S bucketed — runs the full
-        forward, gathers each row's logits at its own last position, and
-        appends the argmax token.  Returns {rid: new_token}."""
+        Slot mode: one cached ``decode_step`` over the pool advances the
+        rows already bound; newly seen rids are admitted via
+        ``prefill_into_slots`` (their first token comes from the prefill
+        logits).  Full mode: re-form the padded (B, S) batch and run the
+        full forward.  Returns {rid: new_token}."""
         rids = list(rids)
         if not rids:
             return {}
+        if not self.slot_cached:
+            return self._step_full(rids)
+        active = [r for r in rids if r in self.pool.slot_of]
+        fresh = [r for r in rids if r not in self.pool.slot_of]
+        out: Dict[int, int] = {}
+        if len(fresh) > self.pool.free:
+            self._grow(len(self.pool.slot_of) + len(fresh))
+        elif fresh and self._cache is None:       # b_max pre-sized the pool
+            self._cache = M.cache_init(self.cfg, self.pool.capacity,
+                                       self.max_len)
+        if active:
+            out.update(self._decode_active(active))
+        if fresh:
+            out.update(self._admit(fresh))
+        return out
+
+    def _decode_active(self, active: List[int]) -> Dict[int, int]:
+        B = self.pool.capacity
+        toks = np.full((B, 1), PAD, dtype=np.int32)
+        mask = np.zeros((B,), dtype=bool)
+        for r in active:
+            s = self.pool.slot_of[r]
+            toks[s, 0] = self._tokens[r][-1]
+            mask[s] = True
+        self._shapes.add(("decode", B))
+        logits, self._cache = self._decode(self.params, self._cache, toks,
+                                           mask)
+        logits = np.asarray(logits)
+        out: Dict[int, int] = {}
+        for r in active:
+            nxt = int(np.argmax(logits[self.pool.slot_of[r], -1]))
+            self._tokens[r].append(nxt)
+            out[r] = nxt
+        return out
+
+    def _admit(self, fresh: List[int]) -> Dict[int, int]:
+        """Prefill-into-slots for newly admitted rows.  The admission batch
+        is bucketed (rows → pow2, prompt → multiple of 8); padding rows
+        DUPLICATE row 0 (same tokens, same slot), so the duplicate scatter
+        writes identical bytes and live rows stay untouched."""
+        slots = [self.pool.bind(r) for r in fresh]
+        seqs = [self._tokens[r] for r in fresh]
+        S = min(_round_up(max(len(s) for s in seqs), 8), self.max_len)
+        lens = [min(len(s), S) for s in seqs]     # exactness holds ≤ max_len
+        Bn = _next_pow2(len(fresh))
+        arr = np.full((Bn, S), PAD, dtype=np.int32)
+        for i, s in enumerate(seqs):
+            arr[i, :lens[i]] = s[:lens[i]]
+        arr[len(fresh):] = arr[0]
+        pad = [slots[0]] * (Bn - len(fresh))
+        slot_arr = np.asarray(slots + pad, np.int32)
+        len_arr = np.asarray(lens + [lens[0]] * (Bn - len(fresh)), np.int32)
+        self._shapes.add(("prefill", Bn, S, self.pool.capacity))
+        logits, self._cache = self._prefill_slots(
+            self.params, {"tokens": arr}, self._cache, slot_arr, len_arr)
+        if not self.measured_slot_bytes:
+            total = sum(x.nbytes
+                        for x in jax.tree_util.tree_leaves(self._cache))
+            self.measured_slot_bytes = int(total // self.pool.capacity)
+        logits = np.asarray(logits)
+        out: Dict[int, int] = {}
+        for i, r in enumerate(fresh):
+            nxt = int(np.argmax(logits[i, 0]))
+            self._tokens[r].append(nxt)
+            out[r] = nxt
+        return out
+
+    def _grow(self, needed: int) -> None:
+        """Capacity to the next power of two ≥ ``needed``; live rows are
+        copied across, so growth is invisible to in-flight requests."""
+        cap = max(self.pool.capacity, 1)
+        while cap < needed:
+            cap *= 2
+        if cap == self.pool.capacity:
+            return
+        new_cache = M.cache_init(self.cfg, cap, self.max_len)
+        if self._cache is not None:
+            old = self.pool.capacity
+            new_cache = {
+                "stages": jax.tree_util.tree_map(
+                    lambda big, small: big.at[:, :old].set(small),
+                    new_cache["stages"], self._cache["stages"]),
+                "pos": new_cache["pos"].at[:old].set(self._cache["pos"]),
+            }
+        self._cache = new_cache
+        self.pool.grow(cap)
+        self.measured_slot_bytes = 0              # re-measure at new B
+
+    def _step_full(self, rids: List[int]) -> Dict[int, int]:
+        """Reference path: full forward over prompt+generated each step."""
         seqs = [self._tokens[r] for r in rids]
         lens = [len(s) for s in seqs]
         B = _next_pow2(len(rids))
@@ -91,7 +259,7 @@ class StreamingDecoder:
         arr = np.full((B, S), PAD, dtype=np.int32)
         for i, s in enumerate(seqs):
             arr[i, :len(s)] = s
-        self._shapes.add((B, S))
+        self._shapes.add(("full", B, S))
         logits = np.asarray(self._fwd(self.params, arr))
         out: Dict[int, int] = {}
         for i, rid in enumerate(rids):
@@ -102,11 +270,15 @@ class StreamingDecoder:
 
     @property
     def shape_buckets(self) -> int:
-        """Distinct (B, S) buckets seen — an upper bound on recompiles."""
+        """Distinct compiled shapes seen — an upper bound on recompiles.
+        O(1) in decode steps for the slot path (decode compiles once per
+        pool capacity; prefill once per admission bucket)."""
         return len(self._shapes)
 
 
-def make_pff_step_fn(prompt_len: int = PROMPT_LEN):
+def make_pff_step_fn(prompt_len: int = PROMPT_LEN, *,
+                     slot_cached: bool = True,
+                     max_len: Optional[int] = None):
     """Step function for :class:`~repro.cluster.LiveExecutor.step_fns`.
 
     Lazily builds a :class:`StreamingDecoder` inside the library's
@@ -120,7 +292,8 @@ def make_pff_step_fn(prompt_len: int = PROMPT_LEN):
             ci = payloads["context_inputs"]
             dec = StreamingDecoder(engine.cfg, engine.params,
                                    ci["tokenizer"], ci["template"],
-                                   prompt_len=prompt_len)
+                                   prompt_len=prompt_len,
+                                   slot_cached=slot_cached, max_len=max_len)
             payloads["_stream_decoder"] = dec
         for r in members:
             dec.ensure(r.request_id, r.payload)

@@ -9,7 +9,9 @@ intensity ~G. The kernel therefore:
   read exactly ONCE (the GQA bandwidth win — a naive per-q-head kernel would
   read the cache G times);
 - carries the online-softmax state (m, l, acc) in fp32 VMEM scratch;
-- masks ring slots >= n_valid (scalar in SMEM).
+- masks ring slots >= n_valid[b] ((B,) vector in SMEM, indexed by the batch
+  program — each row of a persistent slot pool is masked at its OWN length,
+  so a dynamic batch with ragged prefixes decodes in one kernel launch).
 
 G is padded to the 8-sublane minimum by the wrapper when n_heads == n_kv
 (MHA decode).
@@ -29,6 +31,7 @@ NEG_INF = -1e30
 
 def _kernel(n_valid_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
             scale: float, softcap: float, bk: int, n_kv_blocks: int):
+    bi = pl.program_id(0)
     ki = pl.program_id(2)
 
     @pl.when(ki == 0)
@@ -37,7 +40,7 @@ def _kernel(n_valid_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    n_valid = n_valid_ref[0]
+    n_valid = n_valid_ref[bi]
     block_live = ki * bk < n_valid
 
     @pl.when(block_live)
@@ -72,7 +75,7 @@ def _kernel(n_valid_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 def decode_attention_pallas(q, k, v, n_valid, *, softcap: float = 0.0,
                             scale: float | None = None, bk: int = 256,
                             interpret: bool = False):
-    """q: (B,1,H,hd); k,v: (B,T,K,hd); n_valid scalar int32."""
+    """q: (B,1,H,hd); k,v: (B,T,K,hd); n_valid int32 scalar or (B,)."""
     B, Sq, H, hd = q.shape
     assert Sq == 1, "decode kernel is single-token"
     T, K = k.shape[1], k.shape[2]
@@ -86,7 +89,10 @@ def decode_attention_pallas(q, k, v, n_valid, *, softcap: float = 0.0,
     qg = q.reshape(B, K, G, hd)                        # group q-heads by kv head
     kt = k.transpose(0, 2, 1, 3)                       # (B,K,T,hd)
     vt = v.transpose(0, 2, 1, 3)
-    n_valid_arr = jnp.asarray(n_valid, jnp.int32).reshape(1)
+    n_valid_arr = jnp.asarray(n_valid, jnp.int32)
+    if n_valid_arr.ndim == 0:
+        n_valid_arr = jnp.full((B,), n_valid_arr, jnp.int32)
+    assert n_valid_arr.shape == (B,), n_valid_arr.shape
 
     grid = (B, K, n_kv_blocks)
     kern = functools.partial(_kernel, scale=scale, softcap=softcap, bk=bk,

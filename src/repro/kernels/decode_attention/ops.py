@@ -15,7 +15,8 @@ def decode_attention(q, k, v, n_valid, *, softcap: float = 0.0,
                      scale: float | None = None,
                      use_pallas: bool | None = None,
                      interpret: bool = False):
-    """q: (B,1,H,hd); k,v ring cache (B,T,K,hd); n_valid scalar int32."""
+    """q: (B,1,H,hd); k,v ring cache (B,T,K,hd); n_valid int32 scalar or
+    (B,) vector (per-row valid length — slot-pool decode)."""
     if use_pallas is None:
         use_pallas = _on_tpu()
     T = k.shape[1]

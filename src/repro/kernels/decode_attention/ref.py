@@ -8,13 +8,18 @@ import jax.numpy as jnp
 def decode_attention_ref(q, k, v, n_valid, *, softcap: float = 0.0,
                          scale: float | None = None):
     """q: (B,Sq,H,hd) (Sq is typically 1); k,v: (B,T,K,hd) ring cache;
-    n_valid: scalar int32 — number of valid slots (ring slots < n_valid are
-    attended; with a full ring n_valid == T). Returns (B,Sq,H,hd)."""
+    n_valid: int32 scalar or (B,) vector — number of valid slots per row
+    (ring slots < n_valid[b] are attended; with a full ring n_valid == T).
+    A vector lets every row of a persistent slot pool sit at its own
+    sequence length.  Returns (B,Sq,H,hd)."""
     B, Sq, H, hd = q.shape
     T, K = k.shape[1], k.shape[2]
     G = H // K
     if scale is None:
         scale = 1.0 / (hd ** 0.5)
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    if n_valid.ndim == 0:
+        n_valid = jnp.full((B,), n_valid, jnp.int32)
     # keep the KV cache in its storage dtype — an explicit .astype(f32)
     # materialises a double-width copy of the whole cache shard per step
     # (granite decode_32k: 9.7 GB of temps — EXPERIMENTS.md §Perf G2)
@@ -23,7 +28,8 @@ def decode_attention_ref(q, k, v, n_valid, *, softcap: float = 0.0,
                         preferred_element_type=jnp.float32) * scale
     if softcap > 0.0:
         scores = softcap * jnp.tanh(scores / softcap)
-    mask = jnp.arange(T)[None, None, None, None, :] < n_valid
+    mask = (jnp.arange(T)[None, None, None, None, :]
+            < n_valid[:, None, None, None, None])
     scores = jnp.where(mask, scores, -jnp.inf)
     probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
     out = jnp.einsum("bkgst,btkh->bskgh", probs, v,

@@ -7,7 +7,10 @@ CPU (and in the dry-run).
 Shapes:  x (B,S,D); q (B,S,H,hd); k,v (B,T,K,hd) with H = G*K (GQA).
 KV caches are ring buffers of length T = min(window or max_len, max_len);
 slot(pos) = pos % T; K is stored *post-RoPE* so ring eviction needs no
-re-rotation.
+re-rotation.  Decode positions are PER-ROW: ``pos`` may be a (B,) vector
+(scalar broadcasts), each row ring-writing at its own slot and masking at
+its own length — what lets a persistent slot pool decode a ragged dynamic
+batch in lock-step.
 """
 from __future__ import annotations
 
@@ -124,32 +127,50 @@ def gqa_cache_write_prefill(cache_layer, cfg, k, v, max_len: int):
     return {"k": upd(cache_layer["k"], k), "v": upd(cache_layer["v"], v)}
 
 
-def gqa_decode(p, cfg, x, cache_layer, pos):
-    """One-token decode for one layer. x: (B,1,D); pos: scalar int32 = number
-    of tokens already in context. Returns (out, new_cache_layer)."""
-    B = x.shape[0]
-    T = cache_layer["k"].shape[1]
-    positions = jnp.full((1,), pos, dtype=jnp.int32)
-    q, k, v = gqa_project_qkv(p, cfg, x, positions)   # q (B,1,H,hd); k,v (B,1,K,hd)
-    slot = pos % T
+def gqa_cache_write_decode(cache_layer, cfg, k, v, slots):
+    """Ring-write one decode token's K/V (B,1,K,hd) at PER-ROW ``slots``
+    (B,) of one layer's cache (B,T,K,hd) — a batched scatter, so every row
+    of a persistent slot pool advances at its own ring position."""
+    B = k.shape[0]
+    rows = jnp.arange(B)
 
     def upd(c, val):
-        return jax.lax.dynamic_update_slice_in_dim(c, val, slot, axis=1)
+        return c.at[rows, slots].set(val[:, 0])
 
     if cfg.kv_cache_dtype == "int8":       # §Perf G5
         kq, ks = _quantize_kv(k)
         vq, vs = _quantize_kv(v)
-        new_cache = {"k": upd(cache_layer["k"], kq),
-                     "v": upd(cache_layer["v"], vq),
-                     "k_scale": upd(cache_layer["k_scale"], ks),
-                     "v_scale": upd(cache_layer["v_scale"], vs)}
+        return {"k": upd(cache_layer["k"], kq),
+                "v": upd(cache_layer["v"], vq),
+                "k_scale": upd(cache_layer["k_scale"], ks),
+                "v_scale": upd(cache_layer["v_scale"], vs)}
+    return {"k": upd(cache_layer["k"], k), "v": upd(cache_layer["v"], v)}
+
+
+def decode_positions(pos, batch: int):
+    """Normalise a decode position to per-row (B,) int32 (scalar broadcasts
+    — the fixed-lockstep engine path and the slot pool share one code path)."""
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        pos = jnp.full((batch,), pos, jnp.int32)
+    return pos
+
+
+def gqa_decode(p, cfg, x, cache_layer, pos):
+    """One-token decode for one layer. x: (B,1,D); pos: int32 scalar or (B,)
+    = number of tokens already in each row's context (per-row positions let
+    a slot pool decode a ragged batch). Returns (out, new_cache_layer)."""
+    B = x.shape[0]
+    T = cache_layer["k"].shape[1]
+    pos = decode_positions(pos, B)
+    q, k, v = gqa_project_qkv(p, cfg, x, pos[:, None])  # q (B,1,H,hd); k,v (B,1,K,hd)
+    new_cache = gqa_cache_write_decode(cache_layer, cfg, k, v, pos % T)
+    if cfg.kv_cache_dtype == "int8":       # §Perf G5
         ck = _dequantize_kv(new_cache["k"], new_cache["k_scale"], k.dtype)
         cv = _dequantize_kv(new_cache["v"], new_cache["v_scale"], v.dtype)
     else:
-        new_cache = {"k": upd(cache_layer["k"], k),
-                     "v": upd(cache_layer["v"], v)}
         ck, cv = new_cache["k"], new_cache["v"]
-    n_valid = jnp.minimum(pos + 1, T)
+    n_valid = jnp.minimum(pos + 1, T)                   # (B,)
     out = decode_ops.decode_attention(q, ck, cv, n_valid,
                                       softcap=cfg.attn_logit_softcap)
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
@@ -272,26 +293,27 @@ def mla_cache_write_prefill(cache_layer, cfg, ckv, k_rope, max_len: int):
 def mla_decode(p, cfg, x, cache_layer, pos):
     """Absorbed-form MLA decode: attention runs in the compressed latent space
     (this is the TPU-friendly 'weight absorption' trick from the DeepSeek
-    papers — K/V are never decompressed per step)."""
+    papers — K/V are never decompressed per step).  ``pos`` is int32 scalar
+    or (B,) per-row positions (slot-pool decode)."""
     m = cfg.mla
     B = x.shape[0]
     T = cache_layer["ckv"].shape[1]
-    positions = jnp.full((1,), pos, dtype=jnp.int32)
+    pos = decode_positions(pos, B)
+    positions = pos[:, None]                             # (B,1)
     q_nope, q_rope = _mla_q(p, cfg, x, positions)        # (B,1,H,·)
     ckv_new, k_rope_new = _mla_kv_latent(p, cfg, x, positions)
-    slot = pos % T
-    ckv = jax.lax.dynamic_update_slice_in_dim(cache_layer["ckv"], ckv_new,
-                                              slot, axis=1)
-    k_rope = jax.lax.dynamic_update_slice_in_dim(cache_layer["k_rope"],
-                                                 k_rope_new, slot, axis=1)
+    rows = jnp.arange(B)
+    slots = pos % T
+    ckv = cache_layer["ckv"].at[rows, slots].set(ckv_new[:, 0])
+    k_rope = cache_layer["k_rope"].at[rows, slots].set(k_rope_new[:, 0])
     # absorb wk_b into the query: q_lat (B,1,H,r)
     q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["wk_b"])
     scale = 1.0 / jnp.sqrt(jnp.float32(m.qk_nope_head_dim + m.qk_rope_head_dim))
     scores = (jnp.einsum("bshr,btr->bhst", q_lat, ckv)
               + jnp.einsum("bshk,btk->bhst", q_rope, k_rope)).astype(jnp.float32)
     scores = scores * scale
-    n_valid = jnp.minimum(pos + 1, T)
-    mask = jnp.arange(T)[None, None, None, :] < n_valid
+    n_valid = jnp.minimum(pos + 1, T)                    # (B,)
+    mask = jnp.arange(T)[None, None, None, :] < n_valid[:, None, None, None]
     scores = jnp.where(mask, scores, -jnp.inf)
     probs = jax.nn.softmax(scores, axis=-1).astype(ckv.dtype)
     out_lat = jnp.einsum("bhst,btr->bshr", probs, ckv)   # (B,1,H,r)

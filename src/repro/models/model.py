@@ -127,7 +127,11 @@ def _embed_tokens(cfg, params, tokens, base_pos=None):
         if base_pos is None:
             x = x + table[None, :S]
         else:
-            x = x + jax.lax.dynamic_slice_in_dim(table, base_pos, S)[None]
+            base = jnp.asarray(base_pos, jnp.int32)
+            if base.ndim == 0:
+                x = x + jax.lax.dynamic_slice_in_dim(table, base, S)[None]
+            else:            # per-row decode positions: (B,) gather
+                x = x + table[base[:, None] + jnp.arange(S)]
     return x
 
 
@@ -318,12 +322,15 @@ def loss_fn(cfg, params, batch):
 # ---------------------------------------------------------------------------
 
 def cache_init(cfg, batch: int, max_len: int):
+    """Decode cache with PER-ROW positions: ``cache["pos"]`` is (B,) int32,
+    so each row decodes at its own sequence length (slot-pool serving); the
+    lock-step engine path simply keeps all rows equal."""
     dtype = jnp.dtype(cfg.dtype)
     caches = []
     for btype, n in stages_for(cfg):
         ci = BLOCKS[btype]["cache_init"]
         caches.append(ci(cfg, batch, max_len, n, dtype))
-    return {"stages": caches, "pos": jnp.zeros((), jnp.int32)}
+    return {"stages": caches, "pos": jnp.zeros((batch,), jnp.int32)}
 
 
 def prefill(cfg, params, batch, max_len: int):
@@ -332,12 +339,24 @@ def prefill(cfg, params, batch, max_len: int):
     x, caches = _run_stages_prefill(cfg, params, x, positions, extras, max_len)
     h = rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
     logits = _unembed(cfg, params, h)
-    S = x.shape[1]
-    return logits, {"stages": caches, "pos": jnp.asarray(S, jnp.int32)}
+    B, S = x.shape[0], x.shape[1]
+    return logits, {"stages": caches, "pos": jnp.full((B,), S, jnp.int32)}
 
 
-def decode_step(cfg, params, cache, tokens):
-    """One token for the whole batch. tokens: (B,1). Returns (logits, cache)."""
+def decode_step(cfg, params, cache, tokens, step_mask=None):
+    """One token for the whole batch. tokens: (B,1). Returns (logits, cache).
+
+    ``cache["pos"]`` is per-row, so rows may sit at different lengths: each
+    embeds/RoPEs at its own position, ring-writes K/V at its own slot, and
+    masks attention at its own valid length.
+
+    ``step_mask`` (B,) bool marks the rows actually decoding; unmasked rows
+    (free / not-yet-admitted slots of a slot pool) keep their position, and
+    the junk K/V the lock-step write leaves at an unmasked row's current
+    slot is overwritten by that row's next REAL step before it is ever
+    attended (the write-then-attend order makes idle rows self-healing for
+    ring-cache attention; SSM/xLSTM state rows are only exact when every
+    occupied slot steps together)."""
     pos = cache["pos"]
     if cfg.rope_theta <= 0:
         x = _embed_tokens(cfg, params, tokens, base_pos=pos)
@@ -349,7 +368,44 @@ def decode_step(cfg, params, cache, tokens):
                                        extras)
     h = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = _unembed(cfg, params, h)
-    return logits, {"stages": new_caches, "pos": pos + 1}
+    new_pos = pos + 1 if step_mask is None else \
+        jnp.where(jnp.asarray(step_mask), pos + 1, pos)
+    return logits, {"stages": new_caches, "pos": new_pos}
+
+
+def prefill_into_slots(cfg, params, batch, cache, slots, lengths,
+                       max_len: int):
+    """Prompt-only prefill for NEWLY ADMITTED rows of a persistent slot pool.
+
+    Runs the prefill forward over ``batch`` (Bn rows, right-padded to a
+    bucketed S) and scatters the resulting per-layer K/V rows plus per-row
+    positions into the SHARED decode cache at batch indices ``slots`` (Bn,)
+    — live rows (every other slot) are untouched, so admission churn never
+    re-pays prefill for requests already in flight.
+
+    ``lengths`` (Bn,) are the true (unpadded) token counts; the returned
+    logits are gathered at each row's own last real position.  ``max_len``
+    MUST equal the max_len the shared cache was built with (same ring T).
+    Returns (next-token logits (Bn,1,V), updated cache).
+    """
+    x, positions, extras, n_prefix = embed_batch(cfg, params, batch)
+    x, caches = _run_stages_prefill(cfg, params, x, positions, extras,
+                                    max_len)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    Bn, _S, D = x.shape
+    last = n_prefix + lengths - 1                       # (Bn,)
+    h = jnp.take_along_axis(
+        x, jnp.broadcast_to(last[:, None, None], (Bn, 1, D)), axis=1)
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = _unembed(cfg, params, h)
+
+    # stage-cache leaves are (L, Bn, ...): scatter rows at batch axis 1.
+    def scatter(big, small):
+        return big.at[:, slots].set(small.astype(big.dtype))
+
+    new_stages = jax.tree_util.tree_map(scatter, cache["stages"], caches)
+    new_pos = cache["pos"].at[slots].set(n_prefix + lengths)
+    return logits, {"stages": new_stages, "pos": new_pos}
 
 
 def count_params(params) -> int:

@@ -95,6 +95,34 @@ class TestDecodeAttention:
                                        np.asarray(ref, np.float32),
                                        **TOL[dtype])
 
+    def test_vector_n_valid_ragged_rows(self):
+        """(B,) n_valid — each slot-pool row masked at its OWN length:
+        pallas-interpret vs ref parity, and each row must equal a scalar
+        single-row call at that row's length."""
+        B, T, H, K, hd = 4, 256, 4, 2, 64
+        q, k, v = _qkv(jax.random.PRNGKey(7), B, 1, T, H, K, hd, jnp.float32)
+        nv = jnp.asarray([17, 256, 64, 1], jnp.int32)
+        out = decode_attention_pallas(q, k, v, nv, interpret=True)
+        ref = decode_attention_ref(q, k, v, nv)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+        for i in range(B):
+            solo = decode_attention_ref(q[i:i + 1], k[i:i + 1], v[i:i + 1],
+                                        nv[i])
+            np.testing.assert_allclose(
+                np.asarray(ref[i]), np.asarray(solo[0]), rtol=2e-5,
+                atol=2e-5, err_msg=f"row {i} != scalar call at its length")
+
+    def test_vector_n_valid_softcap(self):
+        q, k, v = _qkv(jax.random.PRNGKey(8), 2, 1, 256, 4, 2, 64,
+                       jnp.float32)
+        nv = jnp.asarray([40, 200], jnp.int32)
+        out = decode_attention_pallas(q, k, v, nv, softcap=30.0,
+                                      interpret=True)
+        ref = decode_attention_ref(q, k, v, nv, softcap=30.0)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
     def test_matches_flash_on_full_prefix(self):
         """decode(q_last) == flash(q_full)[:, -1] when the cache holds the
         same prefix — the consistency the serving path relies on."""

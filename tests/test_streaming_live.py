@@ -1,10 +1,13 @@
-"""Live continuous batching: the re-formed padded JAX batch is REAL.
+"""Live continuous batching: the persistent slot-pool decode is REAL.
 
-The streamed greedy decode must be token-exact against a per-request
-full-forward reference loop (right-padding and batch padding are inert
-under causal attention), the shape bucketing must bound recompiles, and
-the whole request-stream path must serve PfF end-to-end through the
-LiveExecutor with per-request latency records.
+The slot-cached streamed greedy decode must be token-exact against the
+full-forward reference (both against a per-request full-forward loop and
+against each other under membership churn), slot reuse must never leak a
+freed tenant's K/V into the next one, the compiled-shape audit must stay
+O(1) in decode steps, and the whole request-stream path must serve PfF
+end-to-end through the LiveExecutor with per-request latency records —
+feeding the measured per-slot cache bytes back into the recipe's slot
+budget.
 """
 import numpy as np
 import pytest
@@ -95,6 +98,79 @@ class TestStreamingDecoder:
         assert dec.shape_buckets <= 4
 
 
+class TestSlotPoolDecoding:
+    """The slot-cached path vs the full-forward reference path."""
+
+    def _mk(self, payloads, **kw):
+        eng = payloads["xla_executable"]
+        ci = payloads["context_inputs"]
+        return StreamingDecoder(eng.cfg, eng.params, ci["tokenizer"],
+                                ci["template"], **kw)
+
+    def _churn(self, dec, claims, budget, concurrent=3):
+        """Admissions/finishes interleaved at every step: one admission per
+        step while a slot is free, finish as soon as a request hits its
+        budget.  Returns {rid: [tokens]}."""
+        toks = {rid: [] for rid in budget}
+        pending = sorted(budget, reverse=True)
+        live = []
+        while live or pending:
+            if pending and len(live) < concurrent:
+                rid = pending.pop()
+                dec.ensure(rid, claims[rid])
+                live.append(rid)
+            for rid, t in dec.step(live).items():
+                toks[rid].append(t)
+            for rid in list(live):
+                if len(toks[rid]) >= budget[rid]:
+                    dec.finish(rid)
+                    live.remove(rid)
+        return toks
+
+    def test_churn_token_exact_and_slot_reuse_no_leak(self, setup):
+        """10 requests through a ≤4-slot pool, membership changing at
+        every step: every slot is re-tenanted at least once, and the
+        slot-cached tokens must equal the full-forward reference's —
+        a freed slot's stale K/V leaking into its next tenant would
+        diverge immediately."""
+        cfg, claims, _, payloads = setup
+        slot = self._mk(payloads)                      # slot_cached default
+        full = self._mk(payloads, slot_cached=False)
+        budget = {rid: 3 + (rid % 4) for rid in range(10)}
+        got = self._churn(slot, claims, budget)
+        ref = self._churn(full, claims, budget)
+        assert got == ref
+        assert slot.pool.capacity <= 4 < len(budget), \
+            "pool must have re-tenanted freed slots"
+        assert len(slot.pool) == 0 and slot.pool.free == slot.pool.capacity
+
+    def test_recompile_audit_constant_in_steps(self, setup):
+        """Stable membership: after the admission prefill and the first
+        decode, EVERY further step reuses the same compiled shapes."""
+        cfg, claims, _, payloads = setup
+        dec = self._mk(payloads)
+        for rid in range(3):
+            dec.ensure(rid, claims[rid])
+        rids = list(range(3))
+        dec.step(rids)                                  # admission prefill
+        dec.step(rids)                                  # first cached step
+        buckets_after_two = dec.shape_buckets
+        for _ in range(24):
+            dec.step(rids)
+        assert dec.shape_buckets == buckets_after_two
+        assert dec.shape_buckets <= 3
+
+    def test_b_max_presized_pool(self, setup):
+        """A pool pre-sized to the library's slot budget never grows."""
+        cfg, claims, _, payloads = setup
+        dec = self._mk(payloads, b_max=4)
+        for rid in range(4):
+            dec.ensure(rid, claims[rid])
+        dec.step(list(range(4)))
+        assert dec.pool.capacity == 4
+        assert dec.measured_slot_bytes > 0
+
+
 class TestLiveStreamServing:
     def test_pff_request_stream_end_to_end(self, setup):
         cfg, claims, recipe, _ = setup
@@ -121,6 +197,11 @@ class TestLiveStreamServing:
         assert all(r.ttfs_s >= 0 and r.queue_wait_s >= 0 for r in recs)
         assert sched.admissions > 0, \
             "later claims must be admitted into the live batch"
+        # slot budgets from measured memory: the live run must have fed the
+        # REAL per-slot cache footprint back into the recipe, displacing
+        # the KV_BYTES_PER_PARAM analytic estimate
+        assert recipe.measured_slot_bytes > 0
+        assert recipe.decode_slot_bytes(1.71e9) == recipe.measured_slot_bytes
 
     def test_stream_predictions_deterministic(self, setup):
         """Two runs with different worker counts give identical verdicts
