@@ -12,8 +12,18 @@ quiet-step latency plus the one-off admission (prefill) cost.
 Expected: slot-cached step time FLAT in S (admission cost grows — prefill
 is inherently O(S), paid once); full-forward step time grows with S.
 
+The SHARED-PREFIX sweep exercises the paged KV layout: one producer
+request makes a prompt prefix resident, then a batch of consumers whose
+prompts share that prefix is admitted.  With refcounted prefix reuse the
+consumers' admission cost (tokens actually prefilled) and fresh KV bytes
+(pages newly allocated) are FLAT in the shared-prefix length — only the
+per-consumer tails are paid — while the paged decoder stays token-exact
+against the full-forward reference under membership churn.
+
 ``--smoke`` (the CI guard): FAILS if the cached per-step time grows with S
-beyond a noise factor.
+beyond a noise factor, if consumer admission cost or fresh KV bytes grow
+with the shared-prefix length, or if paged tokens diverge from the
+full-forward reference.
 """
 from __future__ import annotations
 
@@ -67,6 +77,84 @@ def _measure(cfg, params, S, *, slot_cached, max_len, rows=ROWS,
     return statistics.median(quiet) * 1e3, admit_s * 1e3
 
 
+def _measure_shared(cfg, params, shared_len, *, page_size=16, rows=ROWS,
+                    steps=6, seed=0):
+    """One producer makes a ``shared_len`` prefix resident; ``rows``
+    consumers sharing it are then admitted and churned.  Returns
+    (consumer prefill tokens, consumer fresh pages, admit ms, exact) —
+    the first two must be FLAT in ``shared_len`` under prefix reuse."""
+    from repro.inference import StreamingDecoder
+    rng = np.random.default_rng(seed)
+    max_len = shared_len + 8 + DECODE_BUDGET
+    shared = list(rng.integers(4, cfg.vocab_size, shared_len))
+    # same tail lengths at every shared_len → cost comparable across sweep
+    prompts = {r: shared + list(rng.integers(4, cfg.vocab_size, 4 + r))
+               for r in range(rows + 1)}
+    dec = StreamingDecoder(cfg, params, None, None, max_len=max_len,
+                           paged=True, page_size=page_size)
+    ref = StreamingDecoder(cfg, params, None, None, slot_cached=False,
+                           max_len=max_len)
+
+    def run(d):
+        outs = {}
+        def step(rids):
+            for r in rids:
+                if r not in d._tokens:
+                    d.ensure_tokens(r, prompts[r])
+            for r, t in d.step(rids).items():
+                outs.setdefault(r, []).append(t)
+        step([0])                                 # producer: prefix resident
+        marks = (d.prefill_tokens_total,
+                 d.pages.in_use if d.paged else 0,
+                 time.perf_counter())
+        step(list(range(rows + 1)))               # consumers join (shared)
+        cost = (d.prefill_tokens_total - marks[0],
+                (d.pages.in_use if d.paged else 0) - marks[1],
+                (time.perf_counter() - marks[2]) * 1e3)
+        live = list(range(rows + 1))
+        for i in range(steps):                    # churn: finish mid-run
+            if i == steps // 2:
+                d.finish(live.pop(0))
+            step(live)
+        for r in live:
+            d.finish(r)
+        return outs, cost
+
+    out_paged, cost = run(dec)
+    out_full, _ = run(ref)
+    return cost[0], cost[1], cost[2], out_paged == out_full
+
+
+def shared_prefix_sweep(cfg, params, shared_lens, *, smoke: bool) -> None:
+    """The paged-KV tentpole claim: consumer admission cost and fresh KV
+    bytes are flat in the shared-prefix length, at exact tokens."""
+    print(f"\n== paged KV: shared-prefix admission cost (B={ROWS} consumers "
+          "joining a resident prefix, churn mid-run) ==")
+    print(f"{'shared S':>9} {'prefill toks':>13} {'fresh pages':>12} "
+          f"{'admit ms':>10} {'exact':>6}")
+    toks, pages = {}, {}
+    for S in shared_lens:
+        t, p, ms, exact = _measure_shared(cfg, params, S)
+        toks[S], pages[S] = t, p
+        print(f"{S:>9} {t:>13} {p:>12} {ms:>10.2f} {str(exact):>6}")
+        if smoke:
+            assert exact, \
+                f"paged decode diverged from full-forward at shared S={S}"
+    lo, hi = min(shared_lens), max(shared_lens)
+    print(f"admission cost {lo}→{hi}: prefill tokens "
+          f"{toks[lo]}→{toks[hi]}, fresh pages {pages[lo]}→{pages[hi]}")
+    if smoke:
+        # deterministic counters, no timer noise: tails are identical
+        # across the sweep, so any growth means the prefix was re-paid
+        assert toks[hi] <= toks[lo], \
+            f"consumer admission cost grew with shared-prefix length " \
+            f"({toks[lo]} → {toks[hi]} prefill tokens): prefix not reused"
+        assert pages[hi] <= pages[lo], \
+            f"consumer KV bytes grew with shared-prefix length " \
+            f"({pages[lo]} → {pages[hi]} fresh pages): prefix not reused"
+        print("smoke OK: shared-prefix admission cost and KV bytes flat")
+
+
 def main(smoke: bool = False, lengths=None, steps: int = STEPS) -> int:
     from repro.configs import get_smoke_config
     from repro.models import model as M
@@ -103,6 +191,9 @@ def main(smoke: bool = False, lengths=None, steps: int = STEPS) -> int:
             f"slot-cached step time grew {grow_slot:.2f}x from S={lo} " \
             f"to S={hi} — the cached decode path is not O(1) in S"
         print("smoke OK: slot-cached per-step time flat in prefix length")
+
+    shared_lens = [16, 96] if smoke else [32, 64, 128, 256]
+    shared_prefix_sweep(cfg, params, shared_lens, smoke=smoke)
     return 0
 
 

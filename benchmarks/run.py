@@ -36,6 +36,8 @@ def main(argv=None) -> int:
         # budgeted-vs-idle staging-makespan criterion
         bench_context_plane.main(smoke=True)
         # asserts slot-cached per-step decode time flat in prefix length
+        # AND paged shared-prefix admission cost / KV bytes flat in the
+        # shared-prefix length, at exact tokens vs full-forward
         bench_live_decode.main(smoke=True)
         bench_roofline.main()
         print(f"\nsmoke benchmarks done in {time.time()-t0:.1f}s")

@@ -98,6 +98,7 @@ class Request:
     skipped: int = 0                  # dispatches that backfilled past us
     steps_done: int = 0
     t_first_step: Optional[float] = None
+    truncated: bool = False           # prompt clipped at admission (live)
 
     @property
     def n_units(self) -> int:
@@ -173,6 +174,7 @@ class RequestRecord:
     attempts: int
     exclusive: bool = True
     joined: bool = False              # admitted into an in-flight batch
+    truncated: bool = False           # prompt was clipped, output partial
 
     @property
     def exec_s(self) -> float:        # on-worker time (incl. staging)
@@ -590,7 +592,7 @@ class Scheduler:
             req.request_id, w.worker_id, w.device.name, req.arrival_s,
             t_start, t_end if t_first_step is None else t_first_step,
             t_end, req.n_units, assignment.warm, req.attempts,
-            req.exclusive, assignment.join))
+            req.exclusive, assignment.join, req.truncated))
 
     def close_stream(self, worker_id: str, recipe_key: str) -> None:
         """The dynamic batch for ``recipe_key`` on ``worker_id`` emptied;

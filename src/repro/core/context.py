@@ -150,7 +150,15 @@ class ContextRecipe:
 
         Preference order: an explicit ``slot_bytes`` pin, then the
         live-measured per-slot footprint (``record_slot_bytes``), then the
-        ``KV_BYTES_PER_PARAM`` analytic estimate."""
+        ``KV_BYTES_PER_PARAM`` analytic estimate.
+
+        Under the PAGED KV layout this is a per-request PAGE BUDGET: the
+        decoder measures ``max_pages * page_bytes`` — the worst case one
+        request can pin with a fully private ring — so admission keeps
+        its simple bytes-per-slot arithmetic.  Shared-prefix pages are
+        refcounted and counted once, so actual residency is at most (and
+        with any prefix reuse strictly below) slots × this figure; the
+        slack is intentional headroom, never an over-commit."""
         if self.slot_bytes:
             return self.slot_bytes
         measured = _MEASURED_SLOT_BYTES.get(self.key)
@@ -162,8 +170,10 @@ class ContextRecipe:
         """Feed back a live-measured per-slot decode footprint (bytes).
 
         Latest measurement wins: the figure reflects the measuring pool's
-        ring length (its ``max_len``), so a decoder re-built with a longer
-        ring simply re-records after its first admission."""
+        ring length (its ``max_len``) and layout (contiguous per-slot
+        rings, or the paged worst-case ``max_pages * page_bytes``), so a
+        decoder re-built with a longer ring simply re-records after its
+        first admission."""
         if nbytes > 0:
             _MEASURED_SLOT_BYTES[self.key] = int(nbytes)
 

@@ -87,7 +87,10 @@ class Library:
         footprint is the MEASURED per-slot cache bytes once the executor
         has fed one back (see ``ContextRecipe.record_slot_bytes``); the
         analytic ``KV_BYTES_PER_PARAM`` estimate only seeds the first
-        admission."""
+        admission.  With the paged KV layout the measured figure is the
+        worst-case per-request page allotment (``max_pages * page_bytes``)
+        — shared-prefix pages are refcounted device-side, so the budget
+        is conservative and admission arithmetic stays unchanged."""
         free = device_bytes - self.recipe.nbytes(Tier.DEVICE)
         per_slot = self.recipe.decode_slot_bytes(active_params)
         return max(1, min(MAX_BATCH_SLOTS, free // per_slot))

@@ -4,38 +4,78 @@ The LIVE leg of the request-stream redesign.  A library's dynamic batch
 changes membership between decode steps, so the device batch cannot be a
 fixed (B, S) array compiled once per task.  :class:`StreamingDecoder`
 keeps the decode state RESIDENT on the device instead: a
-:class:`SlotPool` of ``capacity`` rows of KV cache (ring length
-``max_len``) that requests bind to on admission and free on completion.
+:class:`SlotPool` of ``capacity`` rows of KV cache that requests bind to
+on admission and free on completion.
 
 * **admit** — a new request's prompt runs through a prompt-only prefill
-  (``M.prefill_into_slots``) that scatters its K/V + position into the
-  shared cache at its slot, without touching live rows;
+  that scatters its K/V + position into the shared cache at its slot,
+  without touching live rows;
 * **step** — ONE cached ``M.decode_step`` over all slots advances every
   active row by one token at O(1) FLOPs/token (each row embeds/RoPEs at
   its own position, ring-writes at its own slot, masks at its own
   length via the vector-``n_valid`` decode-attention kernel);
-* **finish** — the slot returns to the free list; its stale K/V is fully
-  overwritten by the next tenant's admission prefill, so reuse never
+* **finish** — the slot returns to the free list; its stale K/V is
+  either fully overwritten by the next tenant's admission prefill
+  (contiguous) or unmapped from the page table (paged), so reuse never
   leaks context across requests.
 
-Compiled-shape accounting: the decode step compiles once per pool
-capacity (capacities grow by doubling), prefill once per (admission
-batch bucket, prompt-length bucket) — O(log) shapes total, and crucially
-O(1) in the number of decode steps, where the previous full-forward
-re-run was O(S) FLOPs per token.  Per-slot cache bytes are MEASURED
-after the first admission (``measured_slot_bytes``) and fed back into
-``ContextRecipe.decode_slot_bytes`` by the live executor, replacing the
-``KV_BYTES_PER_PARAM`` analytic guess when sizing slot budgets.
+Paged KV layout (``paged=True``, the default where
+``M.supports_paging``)
+----------------------------------------------------------------------
+The contiguous per-slot ring (B, max_len, K, hd) is replaced by
+PHYSICAL PAGE POOLS of shape (L, n_pages, page_size, K, hd) shared by
+every row, addressed through a per-row PAGE TABLE:
 
-The pre-slot full-forward path (prompt + generated prefix re-run through
-``M.forward`` every step; right-padding inert under causal attention)
-survives as ``slot_cached=False`` — the token-exactness reference the
-slot path is asserted against in tests/test_streaming_live.py.
+* ``cache["table"]`` is (B, max_pages) int32.  Row ``b``'s logical ring
+  slot ``s`` (s = pos % T, T = max_pages * page_size) lives at physical
+  coordinates ``(table[b, s // page_size], s % page_size)``.  Entry 0 is
+  the UNMAPPED sentinel: physical page 0 is reserved as the trash page
+  — never allocated, never attended (it always sits past ``n_valid``),
+  and the landing zone for masked lock-step writes.
+* :class:`PagePool` owns the physical pages host-side with REFCOUNTS.
+  ``alloc`` → refcount 1; admission of a request whose prompt prefix is
+  already resident increfs the shared pages instead of recomputing
+  them; ``finish`` decrefs every mapped page and frees at zero.
+* :class:`PrefixIndex` maps EXACT token tuples (no hashing collisions:
+  the key is the tuple itself) of whole-page prompt prefixes to the
+  page chain holding them.  On admission the longest indexed prefix —
+  capped at ``(prompt_len - 1) // page_size`` pages so the tail is
+  never empty and the first-token logits still come from this
+  request's own prefill — is mapped by reference (refcount++, ZERO
+  prefill FLOPs, ZERO new KV bytes) and only the unshared tail runs
+  through ``M.prefill_into_pages``.  Index entries are purged when
+  their page is freed or overwritten in place (ring wrap), so a hit
+  can never alias stale bytes.
+* Copy-on-write: decode writes land in the page holding slot
+  ``pos % T``.  Before each step ``_ensure_writable`` allocates a fresh
+  page when that entry is unmapped, and COPIES the page (then decrefs
+  the original) when its refcount is > 1 — a tenant wrapping its ring
+  into a shared prefix page never corrupts the other holders.
+
+Compiled-shape accounting: the decode step compiles once per pool
+capacity (capacities grow by doubling) with paging on or off — the page
+table is a cache VALUE, not a shape — and prefill once per (admission
+batch bucket, tail-length bucket).  Per-slot cache bytes are MEASURED
+after the first admission (``measured_slot_bytes``; for the paged
+layout this is the worst case ``max_pages * page_bytes`` a row can pin)
+and fed back into ``ContextRecipe.decode_slot_bytes`` by the live
+executor when sizing slot budgets.
+
+Over-length prompts are never silently truncated any more: with
+``strict_prompts=True`` admission raises; otherwise the prompt is
+clipped and the request's ``truncated`` flag (surfaced through
+``RequestRecord``) records it.
+
+The pre-slot full-forward path (prompt + generated prefix re-run
+through ``M.forward`` every step; right-padding inert under causal
+attention) survives as ``slot_cached=False`` — the token-exactness
+reference both cached paths are asserted against in
+tests/test_streaming_live.py and tests/test_paged_kv.py.
 """
 from __future__ import annotations
 
 import functools
-from typing import Dict, Iterable, List, Optional, Sequence
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 import jax
 import numpy as np
@@ -89,6 +129,111 @@ class SlotPool:
         return len(self.slot_of)
 
 
+class PagePool:
+    """Refcounted allocator over the physical KV pages.
+
+    Page 0 is the reserved TRASH page: it is never handed out, doubles
+    as the unmapped page-table sentinel, and absorbs masked lock-step
+    writes.  Refcounts are host-side only — the device sees pages purely
+    through the table."""
+
+    TRASH = 0
+
+    def __init__(self, n_pages: int):
+        assert n_pages >= 1
+        self.n_pages = n_pages
+        self._ref: Dict[int, int] = {}
+        self._free: List[int] = list(range(n_pages - 1, 0, -1))
+
+    def alloc(self) -> int:
+        page = self._free.pop()
+        self._ref[page] = 1
+        return page
+
+    def incref(self, page: int) -> None:
+        assert page != self.TRASH and page in self._ref
+        self._ref[page] += 1
+
+    def decref(self, page: int) -> bool:
+        """Drop one reference; returns True when the page was freed."""
+        assert page != self.TRASH
+        assert self._ref.get(page, 0) > 0, \
+            f"decref of unreferenced page {page} (double free)"
+        self._ref[page] -= 1
+        if self._ref[page] == 0:
+            del self._ref[page]
+            self._free.append(page)
+            return True
+        return False
+
+    def refcount(self, page: int) -> int:
+        return self._ref.get(page, 0)
+
+    def grow(self, n_pages: int) -> None:
+        assert n_pages >= self.n_pages
+        self._free[:0] = range(n_pages - 1, self.n_pages - 1, -1)
+        self.n_pages = n_pages
+
+    @property
+    def free(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return len(self._ref)
+
+
+class PrefixIndex:
+    """Exact-match index from whole-page prompt prefixes to page chains.
+
+    Keys are the literal token TUPLES of the first ``j * page_size``
+    prompt tokens (j = 1..n_full_pages) — exact equality, so a hit can
+    never be a hash collision.  Values are the physical page chains
+    holding those tokens.  ``forget_page`` removes every entry whose
+    chain references a page (called when the page is freed or about to
+    be overwritten in place), keeping the index free of stale bytes."""
+
+    def __init__(self):
+        self._chains: Dict[Tuple[int, ...], Tuple[int, ...]] = {}
+        self._keys_of: Dict[int, Set[Tuple[int, ...]]] = {}
+
+    def insert(self, tokens: Sequence[int], page_size: int,
+               pages: Sequence[int]) -> None:
+        """Register every whole-page prefix of ``tokens`` (first wins)."""
+        n_full = min(len(tokens) // page_size, len(pages))
+        for j in range(1, n_full + 1):
+            key = tuple(tokens[:j * page_size])
+            if key in self._chains:
+                continue
+            chain = tuple(int(p) for p in pages[:j])
+            self._chains[key] = chain
+            for p in chain:
+                self._keys_of.setdefault(p, set()).add(key)
+
+    def lookup(self, tokens: Sequence[int], page_size: int,
+               max_pages: int) -> List[int]:
+        """Longest indexed whole-page prefix of ``tokens``, at most
+        ``max_pages`` pages (callers cap at (len-1)//page_size so the
+        unshared tail is never empty)."""
+        best: Tuple[int, ...] = ()
+        for j in range(1, max_pages + 1):
+            chain = self._chains.get(tuple(tokens[:j * page_size]))
+            if chain is None:
+                break                    # prefixes are registered in chains
+            best = chain
+        return list(best)
+
+    def forget_page(self, page: int) -> None:
+        for key in self._keys_of.pop(page, ()):
+            chain = self._chains.pop(key, ())
+            for p in chain:
+                if p != page and p in self._keys_of:
+                    self._keys_of[p].discard(key)
+
+    def __len__(self) -> int:
+        return len(self._chains)
+
+
 class StreamingDecoder:
     """Greedy decoder over a membership-changing request batch.
 
@@ -96,6 +241,11 @@ class StreamingDecoder:
     token.  ``slot_cached=False``: the full-forward reference path, O(S)
     per token.  Both produce identical greedy tokens while sequences stay
     within ``max_len`` (asserted in tests under membership churn).
+
+    ``paged=None`` turns the paged KV layout on automatically where the
+    model family supports it (see module docstring); ``paged=False``
+    forces the contiguous per-slot rings; ``paged=True`` on an
+    unsupported family raises.
 
     ``b_max`` pre-sizes the pool (typically the library's slot budget, so
     the decode step compiles exactly once); it is a sizing hint, not a
@@ -105,7 +255,9 @@ class StreamingDecoder:
 
     def __init__(self, cfg, params, tokenizer, template, *,
                  prompt_len: int = PROMPT_LEN, slot_cached: bool = True,
-                 max_len: Optional[int] = None, b_max: Optional[int] = None):
+                 max_len: Optional[int] = None, b_max: Optional[int] = None,
+                 paged: Optional[bool] = None, page_size: int = 64,
+                 strict_prompts: bool = False):
         self.cfg = cfg
         self.params = params
         self.tokenizer = tokenizer
@@ -113,41 +265,93 @@ class StreamingDecoder:
         self.prompt_len = prompt_len
         self.slot_cached = slot_cached
         self.max_len = max_len or prompt_len + 64
+        self.strict_prompts = strict_prompts
+        if paged is None:
+            paged = slot_cached and M.supports_paging(cfg)
+        elif paged and not M.supports_paging(cfg):
+            raise ValueError(
+                f"paged KV cache unsupported for {cfg.name}: "
+                "recurrent/MLA/cross-attn/int8/windowed caches keep the "
+                "contiguous layout")
+        self.paged = bool(paged and slot_cached)
+        self.page_size = page_size
+        self.max_pages = -(-self.max_len // page_size)
+        self.pages: Optional[PagePool] = None
+        self.prefix = PrefixIndex()
+        self._table: Optional[np.ndarray] = None  # host page table mirror
+        self._table_dirty = False
         self._tokens: Dict[int, List[int]] = {}   # rid -> prompt+generated
         self._prompt_end: Dict[int, int] = {}
+        self.truncated: Dict[int, bool] = {}      # rid -> prompt was clipped
         self._fwd = jax.jit(
             lambda p, toks: M.forward(cfg, p, {"tokens": toks}))
         self._decode = jax.jit(functools.partial(M.decode_step, cfg))
         self._prefill_slots = jax.jit(functools.partial(
             M.prefill_into_slots, cfg, max_len=self.max_len))
+        self._prefill_pages = jax.jit(functools.partial(
+            M.prefill_into_pages, cfg))
+        self._copy_page = jax.jit(lambda stages, dst, src: jax.tree_util.
+                                  tree_map(lambda x: x.at[:, dst].
+                                           set(x[:, src]), stages))
         self._shapes: set = set()                 # compile-shape audit
         self.pool = SlotPool(b_max or 0)
         self._cache = None                        # device cache pytree
         self.measured_slot_bytes = 0              # real per-slot footprint
+        self.prefill_tokens_total = 0             # admission cost counter
+        self.shared_tokens_total = 0              # prefix tokens reused
 
     # -- membership -----------------------------------------------------
     def ensure(self, rid: int, claim) -> None:
         """Admit ``rid``: tokenize its prompt (idempotent)."""
         if rid in self._tokens:
             return
-        ids = self.tokenizer.encode(
-            self.template.render(claim))[:self.prompt_len]
-        self.ensure_tokens(rid, list(ids))
+        ids = list(self.tokenizer.encode(self.template.render(claim)))
+        self.ensure_tokens(rid, ids, limit=self.prompt_len)
 
-    def ensure_tokens(self, rid: int, token_ids: List[int]) -> None:
-        """Admit ``rid`` with pre-tokenized prompt ids (idempotent)."""
+    def ensure_tokens(self, rid: int, token_ids: List[int], *,
+                      limit: Optional[int] = None) -> None:
+        """Admit ``rid`` with pre-tokenized prompt ids (idempotent).
+
+        Prompts longer than ``limit`` (default: the ``max_len`` ring)
+        RAISE under ``strict_prompts``; otherwise they are clipped and
+        the request's ``truncated`` flag records it — never a silent
+        drop."""
         if rid in self._tokens:
             return
-        self._tokens[rid] = list(token_ids)
-        self._prompt_end[rid] = len(token_ids)
+        cap = min(limit or self.max_len, self.max_len)
+        if len(token_ids) > cap:
+            if self.strict_prompts:
+                raise ValueError(
+                    f"prompt for request {rid} is {len(token_ids)} tokens "
+                    f"but the decoder caps prompts at {cap} "
+                    f"(prompt_len={self.prompt_len}, max_len={self.max_len})")
+            self.truncated[rid] = True
+        else:
+            self.truncated[rid] = False
+        self._tokens[rid] = list(token_ids)[:cap]
+        self._prompt_end[rid] = len(self._tokens[rid])
+
+    def active_rids(self) -> List[int]:
+        """Requests currently holding decoder state."""
+        return list(self._tokens.keys())
 
     def finish(self, rid: int) -> List[int]:
-        """Release ``rid``'s state (and its slot); returns its generated
-        token ids.  The freed slot's stale K/V is inert: the next tenant's
-        admission prefill overwrites the whole cache row."""
-        self.pool.release(rid)
+        """Release ``rid``'s state (slot + page references); returns its
+        generated token ids.  Contiguous: the freed slot's stale K/V is
+        inert until the next tenant's admission prefill overwrites the
+        row.  Paged: every mapped page is decref'd (freed pages purge
+        their prefix-index entries) and the table row reset to trash."""
+        slot = self.pool.release(rid)
+        if slot is not None and self.paged and self._table is not None:
+            for p in self._table[slot]:
+                p = int(p)
+                if p != PagePool.TRASH and self.pages.decref(p):
+                    self.prefix.forget_page(p)
+            self._table[slot] = PagePool.TRASH
+            self._table_dirty = True
         toks = self._tokens.pop(rid, [])
         end = self._prompt_end.pop(rid, len(toks))
+        self.truncated.pop(rid, None)
         return toks[end:]
 
     # -- the step -------------------------------------------------------
@@ -155,10 +359,10 @@ class StreamingDecoder:
         """One greedy decode step for the CURRENT membership.
 
         Slot mode: one cached ``decode_step`` over the pool advances the
-        rows already bound; newly seen rids are admitted via
-        ``prefill_into_slots`` (their first token comes from the prefill
-        logits).  Full mode: re-form the padded (B, S) batch and run the
-        full forward.  Returns {rid: new_token}."""
+        rows already bound; newly seen rids are admitted via prefill
+        (their first token comes from the prefill logits).  Full mode:
+        re-form the padded (B, S) batch and run the full forward.
+        Returns {rid: new_token}."""
         rids = list(rids)
         if not rids:
             return {}
@@ -170,22 +374,108 @@ class StreamingDecoder:
         if len(fresh) > self.pool.free:
             self._grow(len(self.pool.slot_of) + len(fresh))
         elif fresh and self._cache is None:       # b_max pre-sized the pool
-            self._cache = M.cache_init(self.cfg, self.pool.capacity,
-                                       self.max_len)
+            self._cache = self._fresh_cache(self.pool.capacity)
         if active:
             out.update(self._decode_active(active))
         if fresh:
             out.update(self._admit(fresh))
         return out
 
+    def _fresh_cache(self, cap: int):
+        """Device cache for ``cap`` rows (+ host paging structures)."""
+        if not self.paged:
+            return M.cache_init(self.cfg, cap, self.max_len)
+        n_pages = 1 + cap * self.max_pages        # +1: the trash page
+        if self.pages is None:
+            self.pages = PagePool(n_pages)
+        self._table = np.zeros((cap, self.max_pages), np.int32)
+        self._table_dirty = False                 # fresh device table is 0 too
+        return M.paged_cache_init(self.cfg, cap, n_pages, self.page_size,
+                                  self.max_pages)
+
+    def _sync_table(self) -> None:
+        if self.paged and self._table_dirty:
+            self._cache["table"] = jax.numpy.asarray(self._table)
+            self._table_dirty = False
+
+    @property
+    def page_bytes(self) -> int:
+        """Per-page KV bytes across all layers (0 until first admit)."""
+        if not self.paged or self._cache is None or self.pages is None:
+            return 0
+        total = sum(x.nbytes
+                    for x in jax.tree_util.tree_leaves(self._cache["stages"]))
+        return int(total // self.pages.n_pages)
+
+    @property
+    def kv_bytes_in_use(self) -> int:
+        """Bytes actually pinned by live requests (paged: mapped pages
+        count ONCE however many rows share them)."""
+        if self.paged:
+            return self.pages.in_use * self.page_bytes if self.pages else 0
+        return self.measured_slot_bytes * len(self.pool)
+
+    # -- paged page lifecycle -------------------------------------------
+    def _bind_pages(self, rid: int) -> int:
+        """Map ``rid``'s prompt onto pages: the longest indexed prefix by
+        reference (refcount++), fresh pages for the rest.  Registers the
+        prompt's own whole pages in the index (they are filled by this
+        very admission's prefill call) and returns the shared base —
+        the number of prompt tokens that will NOT be prefilled."""
+        toks = self._tokens[rid]
+        P = self.page_size
+        n_needed = max(1, -(-len(toks) // P))
+        shared = self.prefix.lookup(toks, P, (len(toks) - 1) // P)
+        for p in shared:
+            self.pages.incref(p)
+        pages = list(shared)
+        while len(pages) < n_needed:
+            pages.append(self.pages.alloc())
+        slot = self.pool.slot_of[rid]
+        self._table[slot, :len(pages)] = pages
+        self._table[slot, len(pages):] = PagePool.TRASH
+        self._table_dirty = True
+        self.prefix.insert(toks, P, pages)        # whole pages only
+        self.shared_tokens_total += len(shared) * P
+        return len(shared) * P
+
+    def _ensure_writable(self, rid: int) -> None:
+        """Guarantee the page receiving this step's decode write is
+        exclusively owned.  Unmapped (ring entered a new page) → alloc;
+        shared (ring WRAPPED into a refcounted prefix page) → copy-on-
+        write; exclusively owned but indexed → purge the index entry
+        (the in-place write is about to change the page's bytes)."""
+        T = self.max_pages * self.page_size
+        pos = len(self._tokens[rid]) - 1          # slot this token writes
+        pi = (pos % T) // self.page_size
+        slot = self.pool.slot_of[rid]
+        page = int(self._table[slot, pi])
+        if page == PagePool.TRASH:
+            self._table[slot, pi] = self.pages.alloc()
+            self._table_dirty = True
+        elif self.pages.refcount(page) > 1:
+            fresh = self.pages.alloc()
+            self._cache["stages"] = self._copy_page(
+                self._cache["stages"], np.int32(fresh), np.int32(page))
+            if self.pages.decref(page):
+                self.prefix.forget_page(page)
+            self._table[slot, pi] = fresh
+            self._table_dirty = True
+        else:
+            self.prefix.forget_page(page)
+
+    # -- device steps ---------------------------------------------------
     def _decode_active(self, active: List[int]) -> Dict[int, int]:
         B = self.pool.capacity
         toks = np.full((B, 1), PAD, dtype=np.int32)
         mask = np.zeros((B,), dtype=bool)
         for r in active:
+            if self.paged:
+                self._ensure_writable(r)
             s = self.pool.slot_of[r]
             toks[s, 0] = self._tokens[r][-1]
             mask[s] = True
+        self._sync_table()
         self._shapes.add(("decode", B))
         logits, self._cache = self._decode(self.params, self._cache, toks,
                                            mask)
@@ -198,12 +488,18 @@ class StreamingDecoder:
         return out
 
     def _admit(self, fresh: List[int]) -> Dict[int, int]:
-        """Prefill-into-slots for newly admitted rows.  The admission batch
-        is bucketed (rows → pow2, prompt → multiple of 8); padding rows
-        DUPLICATE row 0 (same tokens, same slot), so the duplicate scatter
-        writes identical bytes and live rows stay untouched."""
+        """Prefill for newly admitted rows.  The admission batch is
+        bucketed (rows → pow2, tokens → multiple of 8); padding rows
+        DUPLICATE row 0 (same tokens, same slot/pages), so the duplicate
+        scatter writes identical bytes and live rows stay untouched.
+        Paged: only each row's unshared TAIL is prefilled."""
         slots = [self.pool.bind(r) for r in fresh]
-        seqs = [self._tokens[r] for r in fresh]
+        if self.paged:
+            bases = [self._bind_pages(r) for r in fresh]
+            seqs = [self._tokens[r][b:] for r, b in zip(fresh, bases)]
+        else:
+            bases = [0] * len(fresh)
+            seqs = [self._tokens[r] for r in fresh]
         S = min(_round_up(max(len(s) for s in seqs), 8), self.max_len)
         lens = [min(len(s), S) for s in seqs]     # exactness holds ≤ max_len
         Bn = _next_pow2(len(fresh))
@@ -211,16 +507,27 @@ class StreamingDecoder:
         for i, s in enumerate(seqs):
             arr[i, :lens[i]] = s[:lens[i]]
         arr[len(fresh):] = arr[0]
-        pad = [slots[0]] * (Bn - len(fresh))
-        slot_arr = np.asarray(slots + pad, np.int32)
-        len_arr = np.asarray(lens + [lens[0]] * (Bn - len(fresh)), np.int32)
+        pad = Bn - len(fresh)
+        slot_arr = np.asarray(slots + [slots[0]] * pad, np.int32)
+        len_arr = np.asarray(lens + [lens[0]] * pad, np.int32)
+        self.prefill_tokens_total += sum(lens)
         self._shapes.add(("prefill", Bn, S, self.pool.capacity))
-        logits, self._cache = self._prefill_slots(
-            self.params, {"tokens": arr}, self._cache, slot_arr, len_arr)
+        if self.paged:
+            base_arr = np.asarray(bases + [bases[0]] * pad, np.int32)
+            self._sync_table()
+            logits, self._cache = self._prefill_pages(
+                self.params, {"tokens": arr}, self._cache, slot_arr,
+                base_arr, len_arr)
+        else:
+            logits, self._cache = self._prefill_slots(
+                self.params, {"tokens": arr}, self._cache, slot_arr, len_arr)
         if not self.measured_slot_bytes:
-            total = sum(x.nbytes
-                        for x in jax.tree_util.tree_leaves(self._cache))
-            self.measured_slot_bytes = int(total // self.pool.capacity)
+            if self.paged:
+                self.measured_slot_bytes = self.page_bytes * self.max_pages
+            else:
+                total = sum(x.nbytes
+                            for x in jax.tree_util.tree_leaves(self._cache))
+                self.measured_slot_bytes = int(total // self.pool.capacity)
         logits = np.asarray(logits)
         out: Dict[int, int] = {}
         for i, r in enumerate(fresh):
@@ -230,25 +537,46 @@ class StreamingDecoder:
         return out
 
     def _grow(self, needed: int) -> None:
-        """Capacity to the next power of two ≥ ``needed``; live rows are
-        copied across, so growth is invisible to in-flight requests."""
+        """Capacity to the next power of two ≥ ``needed``; live state is
+        copied across GENERICALLY — every leaf of the old cache pytree is
+        prefix-sliced into the freshly initialised one (and cache keys
+        the initialiser doesn't know about are carried verbatim), so
+        growth is invisible to in-flight requests whatever the layout."""
         cap = max(self.pool.capacity, 1)
         while cap < needed:
             cap *= 2
         if cap == self.pool.capacity:
             return
-        new_cache = M.cache_init(self.cfg, cap, self.max_len)
-        if self._cache is not None:
-            old = self.pool.capacity
-            new_cache = {
-                "stages": jax.tree_util.tree_map(
-                    lambda big, small: big.at[:, :old].set(small),
-                    new_cache["stages"], self._cache["stages"]),
-                "pos": new_cache["pos"].at[:old].set(self._cache["pos"]),
-            }
+        old_cap = self.pool.capacity
+        old_cache = self._cache
+        old_table = self._table
+        new_cache = self._fresh_cache(cap)
+        if old_cache is not None:
+            def copy_prefix(big, small):
+                if big.shape == small.shape:
+                    return small
+                idx = tuple(slice(0, n) for n in small.shape)
+                return big.at[idx].set(small)
+            merged = {}
+            for key, val in new_cache.items():
+                if key in old_cache:
+                    merged[key] = jax.tree_util.tree_map(
+                        copy_prefix, val, old_cache[key])
+                else:
+                    merged[key] = val
+            for key, val in old_cache.items():    # keys init doesn't know
+                merged.setdefault(key, val)
+            new_cache = merged
         self._cache = new_cache
+        if self.paged:
+            self.pages.grow(1 + cap * self.max_pages)
+            if old_table is not None:
+                self._table[:old_cap] = old_table
+            self._table_dirty = True
         self.pool.grow(cap)
         self.measured_slot_bytes = 0              # re-measure at new B
+        if self.paged:
+            self._sync_table()
 
     def _step_full(self, rids: List[int]) -> Dict[int, int]:
         """Reference path: full forward over prompt+generated each step."""
@@ -278,13 +606,20 @@ class StreamingDecoder:
 
 def make_pff_step_fn(prompt_len: int = PROMPT_LEN, *,
                      slot_cached: bool = True,
-                     max_len: Optional[int] = None):
+                     max_len: Optional[int] = None,
+                     paged: Optional[bool] = None):
     """Step function for :class:`~repro.cluster.LiveExecutor.step_fns`.
 
     Lazily builds a :class:`StreamingDecoder` inside the library's
     payloads (it belongs to the hosted context: it dies with a spill and
     is rebuilt on re-materialisation) and advances the current members by
-    one token.  Request payloads are the claims to verify."""
+    one token.  Request payloads are the claims to verify.
+
+    Requests the scheduler pulled OUT of the batch mid-flight (requeued
+    on preemption / migrated to another replica) are detected by their
+    absence from ``members`` and their decoder state — slot, pages,
+    token buffers — is freed immediately; previously these rows leaked
+    until the decoder was torn down."""
     def step_fn(payloads, members):
         dec = payloads.get("_stream_decoder")
         if dec is None:
@@ -293,10 +628,17 @@ def make_pff_step_fn(prompt_len: int = PROMPT_LEN, *,
             dec = StreamingDecoder(engine.cfg, engine.params,
                                    ci["tokenizer"], ci["template"],
                                    prompt_len=prompt_len,
-                                   slot_cached=slot_cached, max_len=max_len)
+                                   slot_cached=slot_cached, max_len=max_len,
+                                   paged=paged)
             payloads["_stream_decoder"] = dec
+        present = {r.request_id for r in members}
+        for rid in dec.active_rids():
+            if rid not in present:                # requeued away mid-batch
+                dec.finish(rid)
         for r in members:
             dec.ensure(r.request_id, r.payload)
+            if dec.truncated.get(r.request_id):
+                r.truncated = True
         out = dec.step([r.request_id for r in members])
         for r in members:
             if r.steps_done + 1 >= r.n_units:    # last step: free state

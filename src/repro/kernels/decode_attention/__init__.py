@@ -1,4 +1,5 @@
 from . import ops, ref  # noqa: F401
-from .decode_attention import decode_attention_pallas  # noqa: F401
-from .ops import decode_attention  # noqa: F401
-from .ref import decode_attention_ref  # noqa: F401
+from .decode_attention import (decode_attention_paged_pallas,  # noqa: F401
+                               decode_attention_pallas)
+from .ops import decode_attention, decode_attention_paged  # noqa: F401
+from .ref import decode_attention_paged_ref, decode_attention_ref  # noqa: F401

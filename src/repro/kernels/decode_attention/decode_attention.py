@@ -1,8 +1,8 @@
-"""Single-token GQA decode attention Pallas TPU kernel.
+"""Single-token GQA decode attention Pallas TPU kernels (dense + paged).
 
 Decode attention is memory-bound: the whole KV cache streams HBM->VMEM once
 while compute is a (G x bk) @ (bk x hd) matmul per block — arithmetic
-intensity ~G. The kernel therefore:
+intensity ~G. The dense kernel therefore:
 
 - tiles over (B, K, T/bk): one program per (batch, kv-head), sequential over
   KV blocks, all G grouped q-heads processed together so each KV tile is
@@ -12,6 +12,15 @@ intensity ~G. The kernel therefore:
 - masks ring slots >= n_valid[b] ((B,) vector in SMEM, indexed by the batch
   program — each row of a persistent slot pool is masked at its OWN length,
   so a dynamic batch with ragged prefixes decodes in one kernel launch).
+
+The PAGED kernel (``decode_attention_paged_pallas``) reads a physical page
+pool (n_pages, P, K, hd) through a per-row (B, max_pages) int32 page table
+instead of a dense (B, T) cache slice: the table rides in as a
+scalar-prefetch argument (``pltpu.PrefetchScalarGridSpec``) so the KV
+BlockSpec index_map can pick each program's physical page —
+``table[b, ki]`` — before the kernel body runs; one KV block == one page.
+Refcounted shared-prefix pages are thus gathered per-row at DMA time with
+zero data duplication (vLLM's PagedAttention access pattern).
 
 G is padded to the 8-sublane minimum by the wrapper when n_heads == n_kv
 (MHA decode).
@@ -115,4 +124,73 @@ def decode_attention_pallas(q, k, v, n_valid, *, softcap: float = 0.0,
         ],
         interpret=interpret,
     )(n_valid_arr, qg, kt, vt)
+    return out.reshape(B, 1, H, hd)
+
+
+def _paged_kernel(n_valid_ref, table_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, scale: float, softcap: float,
+                  bk: int, n_kv_blocks: int):
+    # the page table is consumed by the BlockSpec index_maps (the DMA-time
+    # gather); the body itself is the same online softmax as the dense
+    # kernel with one KV block per physical page
+    del table_ref
+    _kernel(n_valid_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+            scale=scale, softcap=softcap, bk=bk, n_kv_blocks=n_kv_blocks)
+
+
+def decode_attention_paged_pallas(q, k_pages, v_pages, page_table, n_valid, *,
+                                  softcap: float = 0.0,
+                                  scale: float | None = None,
+                                  interpret: bool = False):
+    """q: (B,1,H,hd); k_pages/v_pages: (n_pages,P,K,hd) physical pools;
+    page_table: (B,max_pages) int32 (entries < 0 = unmapped, clamped to the
+    reserved trash page 0 — always masked by n_valid); n_valid int32 scalar
+    or (B,).  Row b's logical ring is its mapped pages back to back."""
+    B, Sq, H, hd = q.shape
+    assert Sq == 1, "decode kernel is single-token"
+    n_pages, P, K = k_pages.shape[0], k_pages.shape[1], k_pages.shape[2]
+    G = H // K
+    max_pages = page_table.shape[1]
+    if scale is None:
+        scale = 1.0 / math.sqrt(hd)
+
+    qg = q.reshape(B, K, G, hd)
+    kt = k_pages.transpose(0, 2, 1, 3)                 # (n_pages, K, P, hd)
+    vt = v_pages.transpose(0, 2, 1, 3)
+    table = jnp.maximum(jnp.asarray(page_table, jnp.int32), 0)
+    n_valid_arr = jnp.asarray(n_valid, jnp.int32)
+    if n_valid_arr.ndim == 0:
+        n_valid_arr = jnp.full((B,), n_valid_arr, jnp.int32)
+    assert n_valid_arr.shape == (B,), n_valid_arr.shape
+    assert table.shape == (B, max_pages)
+
+    kern = functools.partial(_paged_kernel, scale=scale, softcap=softcap,
+                             bk=P, n_kv_blocks=max_pages)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                 # n_valid + page table in SMEM
+        grid=(B, K, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd),
+                         lambda b, h, ki, nv, tbl: (b, h, 0, 0)),
+            # the paged gather: this program's KV block is the physical
+            # page the table maps for row b's ki-th logical page
+            pl.BlockSpec((1, 1, P, hd),
+                         lambda b, h, ki, nv, tbl: (tbl[b, ki], h, 0, 0)),
+            pl.BlockSpec((1, 1, P, hd),
+                         lambda b, h, ki, nv, tbl: (tbl[b, ki], h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, h, ki, nv, tbl: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, G, hd), q.dtype),
+        interpret=interpret,
+    )(n_valid_arr, table, qg, kt, vt)
     return out.reshape(B, 1, H, hd)

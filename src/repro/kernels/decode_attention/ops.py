@@ -1,10 +1,11 @@
-"""Jit'd wrapper for decode attention with platform dispatch."""
+"""Jit'd wrappers for decode attention (dense + paged) with platform dispatch."""
 from __future__ import annotations
 
 import jax
 
-from .decode_attention import decode_attention_pallas
-from .ref import decode_attention_ref
+from .decode_attention import (decode_attention_paged_pallas,
+                               decode_attention_pallas)
+from .ref import decode_attention_paged_ref, decode_attention_ref
 
 
 def _on_tpu() -> bool:
@@ -25,3 +26,23 @@ def decode_attention(q, k, v, n_valid, *, softcap: float = 0.0,
                                        scale=scale,
                                        interpret=interpret or not _on_tpu())
     return decode_attention_ref(q, k, v, n_valid, softcap=softcap, scale=scale)
+
+
+def decode_attention_paged(q, k_pages, v_pages, page_table, n_valid, *,
+                           softcap: float = 0.0, scale: float | None = None,
+                           use_pallas: bool | None = None,
+                           interpret: bool = False):
+    """Paged decode attention: q (B,1,H,hd); k_pages/v_pages physical pools
+    (n_pages,P,K,hd); page_table (B,max_pages) int32 (clamped >= 0, unmapped
+    entries alias the trash page and sit past n_valid); n_valid int32 scalar
+    or (B,) per-row valid length over the LOGICAL ring (max_pages*P slots)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    P = k_pages.shape[1]
+    # TPU lane constraint: one KV block per page, so the page must tile
+    if use_pallas and q.shape[1] == 1 and P % min(128, P) == 0:
+        return decode_attention_paged_pallas(
+            q, k_pages, v_pages, page_table, n_valid, softcap=softcap,
+            scale=scale, interpret=interpret or not _on_tpu())
+    return decode_attention_paged_ref(q, k_pages, v_pages, page_table,
+                                      n_valid, softcap=softcap, scale=scale)

@@ -1,4 +1,11 @@
-"""Pure-jnp oracle for single-token GQA decode attention over a ring cache."""
+"""Pure-jnp oracle for single-token GQA decode attention over a ring cache.
+
+Two cache layouts share one oracle: the dense per-row ring ((B,T,K,hd),
+``decode_attention_ref``) and the PAGED pool ((n_pages,P,K,hd) physical
+pages addressed through a per-row (B, max_pages) int32 page table,
+``decode_attention_paged_ref`` — gather-by-table recovers the dense view,
+so the paged path is exact by construction against the dense one).
+"""
 from __future__ import annotations
 
 import jax
@@ -35,3 +42,30 @@ def decode_attention_ref(q, k, v, n_valid, *, softcap: float = 0.0,
     out = jnp.einsum("bkgst,btkh->bskgh", probs, v,
                      preferred_element_type=jnp.float32)
     return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def gather_pages_ref(pages, page_table):
+    """Dense (B, max_pages*P, ...) view of a paged pool.
+
+    pages: (n_pages, P, ...) physical page pool; page_table: (B, max_pages)
+    int32 — physical page id per logical page (entries are clamped to >= 0,
+    so unmapped rows may alias the reserved trash page 0: those slots sit
+    past ``n_valid`` and are masked before the softmax ever sees them)."""
+    table = jnp.maximum(jnp.asarray(page_table, jnp.int32), 0)
+    B, max_pages = table.shape
+    P = pages.shape[1]
+    dense = jnp.take(pages, table.reshape(-1), axis=0)
+    return dense.reshape((B, max_pages * P) + pages.shape[2:])
+
+
+def decode_attention_paged_ref(q, k_pages, v_pages, page_table, n_valid, *,
+                               softcap: float = 0.0,
+                               scale: float | None = None):
+    """Paged oracle: q (B,Sq,H,hd); k_pages/v_pages (n_pages,P,K,hd);
+    page_table (B,max_pages) int32; n_valid int32 scalar or (B,).  The
+    logical ring of row b is the concatenation of its mapped pages
+    (T = max_pages*P slots); everything past n_valid[b] is masked."""
+    k = gather_pages_ref(k_pages, page_table)
+    v = gather_pages_ref(v_pages, page_table)
+    return decode_attention_ref(q, k, v, n_valid, softcap=softcap,
+                                scale=scale)

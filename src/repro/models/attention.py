@@ -147,6 +147,128 @@ def gqa_cache_write_decode(cache_layer, cfg, k, v, slots):
     return {"k": upd(cache_layer["k"], k), "v": upd(cache_layer["v"], v)}
 
 
+# ---------------------------------------------------------------------------
+# Paged GQA cache (refcounted shared-prefix pages)
+# ---------------------------------------------------------------------------
+#
+# The paged layout replaces each layer's dense per-row ring (B, T, K, hd)
+# with a physical page POOL (n_pages, P, K, hd) addressed through a per-row
+# int32 page table (B, max_pages): row b's logical ring slot s lives at
+# ``pool[table[b, s // P], s % P]``, so two rows whose tables map the same
+# physical page SHARE those K/V bytes (a common prompt prefix is prefilled
+# once and refcounted, never copied).  Physical page 0 is reserved as the
+# TRASH page: unmapped table entries and masked lock-step writes land there
+# and are never attended (always past a row's n_valid).
+
+def gqa_paged_cache_init(cfg, n_pages: int, page_size: int, n_layers: int,
+                         dtype):
+    """One stage's paged KV pool: leaves (L, n_pages, P, K, hd)."""
+    assert cfg.kv_cache_dtype != "int8", \
+        "paged KV does not support int8 cache quantisation"
+    K, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    shape = (n_layers, n_pages, page_size, K, hd) if n_layers else \
+        (n_pages, page_size, K, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def gqa_cache_write_decode_paged(cache_layer, cfg, k, v, pages, offsets):
+    """Scatter one decode token's K/V (B,1,K,hd) at page-offset coordinates
+    — ``pages``/``offsets`` (B,) physical coords into one layer's pool
+    (n_pages, P, K, hd).  Masked/idle rows are routed to the trash page by
+    the caller, so lock-step junk writes can never touch a live page."""
+    def upd(c, val):
+        return c.at[pages, offsets].set(val[:, 0])
+
+    return {"k": upd(cache_layer["k"], k), "v": upd(cache_layer["v"], v)}
+
+
+def gqa_decode_paged(p, cfg, x, cache_layer, table, pos, write_mask=None):
+    """One-token decode for one layer through a page table.
+
+    x: (B,1,D); table: (B, max_pages) int32 physical page ids (<= 0 =
+    unmapped → trash); pos: (B,) or scalar tokens-already-in-context.
+    Returns (out, new_cache_layer).  The ring length is max_pages * P; a
+    write whose ring slot falls in an unmapped logical page goes to trash
+    (the host allocator maps a real page before any live row's write).
+    ``write_mask`` (B,) bool routes idle rows' lock-step writes to trash
+    too — unlike the contiguous ring, an idle row's slot may sit in a
+    REFCOUNT-SHARED page, where a junk write would corrupt the page for
+    its other holders instead of self-healing."""
+    B = x.shape[0]
+    P = cache_layer["k"].shape[1]
+    max_pages = table.shape[1]
+    T = max_pages * P
+    pos = decode_positions(pos, B)
+    q, k, v = gqa_project_qkv(p, cfg, x, pos[:, None])
+    slot = pos % T
+    logical = slot // P
+    phys = jnp.take_along_axis(jnp.maximum(table, 0), logical[:, None],
+                               axis=1)[:, 0]
+    if write_mask is not None:
+        phys = jnp.where(write_mask, phys, 0)
+    new_cache = gqa_cache_write_decode_paged(cache_layer, cfg, k, v,
+                                             phys, slot % P)
+    n_valid = jnp.minimum(pos + 1, T)
+    out = decode_ops.decode_attention_paged(
+        q, new_cache["k"], new_cache["v"], table, n_valid,
+        softcap=cfg.attn_logit_softcap)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, new_cache
+
+
+def gqa_prefill_into_pages(p, cfg, x, cache_layer, table, positions,
+                           lengths):
+    """Tail prefill THROUGH the page table for one layer.
+
+    x: (Bn,S,D) normed tail hidden states; table: (Bn, max_pages) the
+    admitted rows' physical page maps; positions: (Bn,S) absolute token
+    positions (``base + t`` — base is the shared-prefix length already in
+    pages, so the tail K/V ring-writes land right after the shared span);
+    lengths: (Bn,) true tail lengths (padding positions write to trash).
+
+    Tail queries attend over the row's WHOLE mapped ring — the refcounted
+    shared-prefix pages plus the tail just written — under the absolute
+    causal mask ``slot <= position``, which is exactly full-prompt prefill
+    as long as nothing wrapped (prompts are admission-checked <= max_len).
+    Returns (attn output (Bn,S,D), updated cache_layer)."""
+    B, S, _ = x.shape
+    P = cache_layer["k"].shape[1]
+    max_pages = table.shape[1]
+    T = max_pages * P
+    q, k, v = gqa_project_qkv(p, cfg, x, positions)
+    valid = jnp.arange(S)[None, :] < lengths[:, None]          # (Bn,S)
+    slot = positions % T
+    phys = jnp.take_along_axis(jnp.maximum(table, 0), slot // P, axis=1)
+    phys = jnp.where(valid, phys, 0)                           # pad → trash
+    off = slot % P
+    new_k = cache_layer["k"].at[phys, off].set(k.astype(cache_layer["k"].dtype))
+    new_v = cache_layer["v"].at[phys, off].set(v.astype(cache_layer["v"].dtype))
+    # dense per-row view of the updated pool: (Bn, T, K, hd)
+    from ..kernels.decode_attention.ref import gather_pages_ref
+    kd = gather_pages_ref(new_k, table)
+    vd = gather_pages_ref(new_v, table)
+    K_h, hd = k.shape[2], k.shape[3]
+    G = q.shape[2] // K_h
+    qg = q.reshape(B, S, K_h, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, kd,
+                        preferred_element_type=jnp.float32)
+    scores = scores * (1.0 / (hd ** 0.5))
+    if cfg.attn_logit_softcap > 0.0:
+        scores = cfg.attn_logit_softcap * jnp.tanh(
+            scores / cfg.attn_logit_softcap)
+    # absolute causal mask: ring slot t attendable by the query at
+    # absolute position positions[b, s] iff t <= positions[b, s]
+    mask = (jnp.arange(T)[None, None, None, None, :]
+            <= positions[:, None, None, :, None])
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1).astype(vd.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, vd,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(B, S, K_h * G, hd).astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, {"k": new_k, "v": new_v}
+
+
 def decode_positions(pos, batch: int):
     """Normalise a decode position to per-row (B,) int32 (scalar broadcasts
     — the fixed-lockstep engine path and the slot pool share one code path)."""

@@ -82,12 +82,35 @@ def dense_prefill(p, cfg, x, positions, extras, max_len):
     return _res_hint(x), cache, ZERO
 
 
+def _gqa_decode_routed(p, cfg, h, cache_layer, pos, extras):
+    """Dense-ring or paged decode for one GQA layer, keyed on whether the
+    caller's cache carries a page table (``extras["page_table"]``)."""
+    table = extras.get("page_table")
+    if table is not None:
+        return attn.gqa_decode_paged(p, cfg, h, cache_layer, table, pos,
+                                     write_mask=extras.get("step_mask"))
+    return attn.gqa_decode(p, cfg, h, cache_layer, pos)
+
+
 def dense_decode(p, cfg, x, cache_layer, pos, extras):
-    y, cache_layer = attn.gqa_decode(p["attn"], cfg,
-                                     _norm(x, p["ln1"], cfg), cache_layer, pos)
+    y, cache_layer = _gqa_decode_routed(p["attn"], cfg,
+                                        _norm(x, p["ln1"], cfg), cache_layer,
+                                        pos, extras)
     x = x + y
     x = x + mlp_apply(p["mlp"], _norm(x, p["ln2"], cfg))
     return x, cache_layer
+
+
+def dense_prefill_paged(p, cfg, x, positions, cache_layer, table, lengths):
+    """Tail prefill through the page table (shared prefix already paged)."""
+    h = _norm(x, p["ln1"], cfg)
+    y, cache_layer = attn.gqa_prefill_into_pages(p["attn"], cfg, h,
+                                                 cache_layer, table,
+                                                 positions, lengths)
+    x = x + y
+    x = _res_hint(x)
+    x = x + mlp_apply(p["mlp"], _norm(x, p["ln2"], cfg))
+    return _res_hint(x), cache_layer
 
 
 def dense_cache_init(cfg, batch, max_len, n_layers, dtype):
@@ -125,11 +148,22 @@ def moe_prefill(p, cfg, x, positions, extras, max_len):
 
 
 def moe_decode(p, cfg, x, cache_layer, pos, extras):
-    y, cache_layer = attn.gqa_decode(p["attn"], cfg,
-                                     _norm(x, p["ln1"], cfg), cache_layer, pos)
+    y, cache_layer = _gqa_decode_routed(p["attn"], cfg,
+                                        _norm(x, p["ln1"], cfg), cache_layer,
+                                        pos, extras)
     x = x + y
     y, _ = moe_mod.moe_apply(p["moe"], cfg, _norm(x, p["ln2"], cfg))
     return x + y, cache_layer
+
+
+def moe_prefill_paged(p, cfg, x, positions, cache_layer, table, lengths):
+    h = _norm(x, p["ln1"], cfg)
+    y, cache_layer = attn.gqa_prefill_into_pages(p["attn"], cfg, h,
+                                                 cache_layer, table,
+                                                 positions, lengths)
+    x = x + y
+    y, _ = moe_mod.moe_apply(p["moe"], cfg, _norm(x, p["ln2"], cfg))
+    return _res_hint(x + y), cache_layer
 
 
 # ---------------------------------------------------------------------------
@@ -411,9 +445,11 @@ def dec_cache_init(cfg, batch, max_len, n_layers, dtype):
 
 BLOCKS: Dict[str, Dict[str, Any]] = {
     "dense": dict(init=dense_init, apply=dense_apply, prefill=dense_prefill,
-                  decode=dense_decode, cache_init=dense_cache_init),
+                  decode=dense_decode, cache_init=dense_cache_init,
+                  prefill_paged=dense_prefill_paged),
     "moe": dict(init=moe_init_fn, apply=moe_apply_fn, prefill=moe_prefill,
-                decode=moe_decode, cache_init=dense_cache_init),
+                decode=moe_decode, cache_init=dense_cache_init,
+                prefill_paged=moe_prefill_paged),
     "dense_mla": dict(init=dense_mla_init, apply=dense_mla_apply,
                       prefill=dense_mla_prefill, decode=dense_mla_decode,
                       cache_init=mla_cache_init),

@@ -333,6 +333,37 @@ def cache_init(cfg, batch: int, max_len: int):
     return {"stages": caches, "pos": jnp.zeros((batch,), jnp.int32)}
 
 
+def supports_paging(cfg) -> bool:
+    """Whether this model family can run the PAGED decode cache.
+
+    Paging covers the GQA ring-KV block types; recurrent state (SSM/xLSTM/
+    hymba), MLA latents, cross-attention K/V, int8-quantised caches and
+    sliding-window rings keep the contiguous per-slot layout."""
+    return (all(t in ("dense", "moe") for t in layer_types(cfg))
+            and cfg.kv_cache_dtype != "int8"
+            and not cfg.attn_window
+            and cfg.family != "vlm"
+            and not cfg.is_encdec)
+
+
+def paged_cache_init(cfg, batch: int, n_pages: int, page_size: int,
+                     max_pages: int):
+    """Paged decode cache: per-stage physical page pools + the page table.
+
+    ``cache["stages"]`` leaves are (L, n_pages, P, K, hd) page POOLS shared
+    by every row; ``cache["table"]`` (B, max_pages) int32 maps each row's
+    logical pages to physical ones (0 = unmapped → the reserved trash
+    page); ``cache["pos"]`` stays per-row.  The logical ring length is
+    ``max_pages * page_size``."""
+    assert supports_paging(cfg), "model family does not support paged KV"
+    from .attention import gqa_paged_cache_init
+    dtype = jnp.dtype(cfg.dtype)
+    caches = [gqa_paged_cache_init(cfg, n_pages, page_size, n, dtype)
+              for _btype, n in stages_for(cfg)]
+    return {"stages": caches, "pos": jnp.zeros((batch,), jnp.int32),
+            "table": jnp.zeros((batch, max_pages), jnp.int32)}
+
+
 def prefill(cfg, params, batch, max_len: int):
     """Run the prompt, build the decode cache. Returns (last logits, cache)."""
     x, positions, extras, _n_prefix = embed_batch(cfg, params, batch)
@@ -363,6 +394,10 @@ def decode_step(cfg, params, cache, tokens, step_mask=None):
     else:
         x = _embed_tokens(cfg, params, tokens)
     extras: Dict[str, Any] = {}
+    if "table" in cache:            # paged cache: route writes/attention
+        extras["page_table"] = cache["table"]
+        if step_mask is not None:   # idle rows' junk writes → trash page
+            extras["step_mask"] = jnp.asarray(step_mask)
     x = hint(x, "batch", None, "embed_act")
     x, new_caches = _run_stages_decode(cfg, params, x, cache["stages"], pos,
                                        extras)
@@ -370,7 +405,8 @@ def decode_step(cfg, params, cache, tokens, step_mask=None):
     logits = _unembed(cfg, params, h)
     new_pos = pos + 1 if step_mask is None else \
         jnp.where(jnp.asarray(step_mask), pos + 1, pos)
-    return logits, {"stages": new_caches, "pos": new_pos}
+    # preserve any additional cache entries (the page table) verbatim
+    return logits, {**cache, "stages": new_caches, "pos": new_pos}
 
 
 def prefill_into_slots(cfg, params, batch, cache, slots, lengths,
@@ -405,7 +441,60 @@ def prefill_into_slots(cfg, params, batch, cache, slots, lengths,
 
     new_stages = jax.tree_util.tree_map(scatter, cache["stages"], caches)
     new_pos = cache["pos"].at[slots].set(n_prefix + lengths)
-    return logits, {"stages": new_stages, "pos": new_pos}
+    # preserve any additional cache entries (sampling state etc.) verbatim
+    return logits, {**cache, "stages": new_stages, "pos": new_pos}
+
+
+def prefill_into_pages(cfg, params, batch, cache, slots, base, lengths):
+    """Tail-only prefill for newly admitted rows of a PAGED slot pool.
+
+    The shared prompt prefix — ``base`` (Bn,) tokens per row, page-aligned —
+    is ALREADY resident in refcounted pages mapped by each row's page
+    table, so only the unshared tail ``batch["tokens"]`` (Bn, S_tail,
+    right-padded to a bucketed S) runs through the model: admission FLOPs
+    and fresh KV bytes are flat in the shared-prefix length.  Tail queries
+    attend over the row's whole mapped ring (shared pages + the tail being
+    written) under the absolute causal mask, which equals full-prompt
+    prefill exactly — shared pages hold the same post-RoPE K at the same
+    absolute positions any private prefill would have written.
+
+    ``slots`` (Bn,) are the rows' table indices; ``lengths`` (Bn,) the true
+    tail token counts (padding positions write to the trash page).  The
+    caller must have mapped private pages covering ``[base, base+length)``
+    in ``cache["table"]`` before calling.  Returns (next-token logits
+    (Bn,1,V) gathered at each row's last real tail position, updated
+    cache)."""
+    tokens = batch["tokens"]
+    Bn, S = tokens.shape
+    base = jnp.asarray(base, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    slots = jnp.asarray(slots, jnp.int32)
+    x = _embed_tokens(cfg, params, tokens, base_pos=base)
+    positions = base[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    table_rows = jnp.take(cache["table"], slots, axis=0)   # (Bn, max_pages)
+    x = hint(x, "batch", "seq_act", "embed_act")
+    new_stages = []
+    for (btype, _n), stacked, cache_i in zip(stages_for(cfg),
+                                             params["stages"],
+                                             cache["stages"]):
+        paged_prefill = BLOCKS[btype]["prefill_paged"]
+
+        def body(carry, xs, _pp=paged_prefill):
+            layer_p, cache_l = xs
+            y, new_cache_l = _pp(layer_p, cfg, carry, positions, cache_l,
+                                 table_rows, lengths)
+            return y, new_cache_l
+
+        x, new_cache_i = jax.lax.scan(body, x, (stacked, cache_i))
+        new_stages.append(new_cache_i)
+    D = x.shape[-1]
+    last = lengths - 1
+    h = jnp.take_along_axis(
+        x, jnp.broadcast_to(last[:, None, None], (Bn, 1, D)), axis=1)
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = _unembed(cfg, params, h)
+    new_pos = cache["pos"].at[slots].set(base + lengths)
+    return logits, {**cache, "stages": new_stages, "pos": new_pos}
 
 
 def count_params(params) -> int:

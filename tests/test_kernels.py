@@ -7,8 +7,11 @@ import pytest
 from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.flash_attention.ops import flash_attention
-from repro.kernels.decode_attention.decode_attention import decode_attention_pallas
-from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.decode_attention.decode_attention import (
+    decode_attention_paged_pallas, decode_attention_pallas)
+from repro.kernels.decode_attention.ref import (decode_attention_paged_ref,
+                                                decode_attention_ref,
+                                                gather_pages_ref)
 from repro.kernels.ssm_scan.ssm_scan import ssm_scan_pallas
 from repro.kernels.ssm_scan.ref import ssm_scan_ref, ssm_step_ref
 
@@ -134,6 +137,108 @@ class TestDecodeAttention:
         np.testing.assert_allclose(np.asarray(one[:, 0]),
                                    np.asarray(full[:, -1]),
                                    rtol=1e-5, atol=1e-5)
+
+
+def _paged(key, B, n_pages, P, max_pages, H, K, hd, dtype,
+           share_first=0):
+    """Random page pools + a page table mapping each row to distinct
+    pages (optionally aliasing the first ``share_first`` pages across
+    every row, the shared-prefix shape).  Page 0 stays trash."""
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, 1, H, hd), dtype)
+    kp = jax.random.normal(kk, (n_pages, P, K, hd), dtype)
+    vp = jax.random.normal(kv, (n_pages, P, K, hd), dtype)
+    table = np.zeros((B, max_pages), np.int32)
+    nxt = 1 + share_first
+    for b in range(B):
+        table[b, :share_first] = range(1, share_first + 1)
+        for j in range(share_first, max_pages):
+            table[b, j] = nxt
+            nxt += 1
+    assert nxt <= n_pages
+    return q, kp, vp, jnp.asarray(table)
+
+
+class TestPagedDecodeAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("B,P,max_pages,H,K,hd", [
+        (1, 128, 2, 4, 4, 64),
+        (2, 128, 4, 8, 2, 64),
+        (2, 256, 2, 4, 2, 128),
+    ])
+    def test_sweep_vs_ref_and_dense(self, dtype, B, P, max_pages, H, K, hd):
+        """Pallas-interpret == paged ref == dense ref over the gathered
+        ring, for scalar n_valid at several fills."""
+        T = P * max_pages
+        q, kp, vp, table = _paged(jax.random.PRNGKey(11), B,
+                                  1 + B * max_pages, P, max_pages, H, K, hd,
+                                  dtype)
+        for n_valid in (P // 2, T // 2, T):
+            nv = jnp.asarray(n_valid, jnp.int32)
+            out = decode_attention_paged_pallas(q, kp, vp, table, nv,
+                                                interpret=True)
+            ref = decode_attention_paged_ref(q, kp, vp, table, nv)
+            dense = decode_attention_ref(q, gather_pages_ref(kp, table),
+                                         gather_pages_ref(vp, table), nv)
+            np.testing.assert_allclose(np.asarray(out, np.float32),
+                                       np.asarray(ref, np.float32),
+                                       **TOL[dtype])
+            np.testing.assert_allclose(np.asarray(ref, np.float32),
+                                       np.asarray(dense, np.float32),
+                                       **TOL[dtype])
+
+    def test_vector_n_valid_shared_pages(self):
+        """(B,) per-row lengths over a table whose first page is ALIASED
+        across rows (shared prefix): parity, and each row must equal a
+        single-row dense call over its own gathered ring."""
+        B, P, max_pages, H, K, hd = 4, 128, 3, 4, 2, 64
+        q, kp, vp, table = _paged(jax.random.PRNGKey(12), B,
+                                  1 + 1 + B * max_pages, P, max_pages, H, K,
+                                  hd, jnp.float32, share_first=1)
+        nv = jnp.asarray([P - 7, P * max_pages, P + 1, 1], jnp.int32)
+        out = decode_attention_paged_pallas(q, kp, vp, table, nv,
+                                            interpret=True)
+        ref = decode_attention_paged_ref(q, kp, vp, table, nv)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+        dense_k = gather_pages_ref(kp, table)
+        dense_v = gather_pages_ref(vp, table)
+        for i in range(B):
+            solo = decode_attention_ref(q[i:i + 1], dense_k[i:i + 1],
+                                        dense_v[i:i + 1], nv[i])
+            np.testing.assert_allclose(
+                np.asarray(ref[i]), np.asarray(solo[0]), rtol=2e-5,
+                atol=2e-5, err_msg=f"row {i} != its own gathered ring")
+
+    def test_unmapped_pages_inert(self):
+        """Entries past the valid length (0 = trash sentinel) must not
+        leak into the output: scribbling on the trash page and on the
+        unmapped tail pages changes nothing."""
+        B, P, max_pages, H, K, hd = 2, 128, 3, 4, 2, 64
+        q, kp, vp, table = _paged(jax.random.PRNGKey(13), B,
+                                  1 + B * max_pages, P, max_pages, H, K, hd,
+                                  jnp.float32)
+        tbl = np.asarray(table).copy()
+        tbl[:, -1] = 0                          # last logical page unmapped
+        nv = jnp.asarray([P, 2 * P], jnp.int32)   # valid stops before it
+        base = decode_attention_paged_ref(q, kp, vp, jnp.asarray(tbl), nv)
+        unmapped = np.unique(np.asarray(table)[:, -1])
+        kp2 = kp.at[0].set(999.0).at[unmapped].set(-999.0)
+        out = decode_attention_paged_ref(q, kp2, vp, jnp.asarray(tbl), nv)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(base),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_softcap(self):
+        B, P, max_pages, H, K, hd = 2, 128, 2, 4, 2, 64
+        q, kp, vp, table = _paged(jax.random.PRNGKey(14), B,
+                                  1 + B * max_pages, P, max_pages, H, K, hd,
+                                  jnp.float32)
+        nv = jnp.asarray([40, 200], jnp.int32)
+        out = decode_attention_paged_pallas(q, kp, vp, table, nv,
+                                            softcap=30.0, interpret=True)
+        ref = decode_attention_paged_ref(q, kp, vp, table, nv, softcap=30.0)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
 
 
 class TestSSMScan:

@@ -127,14 +127,18 @@ class TestSlotPoolDecoding:
                     live.remove(rid)
         return toks
 
-    def test_churn_token_exact_and_slot_reuse_no_leak(self, setup):
+    @pytest.mark.parametrize("paged", [False, True])
+    def test_churn_token_exact_and_slot_reuse_no_leak(self, setup, paged):
         """10 requests through a ≤4-slot pool, membership changing at
         every step: every slot is re-tenanted at least once, and the
         slot-cached tokens must equal the full-forward reference's —
         a freed slot's stale K/V leaking into its next tenant would
-        diverge immediately."""
+        diverge immediately.  Runs both KV layouts: contiguous per-slot
+        rings and refcounted pages (the rendered claim prompts share the
+        template preamble, so the paged run also exercises prefix reuse
+        under churn)."""
         cfg, claims, _, payloads = setup
-        slot = self._mk(payloads)                      # slot_cached default
+        slot = self._mk(payloads, paged=paged)
         full = self._mk(payloads, slot_cached=False)
         budget = {rid: 3 + (rid % 4) for rid in range(10)}
         got = self._churn(slot, claims, budget)
