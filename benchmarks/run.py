@@ -26,7 +26,8 @@ def main(argv=None) -> int:
                    bench_fig5_table2_task_times, bench_fig6_busy_cluster,
                    bench_fig7_resilience, bench_claims, bench_roofline,
                    bench_batch_policy, bench_context_plane,
-                   bench_continuous_batching, bench_live_decode)
+                   bench_continuous_batching, bench_gateway,
+                   bench_live_decode)
 
     t0 = time.time()
     if args.smoke:
@@ -39,6 +40,10 @@ def main(argv=None) -> int:
         # AND paged shared-prefix admission cost / KV bytes flat in the
         # shared-prefix length, at exact tokens vs full-forward
         bench_live_decode.main(smoke=True)
+        # asserts interactive p95 <= 1.2x unloaded under 10x batch
+        # overload at equal batch work, token-exact suspend/resume, and
+        # zero slot/page accounting leaks
+        bench_gateway.main(smoke=True)
         bench_roofline.main()
         print(f"\nsmoke benchmarks done in {time.time()-t0:.1f}s")
         return 0
@@ -55,6 +60,7 @@ def main(argv=None) -> int:
     bench_batch_policy.main_mixed()
     bench_continuous_batching.main()
     bench_context_plane.main()
+    bench_gateway.main()
     bench_live_decode.main()
     bench_roofline.main()
     print(f"\nall benchmarks done in {time.time()-t0:.1f}s")

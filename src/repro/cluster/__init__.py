@@ -38,24 +38,31 @@ from .hardware import (DECODE_FIXED_FRAC, GPU_CATALOG, TPU_CATALOG,
 from .worker import Worker
 from .scheduler import (Assignment, Request, RequestRecord, Scheduler,
                         Task, TaskRecord)
+from .gateway import (BATCH, ClassPolicy, Gateway, INTERACTIVE, REJECTED,
+                      SLOClass, TIMED_OUT, format_gateway)
 from .executors import LiveExecutor, SimExecutor
 from .application import Application
 from .factory import (Factory, make_sim, opportunistic_supply,
                       spill_aware_evict_priority)
-from .observability import (ProgressMonitor, Snapshot, format_latency,
-                            format_snapshot, format_zone_bytes,
-                            latency_summary, percentile, zone_byte_summary)
+from .observability import (ProgressMonitor, Snapshot,
+                            class_latency_summary, format_class_latency,
+                            format_latency, format_snapshot,
+                            format_zone_bytes, latency_summary, percentile,
+                            zone_byte_summary)
 from . import traces
 
 __all__ = [
-    "Application", "Assignment", "ClusterSpec", "DECODE_FIXED_FRAC",
-    "DeviceModel", "EventLoop", "Factory", "GPU_CATALOG", "LiveExecutor",
-    "PAPER_CLUSTER", "REF_ACTIVE_PARAMS", "Request", "RequestRecord",
-    "Scheduler", "SimExecutor", "TPU_CATALOG", "Task", "TaskRecord",
-    "Timer", "Worker", "cluster_sample", "make_sim",
+    "Application", "Assignment", "BATCH", "ClassPolicy", "ClusterSpec",
+    "DECODE_FIXED_FRAC", "DeviceModel", "EventLoop", "Factory",
+    "GPU_CATALOG", "Gateway", "INTERACTIVE", "LiveExecutor",
+    "PAPER_CLUSTER", "REF_ACTIVE_PARAMS", "REJECTED", "Request",
+    "RequestRecord", "SLOClass", "Scheduler", "SimExecutor",
+    "TIMED_OUT", "TPU_CATALOG", "Task", "TaskRecord",
+    "Timer", "Worker", "cluster_sample", "format_gateway", "make_sim",
     "opportunistic_supply", "paper_20gpu_pool", "pool_rate",
     "spill_aware_evict_priority", "traces",
-    "ProgressMonitor", "Snapshot", "format_latency", "format_snapshot",
+    "ProgressMonitor", "Snapshot", "class_latency_summary",
+    "format_class_latency", "format_latency", "format_snapshot",
     "format_zone_bytes", "latency_summary", "percentile",
     "zone_byte_summary",
 ]

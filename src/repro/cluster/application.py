@@ -26,7 +26,7 @@ from typing import Any, Dict, Iterable, List, Optional
 
 from ..core import ContextMode, ContextRecipe, PERVASIVE
 from .hardware import REF_ACTIVE_PARAMS
-from .observability import latency_summary
+from .observability import class_latency_summary, latency_summary
 from .scheduler import Request, RequestRecord, Scheduler
 
 
@@ -53,17 +53,22 @@ class Application:
                      arrival_s: float = 0.0,
                      mode: Optional[ContextMode] = None,
                      active_params: Optional[float] = None,
-                     exclusive: bool = False) -> Request:
+                     exclusive: bool = False,
+                     slo: str = "batch",
+                     deadline_s: Optional[float] = None) -> Request:
         """Build (but do not submit) one request.
 
         ``exclusive=True`` produces a run-to-completion request that
         admits no co-members — ONLY useful as the benchmark baseline the
-        continuous-batching path is measured against."""
+        continuous-batching path is measured against.  ``slo`` picks the
+        gateway service class (``"interactive"`` or ``"batch"``);
+        ``deadline_s`` is an ABSOLUTE queue deadline (interactive
+        requests without one get the gateway policy's default)."""
         req = Request(
             recipe_key, decode_steps=decode_steps,
             prompt_units=prompt_units, payload=payload,
             arrival_s=arrival_s, mode=mode or self.default_mode,
-            exclusive=exclusive,
+            exclusive=exclusive, slo=slo, deadline_s=deadline_s,
             active_params=(active_params if active_params is not None
                            else self.active_params.get(recipe_key,
                                                        REF_ACTIVE_PARAMS)))
@@ -71,9 +76,12 @@ class Application:
         return req
 
     def submit(self, recipe_key: str, **kw) -> Request:
-        """Submit one request immediately (live-serving arrival)."""
+        """Submit one request immediately (live-serving arrival).
+
+        Goes through :meth:`Scheduler.ingress`, so an installed gateway
+        applies its admission policy (bound / reject / deadline stamp)."""
         req = self.make_request(recipe_key, **kw)
-        self.sched.submit(req)
+        self.sched.ingress(req)
         return req
 
     def submit_stream(self, executor, specs: Iterable[Dict[str, Any]]
@@ -93,7 +101,7 @@ class Application:
 
             def arrive(req=req):
                 executor.pending_arrivals -= 1
-                self.sched.submit(req)
+                self.sched.ingress(req)
                 executor.pump()
 
             executor.pending_arrivals += 1
@@ -109,3 +117,7 @@ class Application:
     def latency_summary(self) -> Dict[str, float]:
         """Queue-wait / time-to-first-step / end-to-end distributions."""
         return latency_summary(self.records())
+
+    def class_latency_summary(self) -> Dict[str, Dict[str, float]]:
+        """Latency distributions split by SLO class."""
+        return class_latency_summary(self.records())

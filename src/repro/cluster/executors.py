@@ -170,6 +170,19 @@ class _StreamRun:
         if not self.lib.batch:
             self.close()
             return
+        if self.lib.stepping == 0:
+            # everyone left is a joiner (preemption can suspend the last
+            # settled member): there is no running step whose boundary a
+            # due joiner could wait for — activate the due ones NOW, and
+            # if none are due yet the in-flight admit() will reschedule.
+            due = self._due_joiners(self.ex.loop.now)
+            if not due:
+                return
+            self.t_boundary = self.ex.loop.now
+            self.lib.activate(due)
+            for rid in due:
+                self.join_t.pop(rid, None)
+            self._reprice()
         if self.lib.joining:
             t_next = self.t_boundary + self.step_s
         else:
@@ -271,6 +284,9 @@ class SimExecutor(_PlanOpExecution):
         self._peer_streams: Dict[str, int] = {}   # outbound per source
         self._streams: Dict[Tuple[str, str], _StreamRun] = {}
         self._budget_retry = None       # pending deferred-replication timer
+        self._prestage_retry = None     # deferred prestage-edge timer
+        self._prestage_pending: set = set()   # recipes with deferred edges
+        self._deadline_timer = None     # next gateway deadline expiry
         # arrivals scheduled on the loop but not yet submitted
         # (Application.submit_stream); keeps run() from stopping early
         self.pending_arrivals = 0
@@ -278,7 +294,16 @@ class SimExecutor(_PlanOpExecution):
     # -- proactive spanning-tree distribution (§5.3.1) ---------------------
     def prestage(self, recipe_key: str) -> int:
         """Stage ``recipe_key`` onto every context-less idle worker via a
-        topology-aware spanning tree. Returns the number of targets."""
+        topology-aware spanning tree. Returns the number of targets.
+
+        BUDGET-AWARE: each cross-zone tree edge is admission-checked
+        against the plane's :class:`LinkBudget` as a ``PEER_COPY`` op, so
+        operators capping DCN bytes cap the bulk distribution too — not
+        just the warm pool's share.  A deferred edge re-emits next round
+        exactly like a deferred ``Replicate``: its subtree is skipped
+        (children cannot source from a copy that never landed), the
+        deferral is counted, and a half-window timer re-runs prestage for
+        the recipe once the budget window can have slid."""
         from ..core import Peer, plan_spanning_tree
         reg = self.sched.registry
         recipe = reg.recipes[recipe_key]
@@ -301,10 +326,27 @@ class SimExecutor(_PlanOpExecution):
                                   fanout_cap=self.fanout_cap,
                                   t0=self.loop.now)
         zones = {w.worker_id: w.zone for w in self.sched.workers.values()}
+        dead: set = set()               # dsts whose edge the budget deferred
+        deferred = 0
         for edge in plan.edges:
             w = self.sched.workers.get(edge.dst)
             if w is None:
                 continue
+            if edge.src in dead:
+                # parent edge deferred: this copy has no source yet; the
+                # retry round re-plans the tree from what actually landed
+                dead.add(edge.dst)
+                deferred += 1
+                continue
+            op = PlanOp(OpKind.PEER_COPY, recipe_key, edge.dst,
+                        nbytes=recipe.transfer_bytes, src_worker=edge.src,
+                        src_zone=zones.get(edge.src, w.zone),
+                        dst_zone=w.zone)
+            if not plane.budget.admits(op, self.loop.now):
+                dead.add(edge.dst)
+                deferred += 1
+                continue
+            plane.budget.charge(op, self.loop.now)
             w.staging = True
             plane.note_staging(recipe_key, edge.dst)
 
@@ -333,7 +375,21 @@ class SimExecutor(_PlanOpExecution):
                 self.loop.after(cost.total_s, ready_cb)
 
             self.loop.at(edge.end_s, arrive)
-        return len(targets)
+        if deferred:
+            plane.deferred_intents += deferred
+            self._prestage_pending.add(recipe_key)
+            if self._prestage_retry is None:
+                def retry():
+                    self._prestage_retry = None
+                    pending, self._prestage_pending = \
+                        self._prestage_pending, set()
+                    for key in sorted(pending):
+                        if key in self.sched.registry.recipes:
+                            self.prestage(key)
+                    self.pump()
+                self._prestage_retry = self.loop.after(
+                    plane.budget.window_s / 2, retry)
+        return len(targets) - deferred
 
     # -- warm-pool replication (demand-driven, beyond prestage) ------------
     def _apply_warm_pool(self) -> int:
@@ -475,6 +531,49 @@ class SimExecutor(_PlanOpExecution):
             self._start(a)
         # leftover idle workers: replicate hot recipes ahead of demand
         self._apply_warm_pool()
+        # with a gateway installed, queued deadlines must fire as DES
+        # events — an idle loop would otherwise never notice an expiry
+        self._arm_deadline_timer()
+
+    def _arm_deadline_timer(self) -> None:
+        gw = self.sched.gateway
+        if gw is None:
+            return
+        nd = gw.next_deadline()
+        if nd is None:
+            if self._deadline_timer is not None:
+                self._deadline_timer.cancel()
+                self._deadline_timer = None
+            return
+        t = max(nd + _EPS, self.loop.now)
+        if self._deadline_timer is not None:
+            if self._deadline_timer.t <= t + _EPS:
+                return                  # an earlier/equal expiry is armed
+            self._deadline_timer.cancel()
+
+        def fire():
+            self._deadline_timer = None
+            self.pump()                 # route() expires overdue requests
+
+        self._deadline_timer = self.loop.at(t, fire)
+
+    def _meter_preemption(self, a: Assignment) -> None:
+        """Price the KV bytes a preemption dispatch moves: the victim's
+        decode cache spilling host-side, and — on the victim's return —
+        the snapshot moving back (sim: the recipe's per-slot estimate)."""
+        if a.preempt is None and not a.resumed:
+            return
+        plane = self.sched.plane
+        key = a.request.recipe_key
+        recipe = self.sched.registry.recipes[key]
+        if a.preempt is not None:
+            plane.record_kv_spill(
+                key, a.worker.zone,
+                recipe.decode_slot_bytes(a.preempt.active_params))
+        if a.resumed:
+            plane.record_kv_resume(
+                key, a.worker.zone,
+                recipe.decode_slot_bytes(a.request.active_params))
 
     def _start(self, a: Assignment) -> None:
         # the manager is serial: one dispatch per manager_dispatch_s
@@ -483,6 +582,7 @@ class SimExecutor(_PlanOpExecution):
         self._manager_free = t0
         a.t_dispatch = t0
         self.sched.on_start(a)
+        self._meter_preemption(a)
         req, w = a.request, a.worker
         wid = w.worker_id
         if a.join:
@@ -571,6 +671,8 @@ class LiveExecutor(_PlanOpExecution):
         self.results: Dict[int, Any] = {}
         self._stream_assign: Dict[int, Assignment] = {}
         self._open: List[Tuple[Worker, str]] = []
+        # (worker_id, key) -> decoder kv_resume_bytes_total last metered
+        self._kv_resume_seen: Dict[Tuple[str, str], int] = {}
         self._t0 = time.perf_counter()
 
     def now(self) -> float:
@@ -635,6 +737,8 @@ class LiveExecutor(_PlanOpExecution):
                 self._run_exclusive(a)
                 continue
             self._stream_assign[req.request_id] = a
+            if a.preempt is not None:
+                self._suspend_victim(a)
             if not a.join:              # founding member: open the batch
                 lib = w.library_for(
                     self.sched.registry.recipes[req.recipe_key])
@@ -642,6 +746,25 @@ class LiveExecutor(_PlanOpExecution):
                     lib.materialize()
                 self.sched.on_staged(a)
                 self._open.append((w, req.recipe_key))
+
+    def _suspend_victim(self, a: Assignment) -> None:
+        """Spill the preempted member's KV host-side through the stream
+        decoder BEFORE the next step runs, so the interactive admission
+        finds the slot free and the victim can later resume without
+        re-prefill.  Without a decoder (step_fn never ran) there is no
+        device state to save — the victim simply restarts."""
+        victim, w, key = a.preempt, a.worker, a.request.recipe_key
+        lib = w.libraries.get(key)
+        dec = (lib.context.payloads.get("_stream_decoder")
+               if lib is not None and lib.context is not None else None)
+        nbytes = dec.suspend(victim.request_id) if dec is not None else 0
+        if nbytes:
+            self.sched.plane.record_kv_spill(key, w.zone, nbytes)
+        else:                           # nothing saved: back to scratch
+            victim.suspended = False
+            victim.suspended_on = None
+            victim.steps_done = 0
+            victim.t_first_step = None
 
     # -- the live step loop ---------------------------------------------
     def _step_streams(self) -> bool:
@@ -671,6 +794,14 @@ class LiveExecutor(_PlanOpExecution):
                 measured = int(getattr(dec, "measured_slot_bytes", 0) or 0)
                 if measured and measured != lib.recipe.measured_slot_bytes:
                     lib.recipe.record_slot_bytes(measured)
+                # meter KV snapshots the decoder restored this step
+                # (resume happens inside the step_fn, so delta-track it)
+                total = int(getattr(dec, "kv_resume_bytes_total", 0) or 0)
+                seen = self._kv_resume_seen.get((w.worker_id, key), 0)
+                if total > seen:
+                    self.sched.plane.record_kv_resume(key, w.zone,
+                                                      total - seen)
+                    self._kv_resume_seen[(w.worker_id, key)] = total
             finished = lib.step()
             now = self.now()
             stepped = True
@@ -692,6 +823,14 @@ class LiveExecutor(_PlanOpExecution):
             progressed = self._dispatch_all()
             progressed |= self._step_streams()
             if not progressed:
+                gw = self.sched.gateway
+                nd = gw.next_deadline() if gw is not None else None
+                if nd is not None:
+                    # queued work is deadline-gated, not unplaceable:
+                    # wait for the expiry (or preemption slack) to open
+                    time.sleep(min(max(nd - self.now(), 0.0), 0.05)
+                               + 0.001)
+                    continue
                 raise RuntimeError(
                     "deadlock: requests queued but no worker can host "
                     "them (check worker shapes vs recipe footprints)")

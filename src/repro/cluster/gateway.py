@@ -1,0 +1,252 @@
+"""The serving gateway: SLO classes, bounded queues, deadline semantics.
+
+The scheduler's lanes are FIFO with a starvation bound — fine for a pool
+that serves ONE throughput-oriented application, but the moment traffic
+is mixed nothing distinguishes an interactive request (a user is
+waiting) from a batch sweep (nobody is).  The gateway is the admission
+edge that makes the distinction explicit, modeled on the rusets gateway
+contract (bounded queues, queue-vs-reject, timeout-to-503) and Aladdin's
+SLO-aware placement (arXiv 2405.06856):
+
+* every :class:`~repro.cluster.scheduler.Request` carries an SLO class —
+  ``INTERACTIVE`` (has a deadline) or ``BATCH`` (best-effort);
+* each (recipe, class) pair gets a BOUNDED queue of fresh admissions
+  with an explicit overflow policy: ``"reject"`` turns the request away
+  at the edge with a terminal ``REJECTED`` record (the 429/503 path),
+  ``"queue"`` parks it in a gateway-side overflow buffer that refills
+  the scheduler lane as it drains — the lane itself never exceeds the
+  bound;
+* a queued interactive request whose deadline passes is TIMED OUT — a
+  terminal ``TIMED_OUT`` record, never silently served late.  Deadlines
+  bound QUEUE time: once a request is admitted to a worker it runs to
+  completion (the decode itself is the service being paid for);
+* re-admissions bypass the bound: a request requeued by preemption or
+  worker eviction already consumed admission budget at the edge — the
+  bound is front-door admission control, not an in-flight cap.
+
+Preemption (the scheduler side, see ``Scheduler.route``): when an
+interactive head's deadline is at risk and no warm slot is free, a
+BATCH member of a live dynamic batch is suspended — its KV state spills
+host-side through the decoder's suspend/resume pair — and the
+interactive request takes its slot.  The victim re-enters its lane
+``PREEMPTED`` and later resumes from the spilled cache on the same
+worker without re-prefill.
+
+Terminal outcomes are mutually exclusive by construction:
+:meth:`Scheduler.record_terminal` asserts a request is finalized at
+most once, and ``REJECTED``/``TIMED_OUT``/``"done"`` are the only
+terminal states (a preempted request is NOT terminal — it completes
+``"done"`` with ``preemptions > 0`` on its record).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from enum import Enum
+from typing import Deque, Dict, List, Optional, Tuple
+
+from .scheduler import Request, Scheduler
+
+# terminal outcomes on RequestRecord.outcome
+DONE = "done"
+REJECTED = "rejected"
+TIMED_OUT = "timed_out"
+
+
+class SLOClass(str, Enum):
+    """Request service classes the gateway distinguishes."""
+    INTERACTIVE = "interactive"
+    BATCH = "batch"
+
+
+INTERACTIVE = SLOClass.INTERACTIVE.value
+BATCH = SLOClass.BATCH.value
+
+
+@dataclass
+class ClassPolicy:
+    """Admission policy for one SLO class.
+
+    ``max_queue`` bounds FRESH queued requests per recipe lane (``None``
+    = unbounded); ``overflow`` picks what happens past the bound:
+    ``"reject"`` (terminal REJECTED) or ``"queue"`` (park in the
+    gateway's overflow buffer; the lane never exceeds the bound).
+    ``deadline_s`` is the default RELATIVE deadline stamped on requests
+    that arrive without one (``None`` = no deadline — the batch class);
+    ``preempt_slack_s`` is how close to its deadline a queued
+    interactive request must be before the router may preempt a batch
+    slot for it."""
+    max_queue: Optional[int] = None
+    overflow: str = "queue"                 # "queue" | "reject"
+    deadline_s: Optional[float] = None
+    preempt_slack_s: float = 5.0
+
+    def __post_init__(self):
+        if self.overflow not in ("queue", "reject"):
+            raise ValueError(f"overflow must be 'queue' or 'reject', "
+                             f"got {self.overflow!r}")
+
+
+class Gateway:
+    """Admission edge between :class:`Application` and :class:`Scheduler`.
+
+    Installs itself as ``scheduler.gateway``; :meth:`Scheduler.ingress`
+    then routes every submission through :meth:`submit`, and
+    ``Scheduler.route`` calls :meth:`expire` each dispatch round so a
+    deadline can never be crossed silently."""
+
+    def __init__(self, sched: Scheduler, *,
+                 interactive: Optional[ClassPolicy] = None,
+                 batch: Optional[ClassPolicy] = None):
+        self.sched = sched
+        self.policies: Dict[str, ClassPolicy] = {
+            INTERACTIVE: interactive or ClassPolicy(
+                max_queue=64, overflow="reject", deadline_s=60.0),
+            BATCH: batch or ClassPolicy(max_queue=None, overflow="queue"),
+        }
+        # (recipe_key, slo) -> parked fresh requests awaiting lane room
+        self._overflow: Dict[Tuple[str, str], Deque[Request]] = {}
+        self.rejected: Dict[str, int] = {INTERACTIVE: 0, BATCH: 0}
+        self.timed_out: Dict[str, int] = {INTERACTIVE: 0, BATCH: 0}
+        self.admitted: Dict[str, int] = {INTERACTIVE: 0, BATCH: 0}
+        sched.gateway = self
+
+    # -- admission accounting -------------------------------------------
+    @staticmethod
+    def _is_fresh(req: Request) -> bool:
+        """Fresh = never dispatched; re-admissions bypass the bound."""
+        return req.attempts == 0 and req.preemptions == 0 \
+            and req.steps_done == 0
+
+    def queued_fresh(self, key: str, slo: str) -> int:
+        lane = self.sched.lanes.get(key)
+        if not lane:
+            return 0
+        return sum(1 for r in lane if r.slo == slo and self._is_fresh(r))
+
+    def queue_depth(self, key: str, slo: str) -> int:
+        """Lane depth + overflow for (recipe, class)."""
+        lane = self.sched.lanes.get(key) or ()
+        return sum(1 for r in lane if r.slo == slo) + \
+            len(self._overflow.get((key, slo), ()))
+
+    @property
+    def pending_overflow(self) -> int:
+        return sum(len(q) for q in self._overflow.values())
+
+    # -- the front door --------------------------------------------------
+    def submit(self, req: Request) -> Request:
+        """Admit, park, or reject one request at the edge."""
+        pol = self.policies.get(req.slo)
+        if pol is None:
+            raise ValueError(f"unknown SLO class {req.slo!r}")
+        now = self.sched.clock()
+        if req.slo == INTERACTIVE and req.deadline_s is None \
+                and pol.deadline_s is not None:
+            req.deadline_s = max(req.arrival_s, now) + pol.deadline_s
+        if pol.max_queue is not None and self._is_fresh(req) and \
+                self.queued_fresh(req.recipe_key, req.slo) >= pol.max_queue:
+            if pol.overflow == "reject":
+                self.rejected[req.slo] += 1
+                self.sched.record_terminal(req, REJECTED, now)
+                return req
+            self._overflow.setdefault((req.recipe_key, req.slo),
+                                      deque()).append(req)
+            return req
+        self.admitted[req.slo] += 1
+        self.sched.submit(req)
+        return req
+
+    def _refill(self, key: str, slo: str) -> None:
+        pol = self.policies[slo]
+        q = self._overflow.get((key, slo))
+        while q and (pol.max_queue is None
+                     or self.queued_fresh(key, slo) < pol.max_queue):
+            req = q.popleft()
+            self.admitted[slo] += 1
+            self.sched.submit(req)
+        if q is not None and not q:
+            del self._overflow[(key, slo)]
+
+    def on_dispatched(self, req: Request) -> None:
+        """A lane head left its queue; refill from overflow."""
+        self._refill(req.recipe_key, req.slo)
+
+    # -- deadline semantics ----------------------------------------------
+    def expire(self, now: float) -> List[Request]:
+        """Time out every QUEUED request whose deadline has passed —
+        lane and overflow alike — so nothing is ever served late.
+        Returns the expired requests."""
+        expired: List[Request] = []
+        for key, lane in self.sched.lanes.items():
+            dead = [r for r in lane
+                    if r.deadline_s is not None and r.deadline_s < now]
+            for r in dead:
+                lane.remove(r)
+                expired.append(r)
+        for (key, slo), q in list(self._overflow.items()):
+            dead = [r for r in q
+                    if r.deadline_s is not None and r.deadline_s < now]
+            for r in dead:
+                q.remove(r)
+                expired.append(r)
+        for r in expired:
+            self.timed_out[r.slo] += 1
+            self.sched.record_terminal(r, TIMED_OUT, now)
+        if expired:
+            for key in {r.recipe_key for r in expired}:
+                for slo in (INTERACTIVE, BATCH):
+                    self._refill(key, slo)
+        return expired
+
+    def next_deadline(self) -> Optional[float]:
+        """Earliest deadline among queued (lane or overflow) requests."""
+        ds = [r.deadline_s for lane in self.sched.lanes.values()
+              for r in lane if r.deadline_s is not None]
+        ds += [r.deadline_s for q in self._overflow.values()
+               for r in q if r.deadline_s is not None]
+        return min(ds) if ds else None
+
+    # -- observability ----------------------------------------------------
+    def saturation(self) -> Dict[str, float]:
+        """Active decode slots vs pool slot capacity, plus queue depths
+        and the terminal counters — the backpressure dashboard."""
+        sched = self.sched
+        active = {INTERACTIVE: 0, BATCH: 0}
+        for req, _wid in sched.running.values():
+            active[req.slo] = active.get(req.slo, 0) + 1
+        capacity = 0
+        for w in sched.workers.values():
+            for key in w.open_streams:
+                lib = w.libraries.get(key)
+                if lib is None:
+                    continue
+                req = next(iter(lib.batch.values()), None)
+                ap = req.active_params if req is not None else 0.0
+                capacity += w.slot_budget(key, ap)
+        queued = {slo: sum(self.queue_depth(key, slo)
+                           for key in set(sched.lanes)
+                           | {k for k, _ in self._overflow})
+                  for slo in (INTERACTIVE, BATCH)}
+        return {
+            "active_interactive": active[INTERACTIVE],
+            "active_batch": active[BATCH],
+            "slot_capacity": capacity,
+            "saturation": (sum(active.values()) / capacity
+                           if capacity else 0.0),
+            "queued_interactive": queued[INTERACTIVE],
+            "queued_batch": queued[BATCH],
+            "rejected": sum(self.rejected.values()),
+            "timed_out": sum(self.timed_out.values()),
+            "preemptions": sched.preemptions,
+        }
+
+
+def format_gateway(gw: Gateway) -> str:
+    s = gw.saturation()
+    return (f"[gateway] active {s['active_interactive']:.0f}i/"
+            f"{s['active_batch']:.0f}b of {s['slot_capacity']:.0f} slots "
+            f"({100 * s['saturation']:.0f}%) | queued "
+            f"{s['queued_interactive']:.0f}i/{s['queued_batch']:.0f}b | "
+            f"rejected {s['rejected']:.0f}  timed-out {s['timed_out']:.0f}  "
+            f"preemptions {s['preemptions']:.0f}")

@@ -41,13 +41,40 @@ def percentile(xs: Sequence[float], p: float) -> float:
 def latency_summary(records: Sequence[RequestRecord]) -> Dict[str, float]:
     """Per-request latency distributions over completion ``records``.
 
-    Keys: ``n``, ``{queue_wait,ttfs,e2e}_{p50,p95,mean}_s``.  ``e2e`` is
-    arrival → completion; works identically for sim and live records."""
+    Keys: ``n``, per-outcome counts (``n_done`` / ``n_rejected`` /
+    ``n_timed_out`` / ``n_preempted``), and
+    ``{queue_wait,ttfs,e2e}_{p50,p95,mean}_s``.  ``e2e`` is arrival →
+    completion; works identically for sim and live records.
+
+    OUTCOME-AWARE: the percentile series cover only requests SERVED
+    normally.  A rejected or timed-out record never decoded (its
+    ``t_end`` is the refusal instant — including it would fake
+    suspiciously good latency), and a preempted request's e2e includes
+    its suspension gap (including it would smear the batch class's tail
+    into the served distribution); both are counted, not averaged."""
     out: Dict[str, float] = {"n": float(len(records))}
+    n_done = n_rej = n_to = n_pre = 0
+    served = []
+    for r in records:
+        outcome = getattr(r, "outcome", "done")
+        if outcome == "rejected":
+            n_rej += 1
+        elif outcome == "timed_out":
+            n_to += 1
+        else:
+            n_done += 1
+            if getattr(r, "preemptions", 0) > 0:
+                n_pre += 1
+            else:
+                served.append(r)
+    out["n_done"] = float(n_done)
+    out["n_rejected"] = float(n_rej)
+    out["n_timed_out"] = float(n_to)
+    out["n_preempted"] = float(n_pre)
     series = {
-        "queue_wait": [r.queue_wait_s for r in records],
-        "ttfs": [r.ttfs_s for r in records],
-        "e2e": [r.t_end - r.t_arrival for r in records],
+        "queue_wait": [r.queue_wait_s for r in served],
+        "ttfs": [r.ttfs_s for r in served],
+        "e2e": [r.t_end - r.t_arrival for r in served],
     }
     for name, xs in series.items():
         out[f"{name}_p50_s"] = percentile(xs, 50)
@@ -56,14 +83,39 @@ def latency_summary(records: Sequence[RequestRecord]) -> Dict[str, float]:
     return out
 
 
+def class_latency_summary(records: Sequence[RequestRecord]
+                          ) -> Dict[str, Dict[str, float]]:
+    """:func:`latency_summary` split by SLO class (``slo`` on the
+    record) — the per-class percentile view the gateway contract
+    exports."""
+    by_class: Dict[str, List[RequestRecord]] = {}
+    for r in records:
+        by_class.setdefault(getattr(r, "slo", "batch"), []).append(r)
+    return {slo: latency_summary(rs)
+            for slo, rs in sorted(by_class.items())}
+
+
 def format_latency(summary: Dict[str, float], label: str = "") -> str:
+    extras = ""
+    dropped = (summary.get("n_rejected", 0) + summary.get("n_timed_out", 0)
+               + summary.get("n_preempted", 0))
+    if dropped:
+        extras = (f" | done {summary['n_done']:.0f} "
+                  f"rej {summary['n_rejected']:.0f} "
+                  f"t/o {summary['n_timed_out']:.0f} "
+                  f"pre {summary['n_preempted']:.0f}")
     return (f"[latency{' ' + label if label else ''}] n={summary['n']:.0f}  "
             f"queue p50 {summary['queue_wait_p50_s']:.2f}s "
             f"p95 {summary['queue_wait_p95_s']:.2f}s | "
             f"ttfs p50 {summary['ttfs_p50_s']:.2f}s "
             f"p95 {summary['ttfs_p95_s']:.2f}s | "
             f"e2e p50 {summary['e2e_p50_s']:.2f}s "
-            f"p95 {summary['e2e_p95_s']:.2f}s")
+            f"p95 {summary['e2e_p95_s']:.2f}s" + extras)
+
+
+def format_class_latency(summaries: Dict[str, Dict[str, float]]) -> str:
+    return "\n".join(format_latency(s, label=slo)
+                     for slo, s in summaries.items())
 
 
 def zone_byte_summary(plane) -> Dict[str, Dict[str, float]]:
@@ -98,6 +150,13 @@ def format_zone_bytes(plane, label: str = "") -> str:
             f"{row['out_cross']/gb:.1f} GB cross"
             + (f" | plan-exec delta {row['planned_minus_moved']/gb:.2f} GB"
                if row["planned_minus_moved"] else ""))
+    kv = plane.kv_summary() if hasattr(plane, "kv_summary") else None
+    if kv and (kv["spill_events"] or kv["resume_events"]):
+        lines.append(
+            f"  kv preemption: spilled {kv['spilled_bytes']/gb:.2f} GB "
+            f"({kv['spill_events']} spill(s)) | resumed "
+            f"{kv['resumed_bytes']/gb:.2f} GB ({kv['resume_events']} "
+            f"resume(s))")
     return "\n".join(lines)
 
 

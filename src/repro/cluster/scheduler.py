@@ -99,6 +99,12 @@ class Request:
     steps_done: int = 0
     t_first_step: Optional[float] = None
     truncated: bool = False           # prompt clipped at admission (live)
+    # -- SLO class (see repro.cluster.gateway) -------------------------
+    slo: str = "batch"                # "interactive" | "batch"
+    deadline_s: Optional[float] = None  # ABSOLUTE queue deadline (503 past)
+    preemptions: int = 0              # times a batch slot was taken from us
+    suspended: bool = False           # KV snapshot parked, awaiting resume
+    suspended_on: Optional[str] = None  # worker holding the snapshot
 
     @property
     def n_units(self) -> int:
@@ -148,6 +154,11 @@ class Assignment:
     # peer_source/cross_zone/local_restage above are derived views of it
     plan: Optional[PlacementPlan] = None
     moved_bytes: int = 0              # measured fetch bytes (sim executor)
+    # deadline-driven preemption: the BATCH member this dispatch evicts
+    # from its slot (executor suspends its KV), and whether this
+    # dispatch RESUMES a previously suspended request from its snapshot
+    preempt: Optional[Request] = None
+    resumed: bool = False
 
     @property
     def task(self) -> Request:        # deprecated alias
@@ -175,6 +186,9 @@ class RequestRecord:
     exclusive: bool = True
     joined: bool = False              # admitted into an in-flight batch
     truncated: bool = False           # prompt was clipped, output partial
+    outcome: str = "done"             # "done" | "rejected" | "timed_out"
+    slo: str = "batch"                # SLO class the request carried
+    preemptions: int = 0              # slot preemptions suffered en route
 
     @property
     def exec_s(self) -> float:        # on-worker time (incl. staging)
@@ -235,6 +249,11 @@ class Scheduler:
         self.admissions = 0           # requests joined into live batches
         self.spilled_libraries = 0
         self.submitted = 0
+        self.preemptions = 0          # batch slots taken for interactive
+        # the serving gateway installs itself here (repro.cluster.gateway);
+        # ingress() then routes submissions through its admission edge
+        self.gateway = None
+        self._terminal_ids: set = set()   # mutual-exclusion guard
         # per-recipe observed service times: [warm_sum, warm_n, cold_sum,
         # cold_n] — feeds aging_bound="auto"
         self._service: Dict[str, List[float]] = {}
@@ -269,6 +288,27 @@ class Scheduler:
         st[1] += alpha * (1.0 / dt - st[1])
         st[0] = t
 
+    def ingress(self, request: Request) -> Request:
+        """The front door: route through the serving gateway when one is
+        installed (SLO admission control), else straight into a lane."""
+        if self.gateway is not None:
+            self.gateway.submit(request)
+        else:
+            self.submit(request)
+        return request
+
+    @staticmethod
+    def _interactive_block_end(lane: "Deque[Request]") -> int:
+        """Index just past the leading run of interactive requests.
+
+        Class priority is an insertion discipline, not a separate queue:
+        interactive requests always form a prefix of their lane, FIFO
+        within the class, so lane heads stay the dispatch interface."""
+        i = 0
+        while i < len(lane) and lane[i].slo == "interactive":
+            i += 1
+        return i
+
     def submit(self, request: Request) -> None:
         if not request.exclusive and not request.mode.state_resident:
             # a dynamic batch presupposes the model staying resident
@@ -278,9 +318,32 @@ class Scheduler:
                 "continuous batching requires a state-resident context "
                 f"mode, got {request.mode.name!r}; submit partial/naive "
                 "work as exclusive=True run-to-completion requests")
-        self.lanes.setdefault(request.recipe_key, deque()).append(request)
+        lane = self.lanes.setdefault(request.recipe_key, deque())
+        if request.slo == "interactive":
+            lane.insert(self._interactive_block_end(lane), request)
+        else:
+            lane.append(request)
         self.submitted += 1
         self._note_arrival(request.recipe_key, request.arrival_s)
+
+    def record_terminal(self, request: Request, outcome: str,
+                        now: float) -> None:
+        """Finalize a request at the admission edge (never dispatched):
+        ``rejected`` at the bound or ``timed_out`` past its deadline.
+        Terminal outcomes are mutually exclusive — a request is finalized
+        at most once, ever."""
+        rid = request.request_id
+        assert rid not in self._terminal_ids, \
+            f"request {rid} finalized twice ({outcome})"
+        assert rid not in self.running, \
+            f"request {rid} is running; cannot finalize {outcome}"
+        self._terminal_ids.add(rid)
+        self.records.append(RequestRecord(
+            rid, "", "", request.arrival_s, now, now, now,
+            request.n_units, False, request.attempts,
+            request.exclusive, False, request.truncated,
+            outcome=outcome, slo=request.slo,
+            preemptions=request.preemptions))
 
     def submit_sweep(self, recipe_key: str, n_total: int, batch: int,
                      mode: ContextMode = PERVASIVE,
@@ -313,8 +376,14 @@ class Scheduler:
                       key=lambda r: r.request_id)
 
     def _requeue(self, request: Request) -> None:
-        self.lanes.setdefault(request.recipe_key,
-                              deque()).appendleft(request)
+        """Front-of-class requeue: interactive at the very head, batch at
+        the head of the batch section (behind queued interactive work) —
+        preserving the interactive-prefix lane invariant."""
+        lane = self.lanes.setdefault(request.recipe_key, deque())
+        if request.slo == "interactive":
+            lane.appendleft(request)
+        else:
+            lane.insert(self._interactive_block_end(lane), request)
 
     # ------------------------------------------------------------------
     # pool membership (driven by the factory / eviction processes)
@@ -400,7 +469,27 @@ class Scheduler:
         that has been passed over its aging bound reserves every worker
         able to host it.  Stream requests have a third placement beyond
         warm-idle and cold: ADMISSION into a live batch with free slots,
-        which needs no idle worker at all."""
+        which needs no idle worker at all.  With a gateway installed the
+        round starts by expiring overdue queued requests (TIMED_OUT) and
+        may end with DEADLINE-DRIVEN PREEMPTION: an interactive head
+        within ``preempt_slack_s`` of its deadline, with no warm slot
+        free, suspends a batch member of a live dynamic batch (the
+        executor spills its KV) and takes the slot."""
+        now = self.clock()
+        if self.gateway is not None:
+            self.gateway.expire(now)
+        # a suspended request whose snapshot died (worker evicted, or the
+        # library spilled — payloads cleared) restarts from scratch
+        for lane in self.lanes.values():
+            for r in lane:
+                if not r.suspended:
+                    continue
+                w = self.workers.get(r.suspended_on)
+                if w is None or not w.has_ready(r.recipe_key):
+                    r.suspended = False
+                    r.suspended_on = None
+                    r.steps_done = 0
+                    r.t_first_step = None
         heads = self._heads()
         if not heads:
             return None
@@ -429,6 +518,10 @@ class Scheduler:
             warm = [w for w in idle if w.worker_id in ready
                     and w.has_ready(key) and foundable(req, w)
                     and allowed(req, w)]
+            if req.suspended:
+                # affinity: the KV snapshot lives on suspended_on — only
+                # a placement there resumes without re-prefill
+                warm = [w for w in warm if w.worker_id == req.suspended_on]
             if warm:
                 # fastest warm device first (work stealing does the rest)
                 w = min(warm, key=lambda w: w.device.infer_s)
@@ -438,6 +531,9 @@ class Scheduler:
             joinable = [w for w in self.workers.values()
                         if w.stream_slots_free(key, req.active_params) > 0
                         and allowed(req, w)]
+            if req.suspended:
+                joinable = [w for w in joinable
+                            if w.worker_id == req.suspended_on]
             if joinable:
                 # founding a NEW batch on an idle worker beats joining
                 # when the lane backlog overflows the open batches' free
@@ -455,8 +551,21 @@ class Scheduler:
                         w.device.infer_s,
                         -w.stream_slots_free(key, req.active_params)))
                     return self._dispatch(req, w, warm=True, join=True)
+            # no free slot anywhere: an interactive head inside its
+            # preemption slack takes a batch member's slot instead of
+            # missing its deadline (the victim's KV spills + resumes)
+            if (self.gateway is not None and req.slo == "interactive"
+                    and req.deadline_s is not None):
+                pol = self.gateway.policies.get("interactive")
+                if pol is not None and \
+                        req.deadline_s - now <= pol.preempt_slack_s:
+                    a = self._try_preempt(req)
+                    if a is not None:
+                        return a
         # pass 2: cold placements (stage onto any capable idle worker)
         for req in heads:
+            if req.suspended:
+                continue              # wait for the affinity slot instead
             recipe = self.registry.recipes[req.recipe_key]
             cands = [w for w in idle
                      if w.can_host(recipe) and foundable(req, w)
@@ -470,8 +579,57 @@ class Scheduler:
             return self._dispatch(req, w, warm=False)
         return None
 
+    def _try_preempt(self, req: Request) -> Optional[Assignment]:
+        """Pick and suspend a batch victim so ``req`` can take its slot.
+
+        The victim is the settled BATCH member with the most remaining
+        work (tie: youngest) across workers with an open stream for the
+        recipe; members still joining (mid-prefill) are never preempted.
+        Returns the join Assignment for ``req``, or None if no live
+        batch holds a preemptible member."""
+        key = req.recipe_key
+        best = None                   # (units_left, request_id, v, w, lib)
+        for w in self.workers.values():
+            if key not in w.open_streams:
+                continue
+            if req.suspended and w.worker_id != req.suspended_on:
+                continue
+            lib = w.libraries.get(key)
+            if lib is None:
+                continue
+            for v in lib.batch.values():
+                if v.slo != "batch" or v.exclusive \
+                        or v.request_id in lib.joining:
+                    continue
+                cand = (v.n_units - v.steps_done, v.request_id, v, w, lib)
+                if best is None or cand[:2] > best[:2]:
+                    best = cand
+        if best is None:
+            return None
+        _, _, victim, w, lib = best
+        self._preempt(victim, w, lib)
+        return self._dispatch(req, w, warm=True, join=True, preempt=victim)
+
+    def _preempt(self, victim: Request, w: Worker, lib) -> None:
+        """Suspend ``victim`` out of its dynamic batch: it keeps its
+        decode progress (``steps_done``) and re-enters its lane with a
+        worker affinity; the EXECUTOR spills its KV through
+        ``StreamingDecoder.suspend`` when it sees ``Assignment.preempt``."""
+        vid = victim.request_id
+        lib.batch.pop(vid, None)
+        lib.joining.discard(vid)
+        self.running.pop(vid, None)
+        n = w.running_by_recipe.get(victim.recipe_key, 0)
+        w.running_by_recipe[victim.recipe_key] = max(0, n - 1)
+        victim.suspended = True
+        victim.suspended_on = w.worker_id
+        victim.preemptions += 1
+        self.preemptions += 1
+        self._requeue(victim)
+
     def _dispatch(self, req: Request, w: Worker, *, warm: bool,
-                  join: bool = False) -> Assignment:
+                  join: bool = False,
+                  preempt: Optional[Request] = None) -> Assignment:
         lane = self.lanes[req.recipe_key]
         assert lane and lane[0] is req
         lane.popleft()
@@ -484,12 +642,21 @@ class Scheduler:
         if jumped:
             self.backfills += 1
         self.running[req.request_id] = (req, w.worker_id)
+        resumed = False
+        if req.suspended:
+            # re-admission onto the snapshot's worker: resume in place
+            resumed = True
+            req.suspended = False
+            req.suspended_on = None
+        if self.gateway is not None:
+            self.gateway.on_dispatched(req)
         if join:
             self.admissions += 1
             return Assignment(req, w, warm=True, peer_source=None,
-                              join=True)
+                              join=True, preempt=preempt, resumed=resumed)
         if warm:
-            return Assignment(req, w, warm=True, peer_source=None)
+            return Assignment(req, w, warm=True, peer_source=None,
+                              resumed=resumed)
         if not req.mode.deps_cached and not req.mode.weights_cached:
             # naive mode manages no context: nothing for the plane to plan
             return Assignment(req, w, warm=False, peer_source=None)
@@ -588,11 +755,13 @@ class Scheduler:
         st[i + 1] += 1
         if t_first_step is None:
             t_first_step = req.t_first_step
+        self._terminal_ids.add(req.request_id)
         self.records.append(RequestRecord(
             req.request_id, w.worker_id, w.device.name, req.arrival_s,
             t_start, t_end if t_first_step is None else t_first_step,
             t_end, req.n_units, assignment.warm, req.attempts,
-            req.exclusive, assignment.join, req.truncated))
+            req.exclusive, assignment.join, req.truncated,
+            outcome="done", slo=req.slo, preemptions=req.preemptions))
 
     def close_stream(self, worker_id: str, recipe_key: str) -> None:
         """The dynamic batch for ``recipe_key`` on ``worker_id`` emptied;
@@ -607,7 +776,9 @@ class Scheduler:
     # ------------------------------------------------------------------
     @property
     def done(self) -> bool:
-        return not any(self.lanes.values()) and not self.running
+        return (not any(self.lanes.values()) and not self.running
+                and (self.gateway is None
+                     or not self.gateway.pending_overflow))
 
     def makespan(self) -> float:
         return max((r.t_end for r in self.records), default=0.0)

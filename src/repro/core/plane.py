@@ -340,6 +340,14 @@ class ContextPlane:
         self.deferred_intents = 0
         self._inflight: Dict[Tuple[str, str], PlanOp] = {}
         self._tombstones: Dict[str, int] = {}     # recipe -> lost READY copies
+        # preemption KV movement, priced per zone like everything else the
+        # plane moves.  Spills are WORKER-LOCAL (device -> host, no peer
+        # link), so they get their own meters rather than riding the zone
+        # link meters the planned/moved parity invariant covers.
+        self.kv_spilled: Dict[str, int] = {}      # zone -> bytes spilled
+        self.kv_resumed: Dict[str, int] = {}      # zone -> bytes restored
+        self.kv_spill_events = 0
+        self.kv_resume_events = 0
 
     # -- registration ------------------------------------------------------
     def register(self, recipe) -> str:
@@ -536,6 +544,26 @@ class ContextPlane:
                     src_worker="", src_zone=src_zone, dst_zone=dst_zone)
         self.planned.charge_op(op)
         self.moved.charge_op(op)
+
+    def record_kv_spill(self, key: str, zone: str, nbytes: int) -> None:
+        """Meter a preemption KV spill (a batch victim's decode cache
+        moving device -> host in ``zone``).  ``key`` is accepted for
+        symmetry with :meth:`record_transfer`; spill pricing is per zone."""
+        self.kv_spilled[zone] = self.kv_spilled.get(zone, 0) + int(nbytes)
+        self.kv_spill_events += 1
+
+    def record_kv_resume(self, key: str, zone: str, nbytes: int) -> None:
+        """Meter a suspended request's KV snapshot moving host -> device
+        on resume (the re-prefill it replaced cost zero bytes)."""
+        self.kv_resumed[zone] = self.kv_resumed.get(zone, 0) + int(nbytes)
+        self.kv_resume_events += 1
+
+    def kv_summary(self) -> Dict[str, int]:
+        """Preemption KV movement totals (bytes and events)."""
+        return {"spilled_bytes": sum(self.kv_spilled.values()),
+                "resumed_bytes": sum(self.kv_resumed.values()),
+                "spill_events": self.kv_spill_events,
+                "resume_events": self.kv_resume_events}
 
     # -- worker loss & recovery -------------------------------------------
     def drop_worker(self, worker_id: str, now: float = 0.0) -> List[str]:

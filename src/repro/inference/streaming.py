@@ -75,6 +75,7 @@ tests/test_streaming_live.py and tests/test_paged_kv.py.
 from __future__ import annotations
 
 import functools
+from collections import OrderedDict
 from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 import jax
@@ -135,33 +136,69 @@ class PagePool:
     Page 0 is the reserved TRASH page: it is never handed out, doubles
     as the unmapped page-table sentinel, and absorbs masked lock-step
     writes.  Refcounts are host-side only — the device sees pages purely
-    through the table."""
+    through the table.
+
+    PREFIX RETENTION (``retained_cap`` > 0): a page whose refcount hits
+    zero is PARKED in an LRU of at most ``retained_cap`` pages instead
+    of freed — its bytes stay valid device-side and its prefix-index
+    entries survive, so shared-prefix reuse works across GAPS in time,
+    not just overlap.  ``incref`` revives a parked page (an index hit on
+    a retained prefix); parked pages are reclaimed only under pressure:
+    LRU-first when ``alloc`` finds the free list empty, or when the park
+    itself overflows the cap.  Reclaiming fires ``on_evict_retained``
+    (the decoder wires it to ``PrefixIndex.forget_page``) — index
+    entries purge on ACTUAL free, never on park.  ``retained_cap=0``
+    (default) frees at zero exactly as before."""
 
     TRASH = 0
 
-    def __init__(self, n_pages: int):
+    def __init__(self, n_pages: int, retained_cap: int = 0):
         assert n_pages >= 1
         self.n_pages = n_pages
+        self.retained_cap = retained_cap
+        self.on_evict_retained = None     # callback(page) on actual free
         self._ref: Dict[int, int] = {}
+        self._retained: "OrderedDict[int, None]" = OrderedDict()
         self._free: List[int] = list(range(n_pages - 1, 0, -1))
 
+    def _reclaim_lru(self) -> int:
+        """Actually free the least-recently-parked page."""
+        page, _ = self._retained.popitem(last=False)
+        if self.on_evict_retained is not None:
+            self.on_evict_retained(page)
+        return page
+
     def alloc(self) -> int:
-        page = self._free.pop()
+        if not self._free and self._retained:
+            page = self._reclaim_lru()    # allocation pressure: evict LRU
+        else:
+            page = self._free.pop()
         self._ref[page] = 1
         return page
 
     def incref(self, page: int) -> None:
-        assert page != self.TRASH and page in self._ref
+        assert page != self.TRASH
+        if page in self._retained:        # prefix hit on a parked page
+            del self._retained[page]
+            self._ref[page] = 1
+            return
+        assert page in self._ref
         self._ref[page] += 1
 
     def decref(self, page: int) -> bool:
-        """Drop one reference; returns True when the page was freed."""
+        """Drop one reference; returns True when the page was freed
+        (a parked page is NOT freed — its bytes remain valid)."""
         assert page != self.TRASH
         assert self._ref.get(page, 0) > 0, \
             f"decref of unreferenced page {page} (double free)"
         self._ref[page] -= 1
         if self._ref[page] == 0:
             del self._ref[page]
+            if self.retained_cap > 0:
+                self._retained[page] = None
+                while len(self._retained) > self.retained_cap:
+                    self._free.append(self._reclaim_lru())
+                return False
             self._free.append(page)
             return True
         return False
@@ -181,6 +218,10 @@ class PagePool:
     @property
     def in_use(self) -> int:
         return len(self._ref)
+
+    @property
+    def retained_count(self) -> int:
+        return len(self._retained)
 
 
 class PrefixIndex:
@@ -257,7 +298,7 @@ class StreamingDecoder:
                  prompt_len: int = PROMPT_LEN, slot_cached: bool = True,
                  max_len: Optional[int] = None, b_max: Optional[int] = None,
                  paged: Optional[bool] = None, page_size: int = 64,
-                 strict_prompts: bool = False):
+                 strict_prompts: bool = False, retain_bytes: int = 0):
         self.cfg = cfg
         self.params = params
         self.tokenizer = tokenizer
@@ -299,6 +340,13 @@ class StreamingDecoder:
         self.measured_slot_bytes = 0              # real per-slot footprint
         self.prefill_tokens_total = 0             # admission cost counter
         self.shared_tokens_total = 0              # prefix tokens reused
+        # prefix-page retention budget (bytes of refcount-zero pages to
+        # park, see PagePool); 0 = free-at-zero, the pre-retention path
+        self.retain_bytes = retain_bytes
+        # rid -> host-side KV snapshot (preemption suspend/resume)
+        self._suspended: Dict[int, dict] = {}
+        self.kv_suspend_bytes_total = 0           # spill-path byte meters
+        self.kv_resume_bytes_total = 0
 
     # -- membership -----------------------------------------------------
     def ensure(self, rid: int, claim) -> None:
@@ -354,6 +402,88 @@ class StreamingDecoder:
         self.truncated.pop(rid, None)
         return toks[end:]
 
+    # -- preemption: KV suspend / resume --------------------------------
+    def has_suspended(self, rid: int) -> bool:
+        return rid in self._suspended
+
+    def suspend(self, rid: int) -> int:
+        """Spill ``rid``'s decode state HOST-side and release its device
+        footprint (slot + pages), so an interactive request can take the
+        slot.  The snapshot — token buffer, per-row position, and the
+        row's K/V bytes — lives in ``_suspended`` until :meth:`resume`
+        restores it bit-exactly, WITHOUT re-prefill.  Returns the
+        snapshot's KV byte size (0 if ``rid`` holds no slot)."""
+        slot = self.pool.slot_of.get(rid)
+        if slot is None or rid not in self._tokens or self._cache is None:
+            return 0
+        snap: dict = {
+            "tokens": list(self._tokens[rid]),
+            "prompt_end": self._prompt_end[rid],
+            "truncated": self.truncated.get(rid, False),
+            "pos": int(np.asarray(self._cache["pos"])[slot]),
+        }
+        if self.paged:
+            mapped = [(pi, int(p)) for pi, p in enumerate(self._table[slot])
+                      if int(p) != PagePool.TRASH]
+            idx = np.asarray([p for _pi, p in mapped], np.int32)
+            host = jax.tree_util.tree_map(
+                lambda x: np.asarray(x[:, idx]), self._cache["stages"])
+            snap["page_idx"] = [pi for pi, _p in mapped]
+            snap["kv"] = host
+            for _pi, p in mapped:
+                if self.pages.decref(p):
+                    self.prefix.forget_page(p)
+            self._table[slot] = PagePool.TRASH
+            self._table_dirty = True
+        else:
+            snap["kv"] = jax.tree_util.tree_map(
+                lambda x: np.asarray(x[:, slot]), self._cache["stages"])
+        nbytes = int(sum(x.nbytes
+                         for x in jax.tree_util.tree_leaves(snap["kv"])))
+        self.pool.release(rid)
+        del self._tokens[rid]
+        del self._prompt_end[rid]
+        self.truncated.pop(rid, None)
+        self._suspended[rid] = snap
+        self.kv_suspend_bytes_total += nbytes
+        return nbytes
+
+    def resume(self, rid: int) -> int:
+        """Re-admit a suspended ``rid`` from its host snapshot: bind a
+        slot, scatter the saved K/V back (paged: onto freshly allocated
+        pages), restore the row position — NO prefill runs.  Greedy
+        decode then continues bit-exactly where it stopped.  Returns the
+        restored KV byte size."""
+        snap = self._suspended.pop(rid)
+        if self.pool.free == 0:
+            self._grow(len(self.pool.slot_of) + 1)
+        elif self._cache is None:
+            self._cache = self._fresh_cache(self.pool.capacity)
+        slot = self.pool.bind(rid)
+        self._tokens[rid] = snap["tokens"]
+        self._prompt_end[rid] = snap["prompt_end"]
+        self.truncated[rid] = snap["truncated"]
+        if self.paged:
+            pages = [self.pages.alloc() for _ in snap["page_idx"]]
+            self._table[slot] = PagePool.TRASH
+            for pi, p in zip(snap["page_idx"], pages):
+                self._table[slot, pi] = p
+            self._table_dirty = True
+            idx = np.asarray(pages, np.int32)
+            self._cache["stages"] = jax.tree_util.tree_map(
+                lambda big, small: big.at[:, idx].set(small),
+                self._cache["stages"], snap["kv"])
+            self._sync_table()
+        else:
+            self._cache["stages"] = jax.tree_util.tree_map(
+                lambda big, small: big.at[:, slot].set(small),
+                self._cache["stages"], snap["kv"])
+        self._cache["pos"] = self._cache["pos"].at[slot].set(snap["pos"])
+        nbytes = int(sum(x.nbytes
+                         for x in jax.tree_util.tree_leaves(snap["kv"])))
+        self.kv_resume_bytes_total += nbytes
+        return nbytes
+
     # -- the step -------------------------------------------------------
     def step(self, rids: Sequence[int]) -> Dict[int, int]:
         """One greedy decode step for the CURRENT membership.
@@ -388,6 +518,8 @@ class StreamingDecoder:
         n_pages = 1 + cap * self.max_pages        # +1: the trash page
         if self.pages is None:
             self.pages = PagePool(n_pages)
+            # retained pages purge their index entries on ACTUAL free
+            self.pages.on_evict_retained = self.prefix.forget_page
         self._table = np.zeros((cap, self.max_pages), np.int32)
         self._table_dirty = False                 # fresh device table is 0 too
         return M.paged_cache_init(self.cfg, cap, n_pages, self.page_size,
@@ -524,6 +656,10 @@ class StreamingDecoder:
         if not self.measured_slot_bytes:
             if self.paged:
                 self.measured_slot_bytes = self.page_bytes * self.max_pages
+                if self.retain_bytes and self.page_bytes:
+                    # byte budget -> page count, now that pages have a size
+                    self.pages.retained_cap = max(
+                        1, self.retain_bytes // self.page_bytes)
             else:
                 total = sum(x.nbytes
                             for x in jax.tree_util.tree_leaves(self._cache))
@@ -635,6 +771,12 @@ def make_pff_step_fn(prompt_len: int = PROMPT_LEN, *,
         for rid in dec.active_rids():
             if rid not in present:                # requeued away mid-batch
                 dec.finish(rid)
+        for r in members:
+            # a preempted member coming back: restore its KV snapshot
+            # in place of the admission prefill (suspend removed it from
+            # active_rids, so the cleanup above never touches it)
+            if dec.has_suspended(r.request_id):
+                dec.resume(r.request_id)
         for r in members:
             dec.ensure(r.request_id, r.payload)
             if dec.truncated.get(r.request_id):

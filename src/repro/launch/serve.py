@@ -24,7 +24,8 @@ import argparse
 import sys
 import time
 
-from repro.cluster import (Application, LiveExecutor, Scheduler, Worker,
+from repro.cluster import (Application, Gateway, LiveExecutor, Scheduler,
+                           Worker, format_class_latency, format_gateway,
                            format_latency, format_zone_bytes)
 from repro.cluster.hardware import GPU_CATALOG
 from repro.configs import get_smoke_config
@@ -52,6 +53,13 @@ def main(argv=None) -> int:
     group.add_argument("--batch-tasks", dest="stream",
                        action="store_false",
                        help="deprecated run-to-completion batch tasks")
+    ap.add_argument("--interactive-every", type=int, default=0,
+                    metavar="N",
+                    help="mark every Nth claim INTERACTIVE (deadline'd, "
+                         "may preempt batch slots); 0 = all batch class")
+    ap.add_argument("--deadline", type=float, default=60.0,
+                    help="relative queue deadline for interactive "
+                         "requests (seconds)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch)
@@ -73,14 +81,24 @@ def main(argv=None) -> int:
 
     t0 = time.perf_counter()
     if args.stream:
+        # the serving gateway fronts every stream submission: SLO classes,
+        # bounded queues, deadline semantics (all-batch traffic passes
+        # through untouched — the batch class queues unbounded)
+        from repro.cluster import ClassPolicy
+        gw = Gateway(sched, interactive=ClassPolicy(
+            max_queue=64, overflow="reject", deadline_s=args.deadline))
         ex = LiveExecutor(sched, step_fns={key: make_pff_step_fn()})
-        for c in claims:
+        every = args.interactive_every
+        for i, c in enumerate(claims):
+            slo = ("interactive" if every and (i % every == 0)
+                   else "batch")
             app.submit(key, decode_steps=MAX_NEW, payload=c,
-                       arrival_s=ex.now())
+                       arrival_s=ex.now(), slo=slo)
         ex.run()
         tok = ByteTokenizer(cfg.vocab_size)
         preds = [stream_verdict(tok, ex.results[r.request_id])
-                 for r in app.requests]
+                 for r in app.requests
+                 if r.request_id in ex.results]
         n_done = len(preds)
     else:
         import warnings
@@ -113,8 +131,10 @@ def main(argv=None) -> int:
         print(f"  warm requests: {len(warm)}  "
               f"mean {sum(warm)/len(warm):.3f}s")
     if args.stream:
-        print("  " + format_latency(app.latency_summary()))
-        print(f"  admissions into live batches: {sched.admissions}")
+        print(format_class_latency(app.class_latency_summary()))
+        print(format_gateway(gw))
+        print(f"  admissions into live batches: {sched.admissions}  "
+              f"preemptions: {sched.preemptions}")
     # context-plane run summary: per-zone transfer bytes + op counters
     print(format_zone_bytes(sched.plane))
     return 0

@@ -1,0 +1,79 @@
+"""Hypothesis property tests on the serving gateway's invariants.
+
+Per-class queue bounds must hold at EVERY DES event, terminal outcomes
+(done / REJECTED / TIMED_OUT) are mutually exclusive and recorded
+exactly once, and preemption conserves work whatever the schedule.
+"""
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (see requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.cluster import (Application, ClassPolicy, Gateway, REJECTED,
+                           TIMED_OUT, make_sim)
+
+from test_gateway import A10, AP, RECIPE2, run_preemption_scenario
+
+arrivals = st.lists(
+    st.tuples(st.sampled_from(["interactive", "batch"]),
+              st.integers(0, 40),               # arrival second
+              st.integers(1, 6)),               # decode steps
+    min_size=1, max_size=25)
+
+
+@given(arrivals, st.integers(1, 3), st.integers(1, 3))
+@settings(max_examples=25, deadline=None)
+def test_queue_bounds_hold_at_every_des_event(schedule, ibound, bbound):
+    """At no point in the run may the fresh queued population of a
+    bounded class exceed its bound — checked after EVERY loop event."""
+    sched, ex, fac = make_sim(devices=[A10])
+    app = Application(sched)
+    key = app.register(RECIPE2, active_params=AP)
+    gw = Gateway(sched,
+                 interactive=ClassPolicy(max_queue=ibound, overflow="reject",
+                                         deadline_s=25.0),
+                 batch=ClassPolicy(max_queue=bbound, overflow="queue"))
+    app.submit_stream(ex, [dict(recipe_key=key, decode_steps=steps,
+                                arrival_s=float(t), slo=slo)
+                           for slo, t, steps in schedule])
+    fac.reconcile(1)
+    ex.pump()
+    while ex.loop.step():
+        for slo, pol in gw.policies.items():
+            if pol.max_queue is not None:
+                depth = gw.queued_fresh(key, slo)
+                assert depth <= pol.max_queue, \
+                    f"{slo} fresh depth {depth} > bound {pol.max_queue} " \
+                    f"at t={ex.loop.now:.2f}"
+
+    # terminal exclusivity: one record per request, disjoint outcomes
+    ids = [r.request_id for r in sched.records]
+    assert len(ids) == len(set(ids)), "request finalized twice"
+    assert len(ids) == len(app.requests), "request lost"
+    for r in sched.records:
+        assert r.outcome in ("done", REJECTED, TIMED_OUT)
+    done_units = sum(r.n_units for r in sched.records
+                     if r.outcome == "done")
+    assert done_units == sched.completed_inferences
+
+
+@given(st.integers(20, 60), st.integers(1, 6), st.integers(26, 50))
+@settings(max_examples=15, deadline=None)
+def test_preemption_conserves_victim_work(batch_steps, int_steps,
+                                          int_arrival):
+    """Whatever the preemption schedule, a suspended victim eventually
+    completes exactly its submitted decode steps — never fewer (lost
+    work) and never more (double credit)."""
+    sched, gw, app = run_preemption_scenario(
+        batch_steps=batch_steps, int_steps=int_steps,
+        int_arrival=float(int_arrival))
+    assert sched.done
+    total = 2 * batch_steps + int_steps
+    done_units = sum(r.n_units for r in sched.records
+                     if r.outcome == "done")
+    timed_out = [r for r in sched.records if r.outcome == TIMED_OUT]
+    assert done_units + sum(r.n_units for r in timed_out) == total
+    assert sched.completed_inferences == done_units
+    kv = sched.plane.kv_summary()
+    assert kv["resume_events"] == kv["spill_events"] == sched.preemptions
