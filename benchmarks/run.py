@@ -26,7 +26,7 @@ def main(argv=None) -> int:
                    bench_fig5_table2_task_times, bench_fig6_busy_cluster,
                    bench_fig7_resilience, bench_claims, bench_roofline,
                    bench_batch_policy, bench_context_plane,
-                   bench_continuous_batching, bench_gateway,
+                   bench_continuous_batching, bench_disagg, bench_gateway,
                    bench_live_decode)
 
     t0 = time.time()
@@ -44,6 +44,10 @@ def main(argv=None) -> int:
         # overload at equal batch work, token-exact suspend/resume, and
         # zero slot/page accounting leaks
         bench_gateway.main(smoke=True)
+        # asserts disaggregated routing >= colocated throughput at equal
+        # completed work, shipped-KV decode token-exact on both layouts,
+        # and zero KV byte leaks (planned == moved incl KV_SHIP)
+        bench_disagg.main(smoke=True)
         bench_roofline.main()
         print(f"\nsmoke benchmarks done in {time.time()-t0:.1f}s")
         return 0
@@ -61,6 +65,7 @@ def main(argv=None) -> int:
     bench_continuous_batching.main()
     bench_context_plane.main()
     bench_gateway.main()
+    bench_disagg.main()
     bench_live_decode.main()
     bench_roofline.main()
     print(f"\nall benchmarks done in {time.time()-t0:.1f}s")

@@ -36,8 +36,8 @@ from .hardware import (DECODE_FIXED_FRAC, GPU_CATALOG, TPU_CATALOG,
                        cluster_sample, paper_20gpu_pool, pool_rate,
                        REF_ACTIVE_PARAMS)
 from .worker import Worker
-from .scheduler import (Assignment, Request, RequestRecord, Scheduler,
-                        Task, TaskRecord)
+from .scheduler import (Assignment, DECODE, PREFILL, Request,
+                        RequestRecord, Scheduler, Task, TaskRecord)
 from .gateway import (BATCH, ClassPolicy, Gateway, INTERACTIVE, REJECTED,
                       SLOClass, TIMED_OUT, format_gateway)
 from .executors import LiveExecutor, SimExecutor
@@ -53,7 +53,8 @@ from . import traces
 
 __all__ = [
     "Application", "Assignment", "BATCH", "ClassPolicy", "ClusterSpec",
-    "DECODE_FIXED_FRAC", "DeviceModel", "EventLoop", "Factory",
+    "DECODE", "DECODE_FIXED_FRAC", "DeviceModel", "EventLoop", "Factory",
+    "PREFILL",
     "GPU_CATALOG", "Gateway", "INTERACTIVE", "LiveExecutor",
     "PAPER_CLUSTER", "REF_ACTIVE_PARAMS", "REJECTED", "Request",
     "RequestRecord", "SLOClass", "Scheduler", "SimExecutor",

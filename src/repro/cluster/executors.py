@@ -30,10 +30,22 @@ from ..core import (ContextMode, NAIVE, OpKind, PARTIAL, PERVASIVE,
                     PlacementPlan, PlanOp, Tier, WarmPoolPolicy)
 from .events import EventLoop
 from .hardware import ClusterSpec
-from .scheduler import Assignment, Scheduler
+from .scheduler import Assignment, PREFILL, Scheduler
 from .worker import Worker
 
 _EPS = 1e-9
+
+
+def _kv_nbytes(tree) -> int:
+    """Byte size of a host-side KV snapshot pytree (no jax dependency —
+    the sim backend must stay importable without an accelerator stack)."""
+    if hasattr(tree, "nbytes"):
+        return int(tree.nbytes)
+    if isinstance(tree, dict):
+        return sum(_kv_nbytes(v) for v in tree.values())
+    if isinstance(tree, (list, tuple)):
+        return sum(_kv_nbytes(v) for v in tree)
+    return 0
 
 
 class _PlanOpExecution:
@@ -575,6 +587,57 @@ class SimExecutor(_PlanOpExecution):
                 key, a.worker.zone,
                 recipe.decode_slot_bytes(a.request.active_params))
 
+    def _ship_delay(self, a: Assignment, t0: float) -> float:
+        """Price the KV handoff attached to a decode dispatch: occupy an
+        outbound stream on the prefill worker's NIC, schedule the plane's
+        landed event, and return the transfer seconds the admission must
+        wait for.  The landed event is stale-safe — an eviction that
+        already aborted the ship makes it a no-op."""
+        op = a.kv_ship
+        if op is None:
+            return 0.0
+        base = (self.cluster.peer_bw_cross if op.cross_zone
+                else self.cluster.peer_bw_local)
+        bw = base / (self._peer_streams.get(op.src_worker, 0) + 1)
+        ship_s = op.nbytes / bw if op.nbytes > 0 else 0.0
+        if ship_s > 0:
+            self._take_peer_stream(op.src_worker, ship_s)
+        a.request.ship_s += ship_s
+        rid = a.request.request_id
+        self.loop.at(t0 + ship_s,
+                     lambda: self.sched.plane.kv_ship_completed(rid))
+        return ship_s
+
+    def _start_prefill(self, a: Assignment, t0: float,
+                       staging_s: float) -> None:
+        """A PREFILL dispatch occupies the worker for the FLOP-bound
+        prompt pass, then hands the request back to the scheduler as a
+        DECODE-phase requeue carrying its KV snapshot, priced at the
+        recipe's per-slot estimate (the same pricing preemption spills
+        use, so ship and spill bytes stay comparable)."""
+        req, w = a.request, a.worker
+        wid, tid = w.worker_id, req.request_id
+        recipe = self.sched.registry.recipes[req.recipe_key]
+        prefill_s = w.device.prefill_time(req.active_params,
+                                          req.prompt_units)
+
+        def staged():
+            if wid in self.sched.workers and tid in self.sched.running:
+                self.sched.on_staged(a)
+
+        def done():
+            cur = self.sched.running.get(tid)
+            if cur is None or cur[1] != wid:
+                return              # evicted mid-prefill: already requeued
+            self.sched.on_prefill_done(
+                a, t0, self.loop.now,
+                kv_nbytes=recipe.decode_slot_bytes(req.active_params))
+            self.pump()
+
+        if not a.warm:
+            self.loop.at(t0 + staging_s, staged)
+        self.loop.at(t0 + staging_s + prefill_s, done)
+
     def _start(self, a: Assignment) -> None:
         # the manager is serial: one dispatch per manager_dispatch_s
         t0 = max(self.loop.now, self._manager_free) \
@@ -587,12 +650,22 @@ class SimExecutor(_PlanOpExecution):
         wid = w.worker_id
         if a.join:
             run = self._streams.get((wid, req.recipe_key))
-            if run is not None:
-                # the admission lands once the serial manager finishes
-                # this dispatch (t0), matching the recorded t_dispatch
-                self.loop.at(t0, lambda: run.admit(a))
+            if run is None:
+                if a.kv_ship is not None:
+                    # no batch to land on: the committed handoff dies too
+                    self.sched.plane.kv_ship_aborted(req.request_id,
+                                                     self.loop.now)
+                return
+            # the admission lands once the serial manager finishes this
+            # dispatch (t0) plus any KV handoff from the prefill worker
+            ship_s = self._ship_delay(a, t0)
+            self.loop.at(t0 + ship_s, lambda: run.admit(a))
             return
         staging_s = 0.0 if a.warm else self._staging_cost(a)
+        if req.phase == PREFILL:
+            self._start_prefill(a, t0, staging_s)
+            return
+        ship_s = self._ship_delay(a, t0)
         if not req.exclusive:
             # founding member of a stream batch: hand the clock to a runner
             run = _StreamRun(self, a)
@@ -602,11 +675,13 @@ class SimExecutor(_PlanOpExecution):
                     if wid in self.sched.workers and run.alive():
                         self.sched.on_staged(a)
                 self.loop.at(t0 + staging_s, staged)
-            self.loop.at(t0 + staging_s, run.begin)
+            self.loop.at(t0 + staging_s + ship_s, run.begin)
             return
-        # deprecated run-to-completion batch: one completion event
+        # deprecated run-to-completion batch: one completion event.  A
+        # DECODE-phase exclusive already banked its prompt units as
+        # steps_done, so only the remaining (decode) units run here.
         step_s = w.device.step_time(req.active_params, 1)
-        infer_s = req.n_units * step_s
+        infer_s = (req.n_units - req.steps_done) * step_s
         tid = req.request_id
 
         def staged():
@@ -619,13 +694,14 @@ class SimExecutor(_PlanOpExecution):
                 return                  # evicted mid-run; already requeued
                                         # (and possibly re-dispatched)
             self.sched.on_complete(a, t0, self.loop.now,
-                                   t_first_step=t0 + staging_s + step_s)
+                                   t_first_step=t0 + staging_s + ship_s
+                                   + step_s)
             self._post_exec(a)
             self.pump()
 
         if not a.warm:
             self.loop.at(t0 + staging_s, staged)
-        self.loop.at(t0 + staging_s + infer_s, complete)
+        self.loop.at(t0 + staging_s + ship_s + infer_s, complete)
 
     # -- run ------------------------------------------------------------------
     def run(self, *, until: Optional[float] = None) -> float:
@@ -733,6 +809,9 @@ class LiveExecutor(_PlanOpExecution):
             a.t_dispatch = self.now()
             req, w = a.request, a.worker
             self.sched.on_start(a)
+            if req.phase == PREFILL:
+                self._run_prefill(a)
+                continue
             if req.exclusive:
                 self._run_exclusive(a)
                 continue
@@ -746,6 +825,65 @@ class LiveExecutor(_PlanOpExecution):
                     lib.materialize()
                 self.sched.on_staged(a)
                 self._open.append((w, req.recipe_key))
+            if a.kv_ship is not None:
+                self._ship_kv(a)
+
+    def _run_prefill(self, a: Assignment) -> None:
+        """Run a PREFILL-phase dispatch to completion: materialise the
+        recipe, emit the prompt-phase tokens through the step function's
+        ``prefill`` entry, and leave the KV snapshot parked in this
+        worker's decoder.  The request goes back to the scheduler as
+        DECODE-phase work carrying the snapshot's MEASURED byte size —
+        the plane prices any subsequent ship with real bytes.  A recipe
+        whose step function cannot prefill without stepping falls back
+        to colocated execution (phase cleared, request requeued)."""
+        req, w = a.request, a.worker
+        t_start = self.now()
+        recipe = self.sched.registry.recipes[req.recipe_key]
+        lib = w.library_for(recipe)
+        if not lib.ready:
+            lib.materialize()
+        self.sched.on_staged(a)
+        prefill = getattr(self.step_fns.get(req.recipe_key), "prefill",
+                          None)
+        if prefill is None:
+            self.sched.abort_prefill(a)
+            return
+        nbytes, toks = prefill(lib.context.payloads, req)
+        self.results.setdefault(req.request_id, []).extend(toks)
+        self.sched.on_prefill_done(a, t_start, self.now(),
+                                   kv_nbytes=nbytes)
+
+    def _ship_kv(self, a: Assignment) -> None:
+        """Execute the KV handoff attached to a decode dispatch: pop the
+        snapshot from the prefill worker's decoder and park it in the
+        destination library's inbox; the step function adopts it before
+        the request's first decode step, so decode resumes bit-exactly
+        WITHOUT re-prefill.  A snapshot that died with its library
+        (spill / eviction) aborts the ship — the decode admission falls
+        back to a fresh prefill and nothing is metered as moved."""
+        req, w = a.request, a.worker
+        key = req.recipe_key
+        plane = self.sched.plane
+        src_w = self.sched.workers.get(a.kv_ship.src_worker)
+        src_lib = src_w.libraries.get(key) if src_w is not None else None
+        src_dec = (src_lib.context.payloads.get("_stream_decoder")
+                   if src_lib is not None and src_lib.context is not None
+                   else None)
+        snap = (src_dec.export_suspended(req.request_id)
+                if src_dec is not None else None)
+        if snap is None:
+            plane.kv_ship_aborted(req.request_id, self.now())
+            return
+        t0 = self.now()
+        lib = w.library_for(self.sched.registry.recipes[key])
+        if lib.context is None:
+            lib.materialize()
+        lib.context.payloads.setdefault("_kv_inbox", {})[
+            req.request_id] = snap
+        req.ship_s += self.now() - t0
+        plane.kv_ship_completed(req.request_id,
+                                moved_bytes=_kv_nbytes(snap.get("kv")))
 
     def _suspend_victim(self, a: Assignment) -> None:
         """Spill the preempted member's KV host-side through the stream

@@ -115,10 +115,10 @@ def make_sim(devices: Optional[List[DeviceModel]] = None,
              backfill: bool = True, aging_bound=8,
              warm_pool: Optional[WarmPoolPolicy] = None,
              link_budget: Optional[LinkBudget] = None,
-             prestage: bool = False):
+             prestage: bool = False, disaggregate: bool = False):
     """Returns (scheduler, executor, factory) wired together."""
     sched = Scheduler(backfill=backfill, aging_bound=aging_bound,
-                      link_budget=link_budget)
+                      link_budget=link_budget, disaggregate=disaggregate)
     ex = SimExecutor(sched, prestage=prestage, warm_pool=warm_pool)
     devices = devices if devices is not None else paper_20gpu_pool()
     fac = Factory(sched, ex, devices, workers_per_zone=workers_per_zone,

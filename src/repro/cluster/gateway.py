@@ -173,6 +173,15 @@ class Gateway:
         self._refill(req.recipe_key, req.slo)
 
     # -- deadline semantics ----------------------------------------------
+    @staticmethod
+    def _expirable(r: Request) -> bool:
+        """Only requests whose service has NOT begun can time out at the
+        edge.  A request with banked progress (a DECODE-phase requeue
+        carrying its prefill KV, or a preempted member awaiting resume)
+        is mid-service: dropping it would waste the work already done
+        and strand its snapshot — it keeps its queue slot instead."""
+        return r.deadline_s is not None and r.steps_done == 0
+
     def expire(self, now: float) -> List[Request]:
         """Time out every QUEUED request whose deadline has passed —
         lane and overflow alike — so nothing is ever served late.
@@ -180,13 +189,13 @@ class Gateway:
         expired: List[Request] = []
         for key, lane in self.sched.lanes.items():
             dead = [r for r in lane
-                    if r.deadline_s is not None and r.deadline_s < now]
+                    if self._expirable(r) and r.deadline_s < now]
             for r in dead:
                 lane.remove(r)
                 expired.append(r)
         for (key, slo), q in list(self._overflow.items()):
             dead = [r for r in q
-                    if r.deadline_s is not None and r.deadline_s < now]
+                    if self._expirable(r) and r.deadline_s < now]
             for r in dead:
                 q.remove(r)
                 expired.append(r)
@@ -200,11 +209,13 @@ class Gateway:
         return expired
 
     def next_deadline(self) -> Optional[float]:
-        """Earliest deadline among queued (lane or overflow) requests."""
+        """Earliest deadline among queued EXPIRABLE requests (lane or
+        overflow) — the same set :meth:`expire` can act on, so a
+        deadline timer armed on this value always makes progress."""
         ds = [r.deadline_s for lane in self.sched.lanes.values()
-              for r in lane if r.deadline_s is not None]
+              for r in lane if self._expirable(r)]
         ds += [r.deadline_s for q in self._overflow.values()
-               for r in q if r.deadline_s is not None]
+               for r in q if self._expirable(r)]
         return min(ds) if ds else None
 
     # -- observability ----------------------------------------------------

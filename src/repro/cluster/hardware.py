@@ -45,6 +45,18 @@ REF_ACTIVE_PARAMS = 1.71e9          # SmolLM2-1.7B (the calibration anchor)
 # (benchmarks/bench_live_decode.py).
 DECODE_FIXED_FRAC = 0.75
 
+# Prefill is the OTHER phase: a long prompt is one big matmul, so its cost
+# is bounded by the device's matrix-engine FLOPs, not its memory system.
+# The two phases rank devices very differently — an H100 decodes ~8x
+# faster than a TITAN X (Pascal) but prefills ~90x faster — and that
+# spread is exactly what prefill/decode disaggregation harvests on a
+# heterogeneous pool (arXiv 2504.15303).  One "prompt unit" is the anchor
+# workload's prompt chunk (~256 tokens); a causal-LM forward costs
+# ~2 * active_params FLOPs per token, discounted by an achievable
+# utilisation (MFU) typical of un-tuned prefill kernels.
+PREFILL_TOKENS_PER_UNIT = 256
+PREFILL_MFU = 0.4
+
 
 @dataclass(frozen=True)
 class DeviceModel:
@@ -56,6 +68,7 @@ class DeviceModel:
     disk_bw: float                  # local SSD read, bytes/s
     h2d_bw: float                   # host->device, bytes/s
     compile_base_s: float = 0.0     # jit/compile cost (TPU analogue)
+    tflops: float = 0.0             # matmul TFLOPs (prefill-relevant path)
 
     def infer_time(self, active_params: float) -> float:
         return self.infer_s * (active_params / REF_ACTIVE_PARAMS)
@@ -66,28 +79,56 @@ class DeviceModel:
         return self.infer_time(active_params) * (
             DECODE_FIXED_FRAC + (1.0 - DECODE_FIXED_FRAC) * b)
 
+    def prefill_time(self, active_params: float, units: int = 1) -> float:
+        """FLOP-bound seconds to prefill ``units`` prompt units.
+
+        Devices without a catalogued ``tflops`` fall back to the balanced
+        assumption the pre-disaggregation model made — one prompt unit
+        costs one batch-1 inference — so legacy catalogs keep their
+        calibrated totals."""
+        u = max(int(units), 1)
+        if self.tflops <= 0:
+            return u * self.infer_time(active_params)
+        flops = 2.0 * active_params * PREFILL_TOKENS_PER_UNIT
+        return u * flops / (self.tflops * 1e12 * PREFILL_MFU)
+
     def compile_s(self, recipe) -> float:
         return self.compile_base_s
 
 
 # --- Table 1: the 8 major GPU models (75 % of the 567-GPU cluster) --------
+# ``tflops`` is the half-precision matrix-engine throughput (tensor cores
+# where the architecture has them, FP32 shader throughput for Pascal/
+# Maxwell which do not) — the prefill-relevant axis.  Note the spread:
+# decode speed (1/infer_s) varies ~10x across the pool while matmul
+# throughput varies ~150x.
 GPU_CATALOG: Dict[str, DeviceModel] = {m.name: m for m in [
-    DeviceModel("NVIDIA Quadro RTX 6000", 2018, 106, 0.34, 24, 450e6, 6e9),
-    DeviceModel("NVIDIA A10", 2021, 78, 0.27, 24, 500e6, 8e9),
-    DeviceModel("NVIDIA TITAN X (Pascal)", 2016, 69, 0.675, 12, 300e6, 4e9),
-    DeviceModel("NVIDIA GeForce GTX 1080 Ti", 2017, 63, 0.60, 11, 300e6, 4e9),
-    DeviceModel("NVIDIA RTX 6000 Ada Generation", 2022, 36, 0.16, 48, 900e6, 12e9),
-    DeviceModel("NVIDIA GeForce GTX TITAN X", 2015, 34, 0.85, 12, 250e6, 3e9),
-    DeviceModel("NVIDIA A40", 2020, 26, 0.22, 48, 700e6, 8e9),
-    DeviceModel("NVIDIA H100 80GB HBM3", 2023, 15, 0.08, 80, 2e9, 26e9),
+    DeviceModel("NVIDIA Quadro RTX 6000", 2018, 106, 0.34, 24, 450e6, 6e9,
+                tflops=65.0),
+    DeviceModel("NVIDIA A10", 2021, 78, 0.27, 24, 500e6, 8e9, tflops=125.0),
+    DeviceModel("NVIDIA TITAN X (Pascal)", 2016, 69, 0.675, 12, 300e6, 4e9,
+                tflops=11.0),
+    DeviceModel("NVIDIA GeForce GTX 1080 Ti", 2017, 63, 0.60, 11, 300e6, 4e9,
+                tflops=11.3),
+    DeviceModel("NVIDIA RTX 6000 Ada Generation", 2022, 36, 0.16, 48, 900e6,
+                12e9, tflops=360.0),
+    DeviceModel("NVIDIA GeForce GTX TITAN X", 2015, 34, 0.85, 12, 250e6, 3e9,
+                tflops=6.6),
+    DeviceModel("NVIDIA A40", 2020, 26, 0.22, 48, 700e6, 8e9, tflops=150.0),
+    DeviceModel("NVIDIA H100 80GB HBM3", 2023, 15, 0.08, 80, 2e9, 26e9,
+                tflops=990.0),
 ]}
 
 # --- TPU analogues (fleet mode; compile cost is first-class context) ------
 TPU_CATALOG: Dict[str, DeviceModel] = {m.name: m for m in [
-    DeviceModel("TPU v4", 2021, 64, 0.24, 32, 800e6, 12e9, compile_base_s=45),
-    DeviceModel("TPU v5e", 2023, 256, 0.30, 16, 800e6, 12e9, compile_base_s=35),
-    DeviceModel("TPU v5p", 2023, 64, 0.12, 95, 1.2e9, 20e9, compile_base_s=50),
-    DeviceModel("TPU v6e", 2024, 128, 0.10, 32, 1.2e9, 20e9, compile_base_s=40),
+    DeviceModel("TPU v4", 2021, 64, 0.24, 32, 800e6, 12e9, compile_base_s=45,
+                tflops=275.0),
+    DeviceModel("TPU v5e", 2023, 256, 0.30, 16, 800e6, 12e9,
+                compile_base_s=35, tflops=197.0),
+    DeviceModel("TPU v5p", 2023, 64, 0.12, 95, 1.2e9, 20e9, compile_base_s=50,
+                tflops=459.0),
+    DeviceModel("TPU v6e", 2024, 128, 0.10, 32, 1.2e9, 20e9,
+                compile_base_s=40, tflops=918.0),
 ]}
 
 
@@ -155,6 +196,25 @@ def cluster_sample(n: int, seed: int = 0,
 
 
 def pool_rate(devices: List[DeviceModel],
-              active_params: float = REF_ACTIVE_PARAMS) -> float:
-    """Aggregate inferences/s of a pool (work-stealing steady state)."""
-    return sum(1.0 / d.infer_time(active_params) for d in devices)
+              active_params: float = REF_ACTIVE_PARAMS,
+              phase: Optional[str] = None) -> float:
+    """Aggregate units/s of a pool (work-stealing steady state).
+
+    ``phase`` selects the capacity axis.  ``None`` keeps the legacy
+    whole-request model (one colocated inference per device at a time).
+    Under disaggregation a worker runs the two phases on DIFFERENT
+    engines — prefill occupies the matrix units while decode streams
+    weights through HBM — so a worker busy prefilling still contributes
+    its decode capacity to the pool and vice versa; phase-specific
+    estimates therefore count every device, not just the "free" ones:
+
+    * ``"prefill"``: prompt units/s, FLOP-bound (``prefill_time``);
+    * ``"decode"``: batch-1 decode steps/s, HBM-bound (``step_time``).
+    """
+    if phase is None:
+        return sum(1.0 / d.infer_time(active_params) for d in devices)
+    if phase == "prefill":
+        return sum(1.0 / d.prefill_time(active_params, 1) for d in devices)
+    if phase == "decode":
+        return sum(1.0 / d.step_time(active_params, 1) for d in devices)
+    raise ValueError(f"unknown phase {phase!r}")

@@ -76,6 +76,16 @@ def latency_summary(records: Sequence[RequestRecord]) -> Dict[str, float]:
         "ttfs": [r.ttfs_s for r in served],
         "e2e": [r.t_end - r.t_arrival for r in served],
     }
+    # per-phase breakdown (disaggregated runs): a TTFS regression is
+    # attributable to its phase only if the phases are reported apart.
+    # Keys appear only when some served request actually phase-split.
+    phased = [r for r in served if getattr(r, "prefill_s", 0.0) > 0]
+    if phased:
+        series["prefill"] = [r.prefill_s for r in phased]
+        series["ship"] = [r.ship_s for r in phased]
+        series["decode"] = [r.decode_s for r in phased]
+        out["n_phased"] = float(len(phased))
+        out["n_shipped"] = float(sum(1 for r in phased if r.ship_s > 0))
     for name, xs in series.items():
         out[f"{name}_p50_s"] = percentile(xs, 50)
         out[f"{name}_p95_s"] = percentile(xs, 95)
@@ -104,13 +114,23 @@ def format_latency(summary: Dict[str, float], label: str = "") -> str:
                   f"rej {summary['n_rejected']:.0f} "
                   f"t/o {summary['n_timed_out']:.0f} "
                   f"pre {summary['n_preempted']:.0f}")
+    phases = ""
+    if "prefill_p50_s" in summary:
+        phases = (f"\n  [phases] n={summary['n_phased']:.0f} "
+                  f"({summary['n_shipped']:.0f} shipped)  "
+                  f"prefill p50 {summary['prefill_p50_s']:.2f}s "
+                  f"p95 {summary['prefill_p95_s']:.2f}s | "
+                  f"ship p50 {summary['ship_p50_s']*1e3:.1f}ms "
+                  f"p95 {summary['ship_p95_s']*1e3:.1f}ms | "
+                  f"decode p50 {summary['decode_p50_s']:.2f}s "
+                  f"p95 {summary['decode_p95_s']:.2f}s")
     return (f"[latency{' ' + label if label else ''}] n={summary['n']:.0f}  "
             f"queue p50 {summary['queue_wait_p50_s']:.2f}s "
             f"p95 {summary['queue_wait_p95_s']:.2f}s | "
             f"ttfs p50 {summary['ttfs_p50_s']:.2f}s "
             f"p95 {summary['ttfs_p95_s']:.2f}s | "
             f"e2e p50 {summary['e2e_p50_s']:.2f}s "
-            f"p95 {summary['e2e_p95_s']:.2f}s" + extras)
+            f"p95 {summary['e2e_p95_s']:.2f}s" + extras + phases)
 
 
 def format_class_latency(summaries: Dict[str, Dict[str, float]]) -> str:
@@ -126,10 +146,14 @@ def zone_byte_summary(plane) -> Dict[str, Dict[str, float]]:
     planned = plane.planned.as_dict()
     moved = plane.moved.as_dict()
     empty = {f: 0 for f in METER_FIELDS}
-    for zone in sorted(set(planned) | set(moved)):
+    shipped = getattr(plane, "kv_shipped", {}) or {}
+    for zone in sorted(set(planned) | set(moved) | set(shipped)):
         row = dict(empty, **moved.get(zone, {}))
         row["planned_minus_moved"] = sum(
             planned.get(zone, {}).get(f, 0) - row[f] for f in empty)
+        # phase-attributable slice of the link bytes above: KV handoffs
+        # that LANDED in this zone (already included in in_local/in_cross)
+        row["kv_shipped"] = shipped.get(zone, 0)
         out[zone] = row
     return out
 
@@ -157,6 +181,10 @@ def format_zone_bytes(plane, label: str = "") -> str:
             f"({kv['spill_events']} spill(s)) | resumed "
             f"{kv['resumed_bytes']/gb:.2f} GB ({kv['resume_events']} "
             f"resume(s))")
+    if kv and kv.get("ship_events"):
+        lines.append(
+            f"  kv disaggregation: shipped {kv['shipped_bytes']/gb:.2f} GB "
+            f"({kv['ship_events']} handoff(s))")
     return "\n".join(lines)
 
 

@@ -64,7 +64,7 @@ from typing import Any, Callable, Deque, Dict, List, Optional, Tuple, Union
 
 from ..core import (AGING_BOUND_DEFAULT, Acquire, ClusterView, ContextPlane,
                     ContextRecipe, ContextMode, LinkBudget, PERVASIVE,
-                    PlacementPlan, OpKind, derive_aging_bound)
+                    PlacementPlan, PlanOp, OpKind, derive_aging_bound)
 from .hardware import ClusterSpec, PAPER_CLUSTER, REF_ACTIVE_PARAMS
 from .worker import Worker
 
@@ -73,6 +73,12 @@ _request_ids = itertools.count()
 # time constant of the per-recipe arrival-rate EWMA the warm-pool policy
 # reads (ClusterView.arrival_rate); ~the horizon of a staging decision
 ARRIVAL_EWMA_TAU_S = 30.0
+
+# disaggregation phase tags (see docs/disaggregation.md).  ``None`` on
+# Request.phase means colocated legacy execution — prefill and decode
+# priced and placed together, exactly the pre-disaggregation behaviour.
+PREFILL = "prefill"
+DECODE = "decode"
 
 
 @dataclass
@@ -105,6 +111,13 @@ class Request:
     preemptions: int = 0              # times a batch slot was taken from us
     suspended: bool = False           # KV snapshot parked, awaiting resume
     suspended_on: Optional[str] = None  # worker holding the snapshot
+    # -- prefill/decode disaggregation (see docs/disaggregation.md) ----
+    phase: Optional[str] = None       # None = colocated; PREFILL | DECODE
+    prefill_worker: Optional[str] = None  # worker holding the prefill KV
+    kv_nbytes: int = 0                # KV snapshot size (priced/measured)
+    prefill_s: float = 0.0            # accumulated PREFILL phase seconds
+    ship_s: float = 0.0               # accumulated KV handoff seconds
+    cold_started: bool = False        # any phase paid a cold start
 
     @property
     def n_units(self) -> int:
@@ -159,6 +172,9 @@ class Assignment:
     # dispatch RESUMES a previously suspended request from its snapshot
     preempt: Optional[Request] = None
     resumed: bool = False
+    # disaggregation: the committed KV_SHIP op moving the prefill KV to
+    # this worker (None = same-worker fast path or colocated request)
+    kv_ship: Optional[PlanOp] = None
 
     @property
     def task(self) -> Request:        # deprecated alias
@@ -189,10 +205,20 @@ class RequestRecord:
     outcome: str = "done"             # "done" | "rejected" | "timed_out"
     slo: str = "batch"                # SLO class the request carried
     preemptions: int = 0              # slot preemptions suffered en route
+    # -- per-phase latency breakdown (disaggregated requests) ----------
+    prefill_s: float = 0.0            # PREFILL phase on-worker seconds
+    ship_s: float = 0.0               # KV handoff (SHIPPING) seconds
 
     @property
     def exec_s(self) -> float:        # on-worker time (incl. staging)
         return self.t_end - self.t_start
+
+    @property
+    def decode_s(self) -> float:
+        """DECODE phase seconds: the final dispatch's on-worker time
+        minus the KV handoff it waited on.  Colocated requests report
+        their whole ``exec_s`` here (prefill_s/ship_s are zero)."""
+        return max(0.0, self.exec_s - self.ship_s)
 
     @property
     def queue_wait_s(self) -> float:
@@ -220,9 +246,14 @@ class Scheduler:
     def __init__(self, cluster: ClusterSpec = PAPER_CLUSTER, *,
                  backfill: bool = True,
                  aging_bound: Union[int, str] = AGING_BOUND_DEFAULT,
-                 link_budget: Optional[LinkBudget] = None):
+                 link_budget: Optional[LinkBudget] = None,
+                 disaggregate: bool = False):
         self.cluster = cluster
         self.backfill = backfill
+        # phase-split execution: requests with both prompt and decode
+        # work run PREFILL and DECODE as separately routed phases, the
+        # KV handoff travelling as a KV_SHIP context-plane op
+        self.disaggregate = disaggregate
         if aging_bound != "auto" and not isinstance(aging_bound, int):
             raise ValueError(f"aging_bound must be an int or 'auto', "
                              f"got {aging_bound!r}")
@@ -250,6 +281,9 @@ class Scheduler:
         self.spilled_libraries = 0
         self.submitted = 0
         self.preemptions = 0          # batch slots taken for interactive
+        self.kv_ships = 0             # KV handoffs committed to the plane
+        self.local_decodes = 0        # same-worker fast-path decodes
+        self.prefills_done = 0        # PREFILL phases completed
         # the serving gateway installs itself here (repro.cluster.gateway);
         # ingress() then routes submissions through its admission edge
         self.gateway = None
@@ -259,6 +293,10 @@ class Scheduler:
         self._service: Dict[str, List[float]] = {}
         # per-recipe arrival EWMA: [last_arrival_s, rate_per_s]
         self._arrivals: Dict[str, List[float]] = {}
+        # per-recipe PREEMPTION EWMA, same shape: spill storms are a
+        # demand signal the arrival rate cannot see — the warm-pool
+        # policy reads it via ClusterView.preempt_rate
+        self._preempts: Dict[str, List[float]] = {}
 
     # ------------------------------------------------------------------
     # registration / submission
@@ -276,17 +314,23 @@ class Scheduler:
         return ClusterView(
             workers=self.workers, registry=self.registry, demand=demand,
             arrival_rate={k: st[1] for k, st in self._arrivals.items()},
+            preempt_rate={k: st[1] for k, st in self._preempts.items()},
             now=self.clock() if now is None else now)
 
-    def _note_arrival(self, key: str, t: float) -> None:
-        st = self._arrivals.get(key)
+    @staticmethod
+    def _note_event(table: Dict[str, List[float]], key: str,
+                    t: float) -> None:
+        st = table.get(key)
         if st is None:
-            self._arrivals[key] = [t, 0.0]
+            table[key] = [t, 0.0]
             return
         dt = max(t - st[0], 1e-3)       # bursts at one instant: floor dt
         alpha = 1.0 - math.exp(-dt / ARRIVAL_EWMA_TAU_S)
         st[1] += alpha * (1.0 / dt - st[1])
         st[0] = t
+
+    def _note_arrival(self, key: str, t: float) -> None:
+        self._note_event(self._arrivals, key, t)
 
     def ingress(self, request: Request) -> Request:
         """The front door: route through the serving gateway when one is
@@ -318,6 +362,12 @@ class Scheduler:
                 "continuous batching requires a state-resident context "
                 f"mode, got {request.mode.name!r}; submit partial/naive "
                 "work as exclusive=True run-to-completion requests")
+        if (self.disaggregate and request.phase is None
+                and request.prompt_units > 0 and request.decode_steps > 0
+                and request.mode.state_resident):
+            # phase-split candidate: prefill routes first, decode follows
+            # once the KV exists (same worker or shipped)
+            request.phase = PREFILL
         lane = self.lanes.setdefault(request.recipe_key, deque())
         if request.slo == "interactive":
             lane.insert(self._interactive_block_end(lane), request)
@@ -421,6 +471,12 @@ class Scheduler:
                                         else req.steps_done)
             req.steps_done = 0        # decode state died with the worker
             req.t_first_step = None
+            if req.phase == DECODE:
+                # the shipped/local KV died with the worker: back to the
+                # PREFILL phase from scratch
+                req.phase = PREFILL
+                req.prefill_worker = None
+                req.kv_nbytes = 0
             self._requeue(req)        # retry first (paper: requeue)
         return victims[::-1]
 
@@ -479,17 +535,29 @@ class Scheduler:
         if self.gateway is not None:
             self.gateway.expire(now)
         # a suspended request whose snapshot died (worker evicted, or the
-        # library spilled — payloads cleared) restarts from scratch
+        # library spilled — payloads cleared) restarts from scratch; a
+        # decode-phase request whose prefill KV holder died re-prefills
         for lane in self.lanes.values():
             for r in lane:
-                if not r.suspended:
-                    continue
-                w = self.workers.get(r.suspended_on)
-                if w is None or not w.has_ready(r.recipe_key):
-                    r.suspended = False
-                    r.suspended_on = None
-                    r.steps_done = 0
-                    r.t_first_step = None
+                if r.suspended:
+                    w = self.workers.get(r.suspended_on)
+                    if w is None or not w.has_ready(r.recipe_key):
+                        r.suspended = False
+                        r.suspended_on = None
+                        r.steps_done = 0
+                        r.t_first_step = None
+                        if r.phase == DECODE:
+                            r.phase = PREFILL
+                            r.prefill_worker = None
+                            r.kv_nbytes = 0
+                elif r.phase == DECODE:
+                    w = self.workers.get(r.prefill_worker)
+                    if w is None or not w.has_ready(r.recipe_key):
+                        r.phase = PREFILL
+                        r.prefill_worker = None
+                        r.kv_nbytes = 0
+                        r.steps_done = 0
+                        r.t_first_step = None
         heads = self._heads()
         if not heads:
             return None
@@ -522,6 +590,29 @@ class Scheduler:
                 # affinity: the KV snapshot lives on suspended_on — only
                 # a placement there resumes without re-prefill
                 warm = [w for w in warm if w.worker_id == req.suspended_on]
+            if req.phase == PREFILL:
+                # prefill is FLOP-bound: route to the compute-richest
+                # warm worker (the cold pass below may still stage one)
+                if warm:
+                    w = min(warm, key=lambda w: w.device.prefill_time(
+                        req.active_params, 1))
+                    return self._dispatch(req, w, warm=True)
+                continue
+            if req.phase == DECODE and not req.suspended:
+                a = self._route_decode(req, idle, allowed, foundable, now)
+                if a is not None:
+                    return a
+                # no decode slot anywhere: the interactive preemption
+                # path below still applies to a decode-phase head
+                if (self.gateway is not None and req.slo == "interactive"
+                        and req.deadline_s is not None):
+                    pol = self.gateway.policies.get("interactive")
+                    if pol is not None and \
+                            req.deadline_s - now <= pol.preempt_slack_s:
+                        a = self._try_preempt(req)
+                        if a is not None:
+                            return a
+                continue
             if warm:
                 # fastest warm device first (work stealing does the rest)
                 w = min(warm, key=lambda w: w.device.infer_s)
@@ -566,6 +657,8 @@ class Scheduler:
         for req in heads:
             if req.suspended:
                 continue              # wait for the affinity slot instead
+            if req.phase == DECODE:
+                continue              # decode only lands on warm workers
             recipe = self.registry.recipes[req.recipe_key]
             cands = [w for w in idle
                      if w.can_host(recipe) and foundable(req, w)
@@ -574,10 +667,98 @@ class Scheduler:
                 continue
             spilled = self.registry.spilled_workers(req.recipe_key)
             # prefer promotion from a local spilled copy, then fastest
-            w = min(cands, key=lambda w: (w.worker_id not in spilled,
-                                          w.device.infer_s))
+            # on the axis the request's phase is bound by
+            if req.phase == PREFILL:
+                w = min(cands, key=lambda w: (
+                    w.worker_id not in spilled,
+                    w.device.prefill_time(req.active_params, 1)))
+            else:
+                w = min(cands, key=lambda w: (w.worker_id not in spilled,
+                                              w.device.infer_s))
             return self._dispatch(req, w, warm=False)
         return None
+
+    # ------------------------------------------------------------------
+    # disaggregation: decode placement with the ship-vs-local decision
+    # ------------------------------------------------------------------
+    def _ship_cost_s(self, req: Request, w: Worker) -> float:
+        """Seconds the KV handoff to ``w`` would take over the peer link
+        class connecting it to the prefill worker (0 for the same-worker
+        fast path)."""
+        src = self.workers.get(req.prefill_worker)
+        if src is None or src.worker_id == w.worker_id \
+                or req.kv_nbytes <= 0:
+            return 0.0
+        bw = (self.cluster.peer_bw_local if src.zone == w.zone
+              else self.cluster.peer_bw_cross)
+        return req.kv_nbytes / bw
+
+    def _ship_op_for(self, req: Request, w: Worker) -> Optional[PlanOp]:
+        """The KV_SHIP plan op moving ``req``'s prefill KV to ``w``, or
+        None when no ship is needed (same worker, resumed snapshot)."""
+        if req.phase != DECODE or req.suspended:
+            return None
+        src = self.workers.get(req.prefill_worker)
+        if src is None or src.worker_id == w.worker_id:
+            return None
+        return self.plane.kv_ship_op(
+            req.recipe_key, src.worker_id, w.worker_id, req.kv_nbytes,
+            src_zone=src.zone, dst_zone=w.zone)
+
+    def _route_decode(self, req: Request, idle: List[Worker], allowed,
+                      foundable, now: float) -> Optional[Assignment]:
+        """Place a DECODE-phase request on a memory-side slot.
+
+        Candidates are open dynamic batches with free slots (join — no
+        idle worker needed) and warm idle workers (found a new stream;
+        exclusive decode occupies the worker instead).  Each candidate is
+        scored by the plane's cost model: estimated remaining decode time
+        at the batch size it would see, PLUS the KV handoff seconds over
+        the peer link from the prefill worker — the same-worker fast path
+        scores a zero ship and wins whenever shipping would lose.  A ship
+        the LinkBudget window cannot absorb is deferred to the local fast
+        path when one exists; when decoding locally is impossible the
+        ship is demand-critical and committed anyway (charged like a
+        demand Acquire, never dropped)."""
+        key, ap = req.recipe_key, req.active_params
+        cands: List[Tuple[Worker, bool]] = []
+        if not req.exclusive:
+            for w in self.workers.values():
+                if w.stream_slots_free(key, ap) > 0 and allowed(req, w):
+                    cands.append((w, True))
+        ready = self.registry.ready_workers(key)
+        for w in idle:
+            if w.worker_id in ready and w.has_ready(key) \
+                    and foundable(req, w) and allowed(req, w):
+                cands.append((w, False))
+        if not cands:
+            return None
+
+        def score(cand: Tuple[Worker, bool]) -> Tuple[float, float]:
+            w, join = cand
+            batch = 1
+            if join:
+                lib = w.libraries.get(key)
+                batch = (len(lib.batch) if lib is not None else 0) + 1
+            est = req.decode_steps * w.device.step_time(ap, batch)
+            ship = self._ship_cost_s(req, w)
+            return (ship + est, ship)   # tie: prefer the local fast path
+
+        w, join = min(cands, key=score)
+        ship_op = self._ship_op_for(req, w)
+        if ship_op is not None and \
+                not self.plane.ship_admits(ship_op, now):
+            local = [c for c in cands
+                     if c[0].worker_id == req.prefill_worker]
+            if local:
+                # budget window full: defer to the same-worker fast path
+                w, join = min(local, key=score)
+                ship_op = None
+            # else: demand-critical ship — committed despite the window
+        if ship_op is None and w.worker_id == req.prefill_worker:
+            self.local_decodes += 1
+        return self._dispatch(req, w, warm=True, join=join,
+                              kv_ship=ship_op)
 
     def _try_preempt(self, req: Request) -> Optional[Assignment]:
         """Pick and suspend a batch victim so ``req`` can take its slot.
@@ -608,7 +789,8 @@ class Scheduler:
             return None
         _, _, victim, w, lib = best
         self._preempt(victim, w, lib)
-        return self._dispatch(req, w, warm=True, join=True, preempt=victim)
+        return self._dispatch(req, w, warm=True, join=True, preempt=victim,
+                              kv_ship=self._ship_op_for(req, w))
 
     def _preempt(self, victim: Request, w: Worker, lib) -> None:
         """Suspend ``victim`` out of its dynamic batch: it keeps its
@@ -625,11 +807,13 @@ class Scheduler:
         victim.suspended_on = w.worker_id
         victim.preemptions += 1
         self.preemptions += 1
+        self._note_event(self._preempts, victim.recipe_key, self.clock())
         self._requeue(victim)
 
     def _dispatch(self, req: Request, w: Worker, *, warm: bool,
                   join: bool = False,
-                  preempt: Optional[Request] = None) -> Assignment:
+                  preempt: Optional[Request] = None,
+                  kv_ship: Optional[PlanOp] = None) -> Assignment:
         lane = self.lanes[req.recipe_key]
         assert lane and lane[0] is req
         lane.popleft()
@@ -653,10 +837,13 @@ class Scheduler:
         if join:
             self.admissions += 1
             return Assignment(req, w, warm=True, peer_source=None,
-                              join=True, preempt=preempt, resumed=resumed)
+                              join=True, preempt=preempt, resumed=resumed,
+                              kv_ship=kv_ship)
         if warm:
             return Assignment(req, w, warm=True, peer_source=None,
-                              resumed=resumed)
+                              resumed=resumed, kv_ship=kv_ship)
+        if req.phase is not None:
+            req.cold_started = True     # this request paid a cold start
         if not req.mode.deps_cached and not req.mode.weights_cached:
             # naive mode manages no context: nothing for the plane to plan
             return Assignment(req, w, warm=False, peer_source=None)
@@ -691,6 +878,13 @@ class Scheduler:
         key = req.recipe_key
         w.running_by_recipe[key] = w.running_by_recipe.get(key, 0) + 1
         w.touch(key)
+        if assignment.kv_ship is not None:
+            # the KV handoff is committed with the dispatch: budget and
+            # planned meters charged, op in flight until the executor
+            # reports it landed (kv_ship_completed) or dead (aborted)
+            self.kv_ships += 1
+            self.plane.commit_kv_ship(req.request_id, assignment.kv_ship,
+                                      now=assignment.t_dispatch)
         if assignment.join:
             # admission into the live batch; no staging, no new slot
             lib = w.libraries[key]
@@ -698,8 +892,10 @@ class Scheduler:
             return
         w.running += 1
         recipe = self.registry.recipes[key]
-        if not req.exclusive:
+        if not req.exclusive and req.phase != PREFILL:
             # founding member of a new stream batch on this worker
+            # (a PREFILL dispatch occupies the worker like an exclusive
+            # task — its product is the KV snapshot, not a stream)
             lib = w.library_for(recipe)
             lib.admit(req, w.slot_budget(key, req.active_params))
             w.open_streams.add(key)
@@ -729,6 +925,47 @@ class Scheduler:
             self.plane.note_ready(assignment.request.recipe_key,
                                   w.worker_id)
 
+    def on_prefill_done(self, assignment: Assignment, t_start: float,
+                        t_end: float, kv_nbytes: int) -> None:
+        """The PREFILL phase finished: bank the phase latency, park the
+        KV snapshot with the worker, flip the request to DECODE and
+        requeue it at the front of its class (mid-flight work must not
+        wait behind fresh arrivals).  NOT terminal — the request
+        completes through :meth:`on_complete` after its decode phase."""
+        req, w = assignment.request, assignment.worker
+        cur = self.running.get(req.request_id)
+        if cur is None or cur[1] != w.worker_id:
+            return                    # stale: worker evicted mid-prefill
+        del self.running[req.request_id]
+        key = req.recipe_key
+        n = w.running_by_recipe.get(key, 0)
+        w.running_by_recipe[key] = max(0, n - 1)
+        w.running -= 1
+        req.prefill_s += t_end - t_start
+        req.steps_done = req.prompt_units   # prompt units are banked in
+        req.phase = DECODE                  # the KV; only decode remains
+        req.prefill_worker = w.worker_id
+        req.kv_nbytes = int(kv_nbytes)
+        self.prefills_done += 1
+        self._requeue(req)
+
+    def abort_prefill(self, assignment: Assignment) -> None:
+        """The executor found no phase-capable backend for a PREFILL
+        dispatch (e.g. a live recipe whose step function cannot prefill
+        without stepping): undo the dispatch and requeue the request for
+        COLOCATED execution — the phase tag is cleared so it routes like
+        a pre-disaggregation request from here on."""
+        req, w = assignment.request, assignment.worker
+        cur = self.running.get(req.request_id)
+        if cur is None or cur[1] != w.worker_id:
+            return
+        del self.running[req.request_id]
+        n = w.running_by_recipe.get(req.recipe_key, 0)
+        w.running_by_recipe[req.recipe_key] = max(0, n - 1)
+        w.running -= 1
+        req.phase = None
+        self._requeue(req)
+
     def on_complete(self, assignment: Assignment, t_start: float,
                     t_end: float,
                     t_first_step: Optional[float] = None) -> None:
@@ -750,8 +987,15 @@ class Scheduler:
         self.completed_inferences += req.n_units
         self.progress_events.append((t_end, self.completed_inferences))
         st = self._service.setdefault(key, [0.0, 0, 0.0, 0])
-        i = 0 if assignment.warm else 2
-        st[i] += t_end - t_start
+        # phase-split requests experienced BOTH phases: the service time
+        # feeding the aging bound covers the whole request (prefill on
+        # its worker + handoff + decode here), and the warm/cold label
+        # follows whether ANY phase paid a cold start — otherwise the
+        # derived bound would treat every disaggregated request as a
+        # cheap warm decode and starve cold placements of their weight
+        warm_eff = assignment.warm and not req.cold_started
+        i = 0 if warm_eff else 2
+        st[i] += (t_end - t_start) + req.prefill_s
         st[i + 1] += 1
         if t_first_step is None:
             t_first_step = req.t_first_step
@@ -759,9 +1003,10 @@ class Scheduler:
         self.records.append(RequestRecord(
             req.request_id, w.worker_id, w.device.name, req.arrival_s,
             t_start, t_end if t_first_step is None else t_first_step,
-            t_end, req.n_units, assignment.warm, req.attempts,
+            t_end, req.n_units, warm_eff, req.attempts,
             req.exclusive, assignment.join, req.truncated,
-            outcome="done", slo=req.slo, preemptions=req.preemptions))
+            outcome="done", slo=req.slo, preemptions=req.preemptions,
+            prefill_s=req.prefill_s, ship_s=req.ship_s))
 
     def close_stream(self, worker_id: str, recipe_key: str) -> None:
         """The dynamic batch for ``recipe_key`` on ``worker_id`` emptied;

@@ -89,9 +89,18 @@ class OpKind(str, Enum):
     PROMOTE = "promote"        # local disk -> host/device (no network)
     SPILL = "spill"            # co-resident library demoted to local disk
     EVICT = "evict"            # residency record dropped (spilled copy)
+    KV_SHIP = "kv_ship"        # prefill KV snapshot -> decode worker
 
 
 ACQUIRE_KINDS = (OpKind.FETCH, OpKind.PEER_COPY, OpKind.PROMOTE)
+
+# op kinds that move bytes over the peer links (NIC in-zone, DCN cross-
+# zone) and therefore ride the zone meters and the LinkBudget window.
+# KV_SHIP is the disaggregation handoff: unlike PEER_COPY it moves
+# REQUEST state (a KV snapshot), not a recipe residency, so it never
+# touches the registry — but its bytes are priced and admission-checked
+# exactly like replication traffic.
+PEER_LINK_KINDS = (OpKind.PEER_COPY, OpKind.KV_SHIP)
 
 
 @dataclass
@@ -176,11 +185,15 @@ class ZoneMeters:
         return sum(z[f] for z in self.data.values() for f in flds)
 
     def as_dict(self) -> Dict[str, Dict[str, int]]:
-        return {zone: dict(flds) for zone, flds in sorted(self.data.items())}
+        """All-zero rows are pruned: a zone whose only op was committed
+        and then refunded (an aborted KV ship) nets to nothing and must
+        compare equal to a meter that never saw the zone at all."""
+        return {zone: dict(flds) for zone, flds in sorted(self.data.items())
+                if any(flds.values())}
 
     def charge_op(self, op: PlanOp, sign: int = 1) -> None:
         n = sign * op.nbytes
-        if op.nbytes <= 0 or op.kind not in (OpKind.FETCH, OpKind.PEER_COPY):
+        if op.nbytes <= 0 or op.kind not in (OpKind.FETCH, *PEER_LINK_KINDS):
             return
         if op.kind is OpKind.FETCH:
             self.add(op.dst_zone, "in_fs", n)
@@ -245,7 +258,7 @@ class LinkBudget:
                pending: Optional[Dict[Tuple[str, str], int]] = None) -> bool:
         """Would ``op`` fit every involved zone's window right now?
         ``pending`` carries same-plan charges not yet committed."""
-        if op.kind not in (OpKind.PEER_COPY,) or op.nbytes <= 0:
+        if op.kind not in PEER_LINK_KINDS or op.nbytes <= 0:
             return True                 # FETCH rides the shared fs, not
         cls, zones = self._zones_of(op)  # the peer links; PROMOTE is local
         for z in zones:
@@ -255,7 +268,7 @@ class LinkBudget:
         return True
 
     def charge(self, op: PlanOp, now: float) -> None:
-        if op.kind is not OpKind.PEER_COPY or op.nbytes <= 0:
+        if op.kind not in PEER_LINK_KINDS or op.nbytes <= 0:
             return
         cls, zones = self._zones_of(op)
         for z in zones:
@@ -263,7 +276,7 @@ class LinkBudget:
 
     def refund(self, op: PlanOp, now: float) -> None:
         """Remove the most recent matching charge (op aborted)."""
-        if op.kind is not OpKind.PEER_COPY or op.nbytes <= 0:
+        if op.kind not in PEER_LINK_KINDS or op.nbytes <= 0:
             return
         cls, zones = self._zones_of(op)
         for z in zones:
@@ -292,6 +305,10 @@ class ClusterView:
     registry: ContextRegistry
     demand: Mapping[str, int] = field(default_factory=dict)
     arrival_rate: Mapping[str, float] = field(default_factory=dict)
+    # per-recipe preemption-rate EWMA (events/s): spill storms signal
+    # slot-pool pressure the arrival rate cannot see — the warm-pool
+    # policy converts it into extra replicas (WarmPoolPolicy.preempt_horizon_s)
+    preempt_rate: Mapping[str, float] = field(default_factory=dict)
     now: float = 0.0
 
     @property
@@ -339,6 +356,9 @@ class ContextPlane:
         self.ops_aborted = 0
         self.deferred_intents = 0
         self._inflight: Dict[Tuple[str, str], PlanOp] = {}
+        # request_id -> in-flight KV_SHIP op (disaggregation handoffs are
+        # per-REQUEST, so they cannot share the residency-keyed table)
+        self._inflight_ships: Dict[int, PlanOp] = {}
         self._tombstones: Dict[str, int] = {}     # recipe -> lost READY copies
         # preemption KV movement, priced per zone like everything else the
         # plane moves.  Spills are WORKER-LOCAL (device -> host, no peer
@@ -348,6 +368,12 @@ class ContextPlane:
         self.kv_resumed: Dict[str, int] = {}      # zone -> bytes restored
         self.kv_spill_events = 0
         self.kv_resume_events = 0
+        # disaggregation KV handoffs (prefill worker -> decode worker):
+        # these DO cross the peer links, so they ride the planned/moved
+        # zone meters and the LinkBudget window; the per-zone dict below
+        # is the phase-attributable view kv_summary() reports.
+        self.kv_shipped: Dict[str, int] = {}      # dst zone -> bytes shipped
+        self.kv_ship_events = 0
 
     # -- registration ------------------------------------------------------
     def register(self, recipe) -> str:
@@ -558,12 +584,75 @@ class ContextPlane:
         self.kv_resumed[zone] = self.kv_resumed.get(zone, 0) + int(nbytes)
         self.kv_resume_events += 1
 
+    # -- disaggregation: KV_SHIP lifecycle ---------------------------------
+    def kv_ship_op(self, key: str, src_worker: str, dst_worker: str,
+                   nbytes: int, *, src_zone: str, dst_zone: str) -> PlanOp:
+        """Price one prefill->decode KV handoff as a plan op.  Pure: the
+        router uses the op (plus :meth:`ship_admits`) to DECIDE ship vs
+        local; nothing is charged until :meth:`commit_kv_ship`."""
+        return PlanOp(OpKind.KV_SHIP, key, dst_worker, nbytes=int(nbytes),
+                      src_worker=src_worker, src_zone=src_zone,
+                      dst_zone=dst_zone)
+
+    def ship_admits(self, op: PlanOp, now: float) -> bool:
+        """Would this ship fit the involved zones' budget windows?  Used
+        by the ship-vs-local decision: a ship the window cannot absorb is
+        DEFERRED to the local fast path, never dropped — unless decoding
+        locally is impossible, in which case the ship is demand-critical
+        and committed anyway (charged like a demand Acquire)."""
+        return self.budget.admits(op, now)
+
+    def commit_kv_ship(self, request_id: int, op: PlanOp,
+                       now: float = 0.0) -> None:
+        """Charge budget + planned meters for one KV handoff and register
+        it in flight.  Ships never touch the registry: the recipe is
+        already resident on both ends — only request state moves."""
+        assert op.kind is OpKind.KV_SHIP
+        assert request_id not in self._inflight_ships, \
+            f"request {request_id} already has a KV ship in flight"
+        self.ops_committed += 1
+        self.planned.charge_op(op)
+        self.budget.charge(op, now)
+        self._inflight_ships[request_id] = op
+
+    def kv_ship_completed(self, request_id: int,
+                          moved_bytes: Optional[int] = None) -> None:
+        """The snapshot landed on the decode worker: charge moved meters
+        (measured bytes win over priced) and the phase-attributable
+        kv_shipped view.  Stale-safe: a completion event firing after an
+        eviction already aborted the ship is a no-op."""
+        op = self._inflight_ships.pop(request_id, None)
+        if op is None:
+            return
+        measured = op.nbytes if moved_bytes is None else int(moved_bytes)
+        self.moved.charge_op(PlanOp(op.kind, op.recipe_key, op.worker_id,
+                                    nbytes=measured,
+                                    src_worker=op.src_worker,
+                                    src_zone=op.src_zone,
+                                    dst_zone=op.dst_zone))
+        self.kv_shipped[op.dst_zone] = \
+            self.kv_shipped.get(op.dst_zone, 0) + measured
+        self.kv_ship_events += 1
+        self.ops_completed += 1
+
+    def kv_ship_aborted(self, request_id: int, now: float = 0.0) -> None:
+        """Ship abandoned (an endpoint died): refund budget and planned
+        meters so the parity invariant survives churn.  Idempotent."""
+        op = self._inflight_ships.pop(request_id, None)
+        if op is None:
+            return
+        self.planned.charge_op(op, sign=-1)
+        self.budget.refund(op, now)
+        self.ops_aborted += 1
+
     def kv_summary(self) -> Dict[str, int]:
-        """Preemption KV movement totals (bytes and events)."""
+        """Preemption + disaggregation KV movement totals."""
         return {"spilled_bytes": sum(self.kv_spilled.values()),
                 "resumed_bytes": sum(self.kv_resumed.values()),
                 "spill_events": self.kv_spill_events,
-                "resume_events": self.kv_resume_events}
+                "resume_events": self.kv_resume_events,
+                "shipped_bytes": sum(self.kv_shipped.values()),
+                "ship_events": self.kv_ship_events}
 
     # -- worker loss & recovery -------------------------------------------
     def drop_worker(self, worker_id: str, now: float = 0.0) -> List[str]:
@@ -578,6 +667,9 @@ class ContextPlane:
         for (key, wid), op in list(self._inflight.items()):
             if wid == worker_id:
                 self.op_aborted(op, now)
+        for rid, op in list(self._inflight_ships.items()):
+            if worker_id in (op.worker_id, op.src_worker):
+                self.kv_ship_aborted(rid, now)
         reg = self.registry
         was_ready = {key for key, hosts in reg.hosts.items()
                      if hosts.get(worker_id) is HostState.READY}
@@ -608,7 +700,7 @@ class ContextPlane:
 
     @property
     def inflight_ops(self) -> int:
-        return len(self._inflight)
+        return len(self._inflight) + len(self._inflight_ships)
 
     # -- introspection -----------------------------------------------------
     def meters(self) -> Dict[str, Dict[str, Dict[str, int]]]:

@@ -161,11 +161,20 @@ class WarmPoolPolicy:
     proactive-scaling signal): demand is inflated by the requests
     expected to arrive within the horizon, so Replicate intents are
     emitted BEFORE the backlog forms, not after.
+
+    ``preempt_horizon_s > 0`` does the same with the scheduler's
+    PREEMPTION EWMA (``ClusterView.preempt_rate``): a spill storm —
+    interactive work repeatedly suspending batch members — is demand for
+    more warm replicas that the arrival rate cannot see, because the
+    suspended requests already arrived.  Each preemption expected within
+    the horizon counts as one task of backlog, so the pool grows where
+    slots are being fought over.
     """
     tasks_per_replica: int = 8      # backlog one warm replica absorbs
     max_fraction: float = 0.5       # pool share one recipe may pre-claim
     min_replicas: int = 1           # keep-warm floor while demand exists
     arrival_horizon_s: float = 0.0  # EWMA look-ahead (0 = reactive only)
+    preempt_horizon_s: float = 0.0  # preemption-storm look-ahead
 
     def target_replicas(self, demand_tasks: float, n_workers: int) -> int:
         if demand_tasks <= 0 or n_workers <= 0:
@@ -183,6 +192,9 @@ class WarmPoolPolicy:
             if self.arrival_horizon_s > 0:
                 demand += view.arrival_rate.get(key, 0.0) \
                     * self.arrival_horizon_s
+            if self.preempt_horizon_s > 0:
+                demand += view.preempt_rate.get(key, 0.0) \
+                    * self.preempt_horizon_s
             want = self.target_replicas(demand, view.n_workers)
             have = len(reg.ready_workers(key) | reg.staging_workers(key))
             if want > have:

@@ -347,6 +347,11 @@ class StreamingDecoder:
         self._suspended: Dict[int, dict] = {}
         self.kv_suspend_bytes_total = 0           # spill-path byte meters
         self.kv_resume_bytes_total = 0
+        # snapshots received from ANOTHER decoder (KV_SHIP): their restore
+        # bytes are a handoff landing, not a preemption resume, and must
+        # not pollute the spill/resume parity meters
+        self._adopted: set = set()
+        self.kv_adopt_bytes_total = 0
 
     # -- membership -----------------------------------------------------
     def ensure(self, rid: int, claim) -> None:
@@ -481,8 +486,37 @@ class StreamingDecoder:
         self._cache["pos"] = self._cache["pos"].at[slot].set(snap["pos"])
         nbytes = int(sum(x.nbytes
                          for x in jax.tree_util.tree_leaves(snap["kv"])))
-        self.kv_resume_bytes_total += nbytes
+        if rid in self._adopted:
+            self._adopted.discard(rid)
+            self.kv_adopt_bytes_total += nbytes
+        else:
+            self.kv_resume_bytes_total += nbytes
         return nbytes
+
+    # -- disaggregation: KV_SHIP export / adopt -------------------------
+    def export_suspended(self, rid: int) -> Optional[dict]:
+        """Hand ``rid``'s host-side snapshot to the caller (the KV_SHIP
+        path): ownership leaves this decoder entirely — the destination
+        decoder takes it via :meth:`adopt`.  Returns None when ``rid``
+        holds no suspended state here (e.g. the library was spilled and
+        the snapshot died with it)."""
+        self._adopted.discard(rid)
+        return self._suspended.pop(rid, None)
+
+    def adopt(self, rid: int, snap: dict) -> int:
+        """Receive a snapshot shipped from another decoder's
+        :meth:`export_suspended`.  It parks in ``_suspended`` exactly
+        like a local suspend, so the next step's ``has_suspended`` path
+        restores it WITHOUT re-prefill — decode continues bit-exactly
+        from the prefill worker's state.  Restore bytes are accounted to
+        ``kv_adopt_bytes_total`` (a handoff, not a preemption resume).
+        Both decoders must use the same KV layout (same recipe, so same
+        paged/contiguous choice and ``max_len``).  Returns the
+        snapshot's KV byte size."""
+        self._suspended[rid] = snap
+        self._adopted.add(rid)
+        return int(sum(x.nbytes
+                       for x in jax.tree_util.tree_leaves(snap["kv"])))
 
     # -- the step -------------------------------------------------------
     def step(self, rids: Sequence[int]) -> Dict[int, int]:
@@ -755,8 +789,13 @@ def make_pff_step_fn(prompt_len: int = PROMPT_LEN, *,
     on preemption / migrated to another replica) are detected by their
     absence from ``members`` and their decoder state — slot, pages,
     token buffers — is freed immediately; previously these rows leaked
-    until the decoder was torn down."""
-    def step_fn(payloads, members):
+    until the decoder was torn down.
+
+    The returned function carries a ``prefill`` attribute — the
+    disaggregation entry the live executor uses to run a request's
+    PREFILL phase without joining a stream (see
+    :meth:`repro.cluster.LiveExecutor._run_prefill`)."""
+    def _decoder(payloads) -> StreamingDecoder:
         dec = payloads.get("_stream_decoder")
         if dec is None:
             engine = payloads["xla_executable"]
@@ -767,6 +806,16 @@ def make_pff_step_fn(prompt_len: int = PROMPT_LEN, *,
                                    slot_cached=slot_cached, max_len=max_len,
                                    paged=paged)
             payloads["_stream_decoder"] = dec
+        # shipped-in KV snapshots parked before this decoder existed (or
+        # between steps): take ownership so has_suspended resumes them
+        inbox = payloads.pop("_kv_inbox", None)
+        if inbox:
+            for rid, snap in inbox.items():
+                dec.adopt(rid, snap)
+        return dec
+
+    def step_fn(payloads, members):
+        dec = _decoder(payloads)
         present = {r.request_id for r in members}
         for rid in dec.active_rids():
             if rid not in present:                # requeued away mid-batch
@@ -786,6 +835,25 @@ def make_pff_step_fn(prompt_len: int = PROMPT_LEN, *,
             if r.steps_done + 1 >= r.n_units:    # last step: free state
                 dec.finish(r.request_id)
         return out
+
+    def prefill(payloads, request) -> Tuple[int, List[int]]:
+        """Run ``request``'s PREFILL phase: admit it, emit the first
+        ``prompt_units`` tokens exactly as the colocated steps would,
+        then suspend the row — the host snapshot IS the shippable KV.
+        Returns ``(snapshot_nbytes, tokens)``; the DECODE phase resumes
+        from the snapshot (same worker or shipped) and continues the
+        token stream bit-exactly."""
+        dec = _decoder(payloads)
+        rid = request.request_id
+        dec.ensure(rid, request.payload)
+        if dec.truncated.get(rid):
+            request.truncated = True
+        toks: List[int] = []
+        for _ in range(max(int(request.prompt_units), 1)):
+            toks.append(dec.step([rid])[rid])
+        return dec.suspend(rid), toks
+
+    step_fn.prefill = prefill
     return step_fn
 
 

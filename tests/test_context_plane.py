@@ -427,3 +427,42 @@ if HAVE_HYPOTHESIS:
         ex.loop.run()
         assert sched.completed_inferences == n_tasks * 200
         assert_bytes_balanced(sched)
+
+    @given(st.integers(0, 2),           # compute-rich Adas
+           st.integers(2, 5),           # memory-side A10s
+           st.integers(2, 4),           # workers per zone
+           st.integers(4, 16),          # phase-split requests
+           st.booleans(),               # budgeted?
+           st.integers(0, 1))           # eviction dip?
+    @settings(max_examples=15, deadline=None)
+    def test_kv_ship_bytes_balance_property(
+            n_ada, n_a10, per_zone, n_reqs, budgeted, dip):
+        """Disaggregated request streams: every KV_SHIP the router
+        commits either lands (moved == planned, metered per landing
+        zone) or is refunded by churn — the parity invariant holds with
+        ships in the mix, under budget pressure and worker loss alike."""
+        from repro.cluster import Application
+        ada = GPU_CATALOG["NVIDIA RTX 6000 Ada Generation"]
+        pool = [ada] * n_ada + [A10] * n_a10
+        budget = LinkBudget(
+            cross_bytes_per_window=1.2 * RECIPE.transfer_bytes,
+            window_s=45.0) if budgeted else None
+        trace = [(0.0, len(pool))]
+        if dip:
+            trace += [(40.0, max(1, len(pool) // 2)), (80.0, len(pool))]
+        sched, ex, fac = make_sim(devices=pool, link_budget=budget,
+                                  workers_per_zone=per_zone, trace=trace,
+                                  disaggregate=True)
+        app = Application(sched)
+        key = app.register(RECIPE, active_params=AP)
+        app.submit_stream(ex, [dict(recipe_key=key, prompt_units=3,
+                                    decode_steps=16, arrival_s=0.5 * i)
+                               for i in range(n_reqs)])
+        ex.run(until=20_000.0)
+        ex.loop.run()
+        assert sched.done
+        assert sched.prefills_done >= n_reqs     # churn may re-prefill
+        assert_bytes_balanced(sched)
+        kv = sched.plane.kv_summary()
+        assert sum(sched.plane.kv_shipped.values()) == kv["shipped_bytes"]
+        assert kv["ship_events"] == sched.kv_ships
