@@ -5,15 +5,22 @@ application's throughput tracks the (wildly varying) number of connected
 workers — correlation between instantaneous worker count and inference
 rate must be strongly positive, and progress never stalls while any
 worker is connected.
+
+:func:`main_storms` extends the claim to CORRELATED loss: the same pv6
+trace with a train of zone-correlated eviction storms layered on top
+(via :class:`~repro.cluster.ChurnInjector`) still completes all work,
+with bounded makespan degradation and exact context-plane byte
+accounting after every storm.
 """
 from __future__ import annotations
 
 import statistics
 
 from repro.core import PERVASIVE
-from repro.cluster import opportunistic_supply, traces
+from repro.cluster import (ChurnInjector, make_sim, opportunistic_supply,
+                           storm_schedule, traces)
 
-from .common import Report, run_experiment
+from .common import ACTIVE_PARAMS, RECIPE, Report, run_experiment
 
 
 def rate_vs_workers(r, bucket_s: float = 60.0):
@@ -67,5 +74,52 @@ def main(n_total: int = 150_000):
     return results
 
 
+def main_storms(n_total: int = 150_000, batch: int = 10):
+    """pv6 trace ± correlated eviction storms (batch 10 → 10x the
+    request count of the Fig 7 runs above, all on the DES executor)."""
+    rep = Report("Fig 7b — pv6 availability + correlated eviction storms",
+                 ["exp", "makespan_s", "killed", "goodput inf/s"])
+    trace = traces.diurnal(10)
+    out = {}
+    storms = []                      # placed after the calm run's makespan
+    for label, get_storms in [("pv6_calm", lambda: []),
+                              ("pv6_storms", lambda: storms)]:
+        sched, ex, fac = make_sim(devices=opportunistic_supply(200),
+                                  trace=trace)
+        key = sched.register_context(RECIPE)
+        sched.submit_sweep(key, n_total, batch, PERVASIVE,
+                           active_params=ACTIVE_PARAMS)
+        inj = ChurnInjector(ex, get_storms(), seed=2)
+        inj.arm()
+        ex.pump()
+        ex.loop.run(stop=lambda: sched.done)
+        mk = sched.makespan()
+        rep.add(label, f"{mk:.0f}", inj.killed, f"{n_total / mk:.0f}")
+        if label == "pv6_calm":
+            # a storm train spanning the middle of the run at any scale
+            storms.extend(storm_schedule(first_s=0.2 * mk,
+                                         every_s=0.15 * mk, n_storms=4,
+                                         n_workers=15))
+        else:
+            assert inj.killed > 0, "no storm ever fired"
+        assert sched.completed_inferences >= n_total, \
+            f"{label}: lost work ({sched.completed_inferences}/{n_total})"
+        plane = sched.plane
+        assert plane.inflight_ops == 0, \
+            f"{label}: {plane.inflight_ops} plane op(s) leaked"
+        assert plane.planned.as_dict() == plane.moved.as_dict(), \
+            f"{label}: planned/moved byte meters diverge after storms"
+        out[label] = mk
+    rep.print()
+    # 4 storms each reclaim ~a quarter of the pool (lost batch progress
+    # + re-staging, factory refills at the next trace point): bounded
+    # degradation, not a stall or collapse
+    assert out["pv6_storms"] < 2.5 * out["pv6_calm"], \
+        "storms must degrade makespan gracefully, not collapse it"
+    print("fig7b storm checks: OK")
+    return out
+
+
 if __name__ == "__main__":
     main()
+    main_storms()

@@ -26,8 +26,8 @@ def main(argv=None) -> int:
                    bench_fig5_table2_task_times, bench_fig6_busy_cluster,
                    bench_fig7_resilience, bench_claims, bench_roofline,
                    bench_batch_policy, bench_context_plane,
-                   bench_continuous_batching, bench_disagg, bench_gateway,
-                   bench_live_decode)
+                   bench_continuous_batching, bench_disagg, bench_elastic,
+                   bench_gateway, bench_live_decode)
 
     t0 = time.time()
     if args.smoke:
@@ -48,6 +48,10 @@ def main(argv=None) -> int:
         # completed work, shipped-KV decode token-exact on both layouts,
         # and zero KV byte leaks (planned == moved incl KV_SHIP)
         bench_disagg.main(smoke=True)
+        # asserts forecast-driven elastic supply strictly beats the
+        # reactive EWMA baseline on goodput under burst-then-storm at
+        # equal completed work, with zero slot/byte leaks after storms
+        bench_elastic.main(smoke=True)
         bench_roofline.main()
         print(f"\nsmoke benchmarks done in {time.time()-t0:.1f}s")
         return 0
@@ -59,6 +63,7 @@ def main(argv=None) -> int:
     bench_fig6_busy_cluster.main(res=res6)
     bench_fig6_busy_cluster.main_mixed()
     bench_fig7_resilience.main(n_total)
+    bench_fig7_resilience.main_storms(n_total)
     bench_claims.main(res=res4, drain=res6)
     bench_batch_policy.main(n_total)
     bench_batch_policy.main_mixed()
@@ -66,6 +71,7 @@ def main(argv=None) -> int:
     bench_context_plane.main()
     bench_gateway.main()
     bench_disagg.main()
+    bench_elastic.main()
     bench_live_decode.main()
     bench_roofline.main()
     print(f"\nall benchmarks done in {time.time()-t0:.1f}s")

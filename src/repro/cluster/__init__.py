@@ -44,26 +44,30 @@ from .executors import LiveExecutor, SimExecutor
 from .application import Application
 from .factory import (Factory, make_sim, opportunistic_supply,
                       spill_aware_evict_priority)
+from .forecast import ChurnInjector, DemandForecaster, ElasticPolicy
 from .observability import (ProgressMonitor, Snapshot,
                             class_latency_summary, format_class_latency,
-                            format_latency, format_snapshot,
+                            format_latency, format_pool, format_snapshot,
                             format_zone_bytes, latency_summary, percentile,
-                            zone_byte_summary)
+                            pool_summary, zone_byte_summary)
+from .traces import Storm, storm_schedule
 from . import traces
 
 __all__ = [
-    "Application", "Assignment", "BATCH", "ClassPolicy", "ClusterSpec",
-    "DECODE", "DECODE_FIXED_FRAC", "DeviceModel", "EventLoop", "Factory",
+    "Application", "Assignment", "BATCH", "ChurnInjector", "ClassPolicy",
+    "ClusterSpec",
+    "DECODE", "DECODE_FIXED_FRAC", "DemandForecaster", "DeviceModel",
+    "ElasticPolicy", "EventLoop", "Factory",
     "PREFILL",
     "GPU_CATALOG", "Gateway", "INTERACTIVE", "LiveExecutor",
     "PAPER_CLUSTER", "REF_ACTIVE_PARAMS", "REJECTED", "Request",
-    "RequestRecord", "SLOClass", "Scheduler", "SimExecutor",
+    "RequestRecord", "SLOClass", "Scheduler", "SimExecutor", "Storm",
     "TIMED_OUT", "TPU_CATALOG", "Task", "TaskRecord",
     "Timer", "Worker", "cluster_sample", "format_gateway", "make_sim",
     "opportunistic_supply", "paper_20gpu_pool", "pool_rate",
-    "spill_aware_evict_priority", "traces",
+    "spill_aware_evict_priority", "storm_schedule", "traces",
     "ProgressMonitor", "Snapshot", "class_latency_summary",
-    "format_class_latency", "format_latency", "format_snapshot",
-    "format_zone_bytes", "latency_summary", "percentile",
-    "zone_byte_summary",
+    "format_class_latency", "format_latency", "format_pool",
+    "format_snapshot", "format_zone_bytes", "latency_summary",
+    "percentile", "pool_summary", "zone_byte_summary",
 ]

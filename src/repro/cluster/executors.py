@@ -302,6 +302,9 @@ class SimExecutor(_PlanOpExecution):
         # arrivals scheduled on the loop but not yet submitted
         # (Application.submit_stream); keeps run() from stopping early
         self.pending_arrivals = 0
+        # demand-driven supply: an elastic Factory installs its step()
+        # here so the pool re-sizes on every pump, not just on its tick
+        self.supply_hook: Optional[Callable[[], None]] = None
 
     # -- proactive spanning-tree distribution (§5.3.1) ---------------------
     def prestage(self, recipe_key: str) -> int:
@@ -543,6 +546,10 @@ class SimExecutor(_PlanOpExecution):
             self._start(a)
         # leftover idle workers: replicate hot recipes ahead of demand
         self._apply_warm_pool()
+        # elastic supply reacts to the demand this round revealed
+        # (re-entrancy is the hook owner's problem: Factory.step guards)
+        if self.supply_hook is not None:
+            self.supply_hook()
         # with a gateway installed, queued deadlines must fire as DES
         # events — an idle loop would otherwise never notice an expiry
         self._arm_deadline_timer()

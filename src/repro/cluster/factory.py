@@ -1,30 +1,47 @@
-"""The factory: reconciles the worker pool against an availability trace.
+"""The factory: reconciles the worker pool against supply and demand.
 
 Paper §5.1: "The pool of resources is maintained by the TaskVine factory,
 a daemon-like process that monitors the current resource pool and adjusts
 it based on a given resource policy and the current load of the cluster."
 
-In the sim, cluster load is exogenous (a :mod:`traces` trace of target
-worker counts); the factory submits or evicts pilot jobs to track it.
+Two modes:
+
+* **Trace-following** (the original): cluster load is exogenous (a
+  :mod:`traces` trace of target worker counts); the factory submits or
+  evicts pilot jobs to track it exactly.
+
+* **Demand-driven** (``Factory(policy=ElasticPolicy(...))``): the trace
+  becomes an availability CEILING, and the factory sizes the pool from
+  the scheduler's demand forecast (``ClusterView.forecast_rate``) via
+  the policy's hysteresis/cooldown contract — acquiring ahead of bursts
+  and releasing when the forecast decays, never exceeding what the
+  cluster offers.  The policy re-decides on a periodic tick AND on every
+  executor pump (cooldowns keep that cheap), and
+  :meth:`Factory.restrict` lets fault injectors model reclaimed
+  capacity that must not be instantly re-acquired.
+
 Joins draw devices from a supply iterator (heterogeneous, Table-1
-proportioned); evictions pick victims by ``evict_priority`` (pv5 drains
-A10s first) — the *scheduler* then requeues any unfinished request.
+proportioned); evictions and elastic releases pick victims by
+``evict_priority`` (pv5 drains A10s first) — the *scheduler* then
+requeues any unfinished request.
 
 The DEFAULT eviction priority is spill-aware: it consults the context
 registry and prefers reclaiming workers whose resident recipes are
-replicated (READY) elsewhere, so a drain costs re-staging only when no
-other copy survives.  Pass ``evict_priority=`` to override (higher value
-= evicted first).
+replicated (READY) elsewhere, so a drain (or an elastic release) costs
+re-staging only when no other copy survives — the last warm copy of a
+context is reclaimed last.  Pass ``evict_priority=`` to override (higher
+value = evicted first).
 """
 from __future__ import annotations
 
 import itertools
-from typing import Callable, Iterable, Iterator, List, Optional
+from typing import Callable, Dict, Iterable, Iterator, List, Optional
 
 from ..core import (HostState, LinkBudget, WarmPoolPolicy, WorkerShape,
                     PAPER_WORKER_SHAPE)
 from .events import EventLoop
 from .executors import SimExecutor
+from .forecast import ElasticPolicy
 from .hardware import DeviceModel, cluster_sample, paper_20gpu_pool
 from .scheduler import Scheduler
 from .traces import Trace
@@ -61,11 +78,15 @@ class Factory:
                  device_supply: Iterable[DeviceModel],
                  *, workers_per_zone: int = 8,
                  worker_shape: Optional[WorkerShape] = None,
-                 evict_priority: Optional[Callable[[Worker], float]] = None):
+                 evict_priority: Optional[Callable[[Worker], float]] = None,
+                 policy: Optional[ElasticPolicy] = None,
+                 tick_s: float = 15.0):
         self.sched = scheduler
         self.ex = executor
         self.loop: EventLoop = executor.loop
-        self._supply: Iterator[DeviceModel] = itertools.cycle(device_supply)
+        mix = list(device_supply)
+        self._mix: List[DeviceModel] = mix
+        self._supply: Iterator[DeviceModel] = itertools.cycle(mix)
         self._zone_counter = itertools.count()
         self.workers_per_zone = workers_per_zone
         self.worker_shape = worker_shape or PAPER_WORKER_SHAPE
@@ -73,6 +94,20 @@ class Factory:
         # spill-aware default over a fresh ClusterView at eviction time
         # (reclaim workers whose contexts are replicated elsewhere)
         self.evict_priority = evict_priority
+        # -- demand-driven mode -------------------------------------------
+        self.policy = policy
+        self.tick_s = tick_s
+        if policy is not None and not list(policy.supply):
+            policy.supply = mix         # capacity model sees our mix
+        self.target = 0                 # last decided pool target
+        self._ceiling: Optional[int] = None   # trace availability cap
+        self._restrictions: List[List[float]] = []  # [until_s, n_lost]
+        self.scale_log: List[tuple] = []      # (t, from_n, to_n)
+        # worker_id -> acquire-decision time; pool_summary() joins this
+        # with plane.first_ready_s for the acquire -> warm lead time
+        self.acquire_log: Dict[str, float] = {}
+        self._stepping = False
+        self._ticking = False
 
     def _next_zone(self) -> str:
         return f"z{next(self._zone_counter) // self.workers_per_zone}"
@@ -86,6 +121,7 @@ class Factory:
                 w = Worker(next(self._supply), zone=self._next_zone(),
                            shape=self.worker_shape)
                 self.sched.add_worker(w, now)
+                self.acquire_log[w.worker_id] = now
             if getattr(self.ex, "prestage_enabled", False):
                 for key in self.sched.registry.recipes:
                     self.ex.prestage(key)
@@ -100,8 +136,78 @@ class Factory:
             self.ex.pump()
 
     def apply_trace(self, trace: Trace) -> None:
+        """Trace-following mode tracks the trace exactly; demand-driven
+        mode treats each trace point as the availability ceiling and
+        lets the policy decide the pool size under it."""
+        if self.policy is None:
+            for t, n in trace:
+                self.loop.at(t, lambda n=n: self.reconcile(n))
+            return
         for t, n in trace:
-            self.loop.at(t, lambda n=n: self.reconcile(n))
+            self.loop.at(t, lambda n=n: self.set_ceiling(n))
+        self.start()
+
+    # -- demand-driven mode --------------------------------------------
+    def set_ceiling(self, n: int) -> None:
+        """Availability changed: re-decide immediately (a ceiling drop
+        is an exogenous revocation the policy obeys without cooldown)."""
+        self._ceiling = n
+        self.step()
+
+    def restrict(self, n: int, until_s: float) -> None:
+        """Temporarily lower the effective ceiling by ``n`` workers
+        (until ``until_s``): a churn storm reclaimed capacity the
+        factory must not instantly re-acquire."""
+        self._restrictions.append([until_s, float(n)])
+        self.step()
+        # re-expand the moment the restriction lapses
+        self.loop.at(until_s, self.step)
+
+    def effective_ceiling(self, now: float) -> float:
+        base = float("inf") if self._ceiling is None else self._ceiling
+        self._restrictions = [r for r in self._restrictions
+                              if r[0] > now]
+        return max(0.0, base - sum(r[1] for r in self._restrictions))
+
+    def step(self) -> None:
+        """One policy decision: read the view, clamp to the ceiling,
+        reconcile if the policy moved the target.  Re-entrant-safe —
+        reconcile pumps the executor, which calls back into step()."""
+        if self.policy is None or self._stepping:
+            return
+        self._stepping = True
+        try:
+            now = self.loop.now
+            view = self.sched.view(now)
+            cap = self.effective_ceiling(now)
+            cur = len(self.sched.workers)
+            tgt = self.policy.decide(view, cur, cap, now)
+            self.target = tgt
+            if tgt != cur:
+                self.scale_log.append((now, cur, tgt))
+                self.reconcile(tgt)
+        finally:
+            self._stepping = False
+
+    def start(self) -> None:
+        """Begin demand-driven reconciliation: decide now, re-decide on
+        every executor pump, and keep a periodic tick alive so the pool
+        shrinks even when no events fire (e.g. demand simply stopped)."""
+        if self.policy is None:
+            return
+        self.ex.supply_hook = self.step
+        self.loop.at(self.loop.now, self.step)
+        if self._ticking:
+            return
+        self._ticking = True
+
+        def tick():
+            self.step()
+            if self.sched.done and self.sched.submitted > 0:
+                self._ticking = False   # run drained: stop re-arming
+                return
+            self.loop.after(self.tick_s, tick)
+        self.loop.after(self.tick_s, tick)
 
 
 # ---------------------------------------------------------------------------
@@ -115,16 +221,21 @@ def make_sim(devices: Optional[List[DeviceModel]] = None,
              backfill: bool = True, aging_bound=8,
              warm_pool: Optional[WarmPoolPolicy] = None,
              link_budget: Optional[LinkBudget] = None,
-             prestage: bool = False, disaggregate: bool = False):
+             prestage: bool = False, disaggregate: bool = False,
+             policy: Optional[ElasticPolicy] = None,
+             tick_s: float = 15.0):
     """Returns (scheduler, executor, factory) wired together."""
     sched = Scheduler(backfill=backfill, aging_bound=aging_bound,
                       link_budget=link_budget, disaggregate=disaggregate)
     ex = SimExecutor(sched, prestage=prestage, warm_pool=warm_pool)
     devices = devices if devices is not None else paper_20gpu_pool()
     fac = Factory(sched, ex, devices, workers_per_zone=workers_per_zone,
-                  worker_shape=worker_shape, evict_priority=evict_priority)
+                  worker_shape=worker_shape, evict_priority=evict_priority,
+                  policy=policy, tick_s=tick_s)
     if trace:
         fac.apply_trace(trace)
+    elif policy is not None:
+        fac.start()
     return sched, ex, fac
 
 

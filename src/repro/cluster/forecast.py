@@ -1,0 +1,408 @@
+"""Forecast-aware elastic supply (ROADMAP: forecast-aware elastic pool).
+
+The arrival EWMA (PR 3) is a *reactive* demand signal: it rises only
+after requests arrive and says nothing about where the rate is heading.
+SageServe (PAPERS.md) shows forecast-driven auto-scaling is what turns an
+opportunistic pool from reactive thrash into real savings, so this module
+promotes the EWMA into a proper supply-side subsystem with three parts:
+
+* :class:`DemandForecaster` — per-recipe windowed rate history with trend
+  extrapolation and burst detection.  A rate jump >= ``burst_factor`` x
+  the trailing window flags a burst and PINS the forecast at the burst
+  rate for ``burst_hold_s`` (bursts end abruptly; capacity should not).
+  The scheduler feeds it on every submission and publishes its snapshot
+  on :class:`~repro.core.ClusterView` as ``forecast_rate``, next to
+  ``arrival_rate`` / ``preempt_rate``.
+
+* :class:`ElasticPolicy` — converts the forecast plus per-phase service
+  rates (:func:`~repro.cluster.hardware.pool_rate` with ``phase=``) into
+  a target worker count, with a multiplicative hysteresis band and
+  acquire/release cooldowns so the pool never thrashes on a noisy
+  signal.  ``Factory(policy=ElasticPolicy(...))`` reconciles against
+  this target *within* the availability trace's ceiling instead of
+  blindly tracking the trace.
+
+* :class:`ChurnInjector` — fault injection over :mod:`traces`:
+  correlated eviction storms (N workers lost in one window,
+  zone-correlated victims, optional revoke-during-staging) driven
+  through the scheduler's ``on_evict`` -> the plane's ``drop_worker`` /
+  ``recovery_intents`` path, so resilience benches can treat storms as a
+  first-class scenario rather than a tail case.
+
+See docs/elastic-pool.md for the forecast model and the
+hysteresis/cooldown contract.
+"""
+from __future__ import annotations
+
+import math
+import random
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+from .hardware import DeviceModel, REF_ACTIVE_PARAMS, pool_rate
+from .traces import Storm
+
+
+# ---------------------------------------------------------------------------
+# DemandForecaster — windowed rates + trend + burst detection
+# ---------------------------------------------------------------------------
+
+class DemandForecaster:
+    """Per-recipe arrival-rate forecast from a windowed event history.
+
+    Events land in fixed ``window_s`` buckets (at most ``n_windows``
+    retained).  The forecast for a recipe is::
+
+        max(0, trend line over the completed windows, evaluated
+               ``horizon_s`` ahead)                      # extrapolation
+        .. raised to the current partial window's rate   # fast rise
+        .. raised to the pinned burst rate while a burst holds
+
+    Burst detection compares the current window's instantaneous rate to
+    the trailing completed-window mean: a jump >= ``burst_factor`` x
+    (with at least ``min_burst_events`` events, so one early arrival in
+    a fresh window cannot trip it) pins the forecast at the observed
+    burst rate for ``burst_hold_s`` seconds.  Re-detections while a
+    burst holds extend the hold and can raise — never lower — the pin.
+
+    Windows with no arrivals count as zero-rate samples, so a recipe
+    that stops arriving sees its trailing mean AND trend decay to zero
+    within ``n_windows`` windows (no frozen demand — the same contract
+    the decayed EWMA satisfies).
+    """
+
+    def __init__(self, *, window_s: float = 10.0, n_windows: int = 12,
+                 burst_factor: float = 3.0, burst_hold_s: float = 120.0,
+                 horizon_s: float = 60.0, min_burst_events: int = 4):
+        if window_s <= 0 or n_windows < 2:
+            raise ValueError("need window_s > 0 and n_windows >= 2")
+        self.window_s = window_s
+        self.n_windows = n_windows
+        self.burst_factor = burst_factor
+        self.burst_hold_s = burst_hold_s
+        self.horizon_s = horizon_s
+        self.min_burst_events = min_burst_events
+        # key -> deque of [window_start_s, event_count]
+        self._hist: Dict[str, Deque[List[float]]] = {}
+        # key -> [hold_until_s, pinned_rate]
+        self._burst: Dict[str, List[float]] = {}
+        self.bursts_detected = 0
+
+    # -- ingestion ---------------------------------------------------------
+    def note(self, key: str, t: float) -> None:
+        start = math.floor(t / self.window_s) * self.window_s
+        buckets = self._hist.setdefault(key, deque())
+        if buckets and buckets[-1][0] == start:
+            buckets[-1][1] += 1
+        else:
+            buckets.append([start, 1.0])
+            while len(buckets) > self.n_windows:
+                buckets.popleft()
+        self._detect_burst(key, t)
+
+    # -- series reconstruction --------------------------------------------
+    def _series(self, key: str, now: float) -> List[float]:
+        """Rates of the last ``n_windows`` COMPLETED windows (oldest
+        first), zeros filled for windows with no arrivals."""
+        buckets = self._hist.get(key)
+        if not buckets:
+            return []
+        cur_start = math.floor(now / self.window_s) * self.window_s
+        by_start = {b[0]: b[1] for b in buckets}
+        first = buckets[0][0]
+        out: List[float] = []
+        for i in range(self.n_windows, 0, -1):
+            start = cur_start - i * self.window_s
+            if start < first:
+                continue                # before we saw this recipe at all
+            out.append(by_start.get(start, 0.0) / self.window_s)
+        return out
+
+    def _current_rate(self, key: str, now: float) -> float:
+        """Instantaneous rate of the current (partial) window.  The
+        elapsed span is floored at a quarter window so the first events
+        of a fresh window cannot fake an arbitrarily high rate."""
+        buckets = self._hist.get(key)
+        if not buckets:
+            return 0.0
+        cur_start = math.floor(now / self.window_s) * self.window_s
+        if buckets[-1][0] != cur_start:
+            return 0.0
+        elapsed = max(now - cur_start, self.window_s * 0.25)
+        return buckets[-1][1] / elapsed
+
+    def trailing_rate(self, key: str, now: float) -> float:
+        """Mean rate over the completed trailing windows (0 if none)."""
+        series = self._series(key, now)
+        if not series:
+            return 0.0
+        return sum(series) / len(series)
+
+    # -- burst detection ---------------------------------------------------
+    def _detect_burst(self, key: str, now: float) -> None:
+        buckets = self._hist[key]
+        cur_start = math.floor(now / self.window_s) * self.window_s
+        if buckets[-1][0] != cur_start \
+                or buckets[-1][1] < self.min_burst_events:
+            return
+        cur = self._current_rate(key, now)
+        trailing = self.trailing_rate(key, now)
+        floor_rate = self.min_burst_events / self.window_s
+        if cur < self.burst_factor * max(trailing, floor_rate / 2):
+            return
+        pin = self._burst.get(key)
+        if pin is None or now >= pin[0]:
+            self.bursts_detected += 1
+            self._burst[key] = [now + self.burst_hold_s, cur]
+        else:                           # extend + maybe raise the pin
+            pin[0] = now + self.burst_hold_s
+            pin[1] = max(pin[1], cur)
+
+    def burst_active(self, key: str, now: float) -> bool:
+        pin = self._burst.get(key)
+        return pin is not None and now < pin[0]
+
+    # -- the forecast ------------------------------------------------------
+    def forecast(self, key: str, now: float) -> float:
+        """Expected arrival rate (req/s) ``horizon_s`` from ``now``."""
+        series = self._series(key, now)
+        est = 0.0
+        if len(series) >= 2:
+            n = len(series)
+            # least-squares trend over the window series, extrapolated
+            # horizon_s past the newest completed window's center
+            xbar = (n - 1) / 2.0
+            ybar = sum(series) / n
+            sxx = sum((i - xbar) ** 2 for i in range(n))
+            sxy = sum((i - xbar) * (series[i] - ybar) for i in range(n))
+            slope = sxy / sxx if sxx else 0.0
+            x_future = (n - 1) + self.horizon_s / self.window_s
+            est = ybar + slope * (x_future - xbar)
+        elif series:
+            est = series[0]
+        # a rising partial window beats a trend that has not seen it yet
+        est = max(est, self._current_rate(key, now))
+        pin = self._burst.get(key)
+        if pin is not None and now < pin[0]:
+            est = max(est, pin[1])
+        return max(0.0, est)
+
+    def snapshot(self, now: float) -> Dict[str, float]:
+        """Per-recipe forecast map — what ``ClusterView.forecast_rate``
+        publishes."""
+        return {key: self.forecast(key, now) for key in self._hist}
+
+
+# ---------------------------------------------------------------------------
+# ElasticPolicy — forecast + per-phase service rates -> pool target
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ElasticPolicy:
+    """Demand-driven worker-count targets with hysteresis + cooldowns.
+
+    ``decide`` is the factory's contract: given a view, the current pool
+    size and the availability ceiling, return the pool size to reconcile
+    to.  Guarantees (the hypothesis property tests assert these at every
+    DES event):
+
+    * the returned target is never negative and never exceeds the
+      ceiling (availability is exogenous — a ceiling below the current
+      pool size forces an immediate shed, bypassing hysteresis);
+    * voluntary scaling happens only OUTSIDE the multiplicative
+      hysteresis band ``[cur*(1-hysteresis), cur*(1+hysteresis)]``, and
+      never within a cooldown of the previous scale action (one shared
+      clock for both directions, so an acquire is followed by at least
+      ``release_cooldown_s`` of calm — no acquire->release flip-flop on
+      a boundary-oscillating rate).
+
+    Demand is converted to capacity per phase: forecast arrivals times
+    the recipe's mean prompt/decode units give required prefill and
+    decode unit rates, queued backlog is amortised over ``drain_s``, and
+    the per-worker denominators come from ``pool_rate(phase=)`` averaged
+    over the supply mix — so a compute-poor mix needs more workers for
+    the same prefill demand.  ``signal="ewma"`` swaps the forecast for
+    the decayed arrival EWMA: the reactive baseline bench_elastic
+    compares against.
+    """
+    supply: Sequence[DeviceModel] = ()
+    signal: str = "forecast"            # "forecast" | "ewma" (baseline)
+    active_params: float = REF_ACTIVE_PARAMS
+    drain_s: float = 60.0               # drain queued backlog this fast
+    slack: float = 1.2                  # capacity headroom over demand
+    hysteresis: float = 0.25            # +/- dead band around current size
+    acquire_cooldown_s: float = 20.0
+    release_cooldown_s: float = 120.0
+    min_workers: int = 1                # floor while any demand exists
+    max_workers: Optional[int] = None
+    _last_scale_s: float = field(default=float("-inf"), repr=False)
+
+    def __post_init__(self):
+        if self.signal not in ("forecast", "ewma"):
+            raise ValueError(f"unknown signal {self.signal!r}")
+
+    # -- demand -> required unit rates ------------------------------------
+    def demand_rates(self, view) -> Tuple[float, float]:
+        """Required (prefill_units/s, decode_units/s) for this view."""
+        rates = (view.forecast_rate if self.signal == "forecast"
+                 else view.arrival_rate)
+        prefill = decode = 0.0
+        for key in set(rates) | set(view.backlog_units):
+            r = rates.get(key, 0.0)
+            prompt_mean, decode_mean = view.request_units.get(
+                key, (0.0, 1.0))
+            prefill += r * prompt_mean
+            decode += r * decode_mean
+            backlog = view.backlog_units.get(key, 0.0)
+            if backlog > 0:
+                # split the queued units between phases in the recipe's
+                # observed prompt/decode proportions
+                total_mean = prompt_mean + decode_mean
+                pfrac = prompt_mean / total_mean if total_mean else 0.0
+                prefill += backlog * pfrac / self.drain_s
+                decode += backlog * (1.0 - pfrac) / self.drain_s
+        return prefill, decode
+
+    def target_workers(self, view) -> int:
+        """Raw (pre-hysteresis) worker count covering both phase axes."""
+        mix = list(self.supply)
+        if not mix:
+            raise ValueError("ElasticPolicy needs a device supply mix "
+                             "(Factory installs its own at construction)")
+        prefill_need, decode_need = self.demand_rates(view)
+        per_prefill = pool_rate(mix, self.active_params,
+                                phase="prefill") / len(mix)
+        per_decode = pool_rate(mix, self.active_params,
+                               phase="decode") / len(mix)
+        need = 0.0
+        if prefill_need > 0 and per_prefill > 0:
+            need = max(need, self.slack * prefill_need / per_prefill)
+        if decode_need > 0 and per_decode > 0:
+            need = max(need, self.slack * decode_need / per_decode)
+        return int(math.ceil(need))
+
+    # -- the scaling decision ---------------------------------------------
+    def decide(self, view, current: int, ceiling: float,
+               now: float) -> int:
+        cap = ceiling if self.max_workers is None \
+            else min(ceiling, self.max_workers)
+        cap = max(cap, 0)
+        raw = self.target_workers(view)
+        has_demand = raw > 0 or any(
+            n > 0 for n in view.demand.values())
+        floor_n = self.min_workers if has_demand else 0
+        want = max(min(raw, cap), min(floor_n, cap))
+        want = int(want)
+        if current > cap:
+            # exogenous revocation: the trace says these workers are
+            # gone.  Obey immediately; no band, no cooldown.
+            self._last_scale_s = now
+            return int(cap)
+        if want > current:
+            band_hi = max(current + 1,
+                          math.ceil(current * (1.0 + self.hysteresis)))
+            if current > 0 and want < band_hi:
+                return current          # inside the dead band
+            if now - self._last_scale_s < self.acquire_cooldown_s:
+                return current
+            self._last_scale_s = now
+            return want
+        if want < current:
+            band_lo = min(current - 1,
+                          math.floor(current * (1.0 - self.hysteresis)))
+            if want > band_lo:
+                return current          # inside the dead band
+            if now - self._last_scale_s < self.release_cooldown_s:
+                return current
+            self._last_scale_s = now
+            return want
+        return current
+
+
+# ---------------------------------------------------------------------------
+# ChurnInjector — correlated eviction storms over a running sim
+# ---------------------------------------------------------------------------
+
+class ChurnInjector:
+    """Drives :class:`~repro.cluster.traces.Storm` schedules through the
+    scheduler's eviction path.
+
+    Victim selection per storm: workers currently STAGING go first when
+    ``revoke_staging`` is set (the worst case — the pool loses copies it
+    already paid transfer bytes for); with ``zone_correlated`` a seed
+    zone is drawn weighted by population and drained first, spilling
+    into the next-largest zones only when the seed zone runs dry (a rack
+    or power-domain reclamation takes neighbours together, not a uniform
+    sample).  Every kill goes through ``Scheduler.on_evict`` — requeue,
+    ``plane.drop_worker`` refunds + LOST tombstones, later
+    ``recovery_intents`` — exactly like a real reclamation.
+
+    With a ``factory`` attached, each storm also registers a temporary
+    capacity restriction (``suppress_s`` seconds): the resources were
+    *reclaimed*, so an elastic factory must not instantly re-acquire
+    what the cluster just took back.
+    """
+
+    def __init__(self, executor, storms: Sequence[Storm], *,
+                 factory=None, seed: int = 0, suppress_s: float = 0.0):
+        self.ex = executor
+        self.sched = executor.sched
+        self.storms = sorted(storms, key=lambda s: s.t_s)
+        self.factory = factory
+        self.suppress_s = suppress_s
+        self.rng = random.Random(seed)
+        self.storm_log: List[Tuple[float, int]] = []   # (t, n_killed)
+        self.killed = 0
+        self._armed = False
+
+    def arm(self) -> None:
+        """Schedule every storm on the executor's event loop."""
+        assert not self._armed, "ChurnInjector.arm() called twice"
+        self._armed = True
+        for s in self.storms:
+            self.ex.loop.at(s.t_s, lambda s=s: self._fire(s))
+
+    def _pick_victims(self, storm: Storm) -> List:
+        workers = list(self.sched.workers.values())
+        if not workers:
+            return []
+        n = min(storm.n_workers, len(workers))
+        ordered: List = []
+        chosen: set = set()
+        if storm.revoke_staging:
+            staging = [w for w in workers if w.staging]
+            self.rng.shuffle(staging)
+            ordered.extend(staging)
+            chosen.update(w.worker_id for w in staging)
+        rest = [w for w in workers if w.worker_id not in chosen]
+        if storm.zone_correlated and rest:
+            by_zone: Dict[str, List] = {}
+            for w in rest:
+                by_zone.setdefault(w.zone, []).append(w)
+            zones = sorted(by_zone)
+            seed_zone = self.rng.choices(
+                zones, weights=[len(by_zone[z]) for z in zones])[0]
+            # drain the seed zone first, then spill by population
+            spill = sorted((z for z in zones if z != seed_zone),
+                           key=lambda z: (-len(by_zone[z]), z))
+            for z in [seed_zone] + spill:
+                members = by_zone[z]
+                self.rng.shuffle(members)
+                ordered.extend(members)
+        else:
+            self.rng.shuffle(rest)
+            ordered.extend(rest)
+        return ordered[:n]
+
+    def _fire(self, storm: Storm) -> None:
+        now = self.ex.loop.now
+        victims = self._pick_victims(storm)
+        for w in victims:
+            self.sched.on_evict(w.worker_id, now)
+        self.killed += len(victims)
+        self.storm_log.append((now, len(victims)))
+        if self.factory is not None and self.suppress_s > 0 and victims:
+            self.factory.restrict(len(victims),
+                                  until_s=now + self.suppress_s)
+        self.ex.pump()

@@ -138,6 +138,75 @@ def format_class_latency(summaries: Dict[str, Dict[str, float]]) -> str:
                      for slo, s in summaries.items())
 
 
+def pool_summary(sched: Scheduler, factory=None) -> Dict[str, object]:
+    """Supply-side counters: pool size, per-device-class join/eviction
+    totals, acquire -> warm lead time, and (with an elastic factory)
+    target-vs-actual + the availability ceiling.
+
+    Lead time pairs the factory's acquire-decision stamps with the
+    plane's first-READY stamps: how long after the factory asked for a
+    worker did that worker first hold a warm context — the latency every
+    *proactive* scaling decision has to beat.  Works factory-less too
+    (``serve.py`` adds workers directly): the lead-time and target rows
+    are simply absent.
+    """
+    out: Dict[str, object] = {
+        "n_workers": len(sched.workers),
+        "joins": dict(sched.pool_joins),
+        "evictions": dict(sched.pool_evictions),
+        "by_class": {},
+    }
+    by_class: Dict[str, int] = {}
+    for w in sched.workers.values():
+        by_class[w.device.name] = by_class.get(w.device.name, 0) + 1
+    out["by_class"] = by_class
+    if factory is not None:
+        if factory.policy is not None:
+            out["target"] = factory.target
+            cap = factory.effective_ceiling(sched.clock())
+            out["ceiling"] = None if math.isinf(cap) else int(cap)
+            out["scale_events"] = len(factory.scale_log)
+        leads = []
+        warm = sched.plane.first_ready_s
+        for wid, t0 in factory.acquire_log.items():
+            t_warm = warm.get(wid)
+            if t_warm is not None and t_warm >= t0:
+                leads.append(t_warm - t0)
+        out["n_acquired"] = len(factory.acquire_log)
+        out["n_warmed"] = len(leads)
+        if leads:
+            out["acquire_lead_p50_s"] = percentile(leads, 50)
+            out["acquire_lead_p95_s"] = percentile(leads, 95)
+            out["acquire_lead_mean_s"] = sum(leads) / len(leads)
+    return out
+
+
+def format_pool(summary: Dict[str, object], label: str = "") -> str:
+    """One block: headline pool state, then a line per device class."""
+    head = (f"[pool{' ' + label if label else ''}] "
+            f"{summary['n_workers']} worker(s)")
+    if "target" in summary:
+        ceil = summary.get("ceiling")
+        head += (f" | target {summary['target']}"
+                 f" / ceiling {'∞' if ceil is None else ceil}"
+                 f" | {summary['scale_events']} scale event(s)")
+    joins: Dict[str, int] = summary["joins"]          # type: ignore
+    evictions: Dict[str, int] = summary["evictions"]  # type: ignore
+    head += (f" | joins {sum(joins.values())} "
+             f"evictions {sum(evictions.values())}")
+    if "acquire_lead_p50_s" in summary:
+        head += (f" | acquire→warm p50 {summary['acquire_lead_p50_s']:.1f}s "
+                 f"p95 {summary['acquire_lead_p95_s']:.1f}s "
+                 f"({summary['n_warmed']}/{summary['n_acquired']} warmed)")
+    lines = [head]
+    by_class: Dict[str, int] = summary["by_class"]    # type: ignore
+    for cls in sorted(set(joins) | set(evictions) | set(by_class)):
+        lines.append(f"  {cls}: {by_class.get(cls, 0)} up / "
+                     f"{joins.get(cls, 0)} joined / "
+                     f"{evictions.get(cls, 0)} evicted")
+    return "\n".join(lines)
+
+
 def zone_byte_summary(plane) -> Dict[str, Dict[str, float]]:
     """Per-zone context-transfer bytes from the plane's MOVED meters,
     plus the plan/executed delta and deferral counters — the run-summary

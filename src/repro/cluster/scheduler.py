@@ -65,6 +65,7 @@ from typing import Any, Callable, Deque, Dict, List, Optional, Tuple, Union
 from ..core import (AGING_BOUND_DEFAULT, Acquire, ClusterView, ContextPlane,
                     ContextRecipe, ContextMode, LinkBudget, PERVASIVE,
                     PlacementPlan, PlanOp, OpKind, derive_aging_bound)
+from .forecast import DemandForecaster
 from .hardware import ClusterSpec, PAPER_CLUSTER, REF_ACTIVE_PARAMS
 from .worker import Worker
 
@@ -297,6 +298,17 @@ class Scheduler:
         # demand signal the arrival rate cannot see — the warm-pool
         # policy reads it via ClusterView.preempt_rate
         self._preempts: Dict[str, List[float]] = {}
+        # windowed-rate forecast (trend + burst detection) fed on every
+        # submission; view() publishes it as ClusterView.forecast_rate
+        self.forecaster = DemandForecaster()
+        # per-recipe mean request shape: [n, prompt_sum, decode_sum] —
+        # converts forecast req/s into per-phase unit rates
+        self._req_units: Dict[str, List[float]] = {}
+        # supply-side observability: joins/evictions per device class
+        self.pool_joins: Dict[str, int] = {}
+        self.pool_evictions: Dict[str, int] = {}
+        # the plane stamps first-READY ("warm") times with this clock
+        self.plane.clock = lambda: self.clock()
 
     # ------------------------------------------------------------------
     # registration / submission
@@ -306,16 +318,42 @@ class Scheduler:
 
     def view(self, now: Optional[float] = None) -> ClusterView:
         """Read-only snapshot for the context plane / pure policies."""
+        t = self.clock() if now is None else now
         demand: Dict[str, int] = {}
+        backlog: Dict[str, float] = {}
         for key, lane in self.lanes.items():
             demand[key] = demand.get(key, 0) + len(lane)
+            for req in lane:
+                backlog[key] = backlog.get(key, 0.0) \
+                    + max(req.n_units - req.steps_done, 0)
         for req, _wid in self.running.values():
-            demand[req.recipe_key] = demand.get(req.recipe_key, 0) + 1
+            key = req.recipe_key
+            demand[key] = demand.get(key, 0) + 1
+            backlog[key] = backlog.get(key, 0.0) \
+                + max(req.n_units - req.steps_done, 0)
         return ClusterView(
             workers=self.workers, registry=self.registry, demand=demand,
-            arrival_rate={k: st[1] for k, st in self._arrivals.items()},
-            preempt_rate={k: st[1] for k, st in self._preempts.items()},
-            now=self.clock() if now is None else now)
+            arrival_rate=self._decayed(self._arrivals, t),
+            preempt_rate=self._decayed(self._preempts, t),
+            forecast_rate=self.forecaster.snapshot(t),
+            backlog_units=backlog,
+            request_units={k: (m[1] / m[0], m[2] / m[0])
+                           for k, m in self._req_units.items() if m[0]},
+            now=t)
+
+    @staticmethod
+    def _decayed(table: Dict[str, List[float]], t: float
+                 ) -> Dict[str, float]:
+        """EWMA snapshots decayed to ``t``.  ``_note_event`` only updates
+        a rate AT event times, so a recipe that stops arriving would keep
+        its last (high) rate forever; reading through this decay means
+        policies never act on frozen demand.  Pure — the stored state is
+        untouched, so the next event's ``alpha`` blend is unchanged."""
+        out: Dict[str, float] = {}
+        for k, st in table.items():
+            dt = max(t - st[0], 0.0)
+            out[k] = st[1] * math.exp(-dt / ARRIVAL_EWMA_TAU_S)
+        return out
 
     @staticmethod
     def _note_event(table: Dict[str, List[float]], key: str,
@@ -331,6 +369,7 @@ class Scheduler:
 
     def _note_arrival(self, key: str, t: float) -> None:
         self._note_event(self._arrivals, key, t)
+        self.forecaster.note(key, t)
 
     def ingress(self, request: Request) -> Request:
         """The front door: route through the serving gateway when one is
@@ -374,6 +413,11 @@ class Scheduler:
         else:
             lane.append(request)
         self.submitted += 1
+        m = self._req_units.setdefault(request.recipe_key,
+                                       [0.0, 0.0, 0.0])
+        m[0] += 1
+        m[1] += request.prompt_units
+        m[2] += request.decode_steps
         self._note_arrival(request.recipe_key, request.arrival_s)
 
     def record_terminal(self, request: Request, outcome: str,
@@ -442,6 +486,8 @@ class Scheduler:
         worker.joined_s = now
         self.workers[worker.worker_id] = worker
         self.worker_events.append((now, len(self.workers)))
+        cls = worker.device.name
+        self.pool_joins[cls] = self.pool_joins.get(cls, 0) + 1
 
     def on_evict(self, worker_id: str, now: float = 0.0) -> List[Request]:
         """Worker reclaimed with no grace period. Returns requeued requests.
@@ -457,6 +503,8 @@ class Scheduler:
         if worker is None:
             return []
         self.worker_events.append((now, len(self.workers)))
+        cls = worker.device.name
+        self.pool_evictions[cls] = self.pool_evictions.get(cls, 0) + 1
         # the plane refunds the worker's in-flight staging ops and leaves
         # LOST tombstones it later turns into re-replication intents
         self.plane.drop_worker(worker_id, now)

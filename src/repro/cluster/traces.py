@@ -7,14 +7,47 @@ factory reconciles against.  Three families, mirroring the evaluation:
 * ``drain``             — pv5: 15 min stable, then -1 GPU/min to zero;
 * ``diurnal``           — pv6: availability follows the cluster's daily
                           load curve, noisy, time-of-day dependent.
+
+Beyond the smooth availability families, :class:`Storm` /
+:func:`storm_schedule` describe CORRELATED eviction storms — N workers
+reclaimed in one window, typically zone-correlated (a rack or power
+domain going away takes its neighbours together).  A trace shapes the
+*ceiling* the factory may acquire under; a storm schedule names discrete
+loss events the :class:`~repro.cluster.forecast.ChurnInjector` fires
+through the scheduler's eviction path.
 """
 from __future__ import annotations
 
 import math
 import random
+from dataclasses import dataclass
 from typing import List, Tuple
 
 Trace = List[Tuple[float, int]]
+
+
+@dataclass(frozen=True)
+class Storm:
+    """One correlated eviction event: ``n_workers`` lost at ``t_s``.
+
+    ``zone_correlated`` drains a population-weighted seed zone first
+    (spilling into neighbours only when it runs dry); ``revoke_staging``
+    prefers victims that are mid-staging — the worst case for the
+    context plane, which must refund their in-flight ops."""
+    t_s: float
+    n_workers: int
+    zone_correlated: bool = True
+    revoke_staging: bool = False
+
+
+def storm_schedule(first_s: float, every_s: float, n_storms: int,
+                   n_workers: int, *, zone_correlated: bool = True,
+                   revoke_staging: bool = False) -> List[Storm]:
+    """A regular train of ``n_storms`` identical storms."""
+    return [Storm(first_s + i * every_s, n_workers,
+                  zone_correlated=zone_correlated,
+                  revoke_staging=revoke_staging)
+            for i in range(n_storms)]
 
 
 def constant(n: int) -> Trace:

@@ -309,6 +309,17 @@ class ClusterView:
     # slot-pool pressure the arrival rate cannot see — the warm-pool
     # policy converts it into extra replicas (WarmPoolPolicy.preempt_horizon_s)
     preempt_rate: Mapping[str, float] = field(default_factory=dict)
+    # per-recipe FORECAST arrival rate (req/s): the DemandForecaster's
+    # trend + burst view of where arrival_rate is heading — what the
+    # elastic factory and WarmPoolPolicy.forecast_horizon_s act on
+    forecast_rate: Mapping[str, float] = field(default_factory=dict)
+    # per-recipe work units still owed (queued + running, minus steps
+    # already done) — the backlog term of the elastic capacity model
+    backlog_units: Mapping[str, float] = field(default_factory=dict)
+    # per-recipe observed mean (prompt_units, decode_steps) per request:
+    # converts a request rate into per-phase unit rates
+    request_units: Mapping[str, Tuple[float, float]] = \
+        field(default_factory=dict)
     now: float = 0.0
 
     @property
@@ -359,6 +370,11 @@ class ContextPlane:
         # request_id -> in-flight KV_SHIP op (disaggregation handoffs are
         # per-REQUEST, so they cannot share the residency-keyed table)
         self._inflight_ships: Dict[int, PlanOp] = {}
+        # worker_id -> time its FIRST residency turned READY ("warm").
+        # The owning scheduler installs its clock; acquire lead time
+        # (factory decision -> warm) in pool_summary() reads this.
+        self.clock: Any = lambda: 0.0
+        self.first_ready_s: Dict[str, float] = {}
         self._tombstones: Dict[str, int] = {}     # recipe -> lost READY copies
         # preemption KV movement, priced per zone like everything else the
         # plane moves.  Spills are WORKER-LOCAL (device -> host, no peer
@@ -528,6 +544,7 @@ class ContextPlane:
         priced" (live mode, where loaders do not move plan bytes)."""
         self._inflight.pop((op.recipe_key, op.worker_id), None)
         self.registry.mark_ready(op.recipe_key, op.worker_id)
+        self.first_ready_s.setdefault(op.worker_id, self.clock())
         measured = op.nbytes if moved_bytes is None else moved_bytes
         self.moved.charge_op(PlanOp(op.kind, op.recipe_key, op.worker_id,
                                     nbytes=measured,
@@ -554,6 +571,7 @@ class ContextPlane:
 
     def note_ready(self, key: str, worker_id: str) -> None:
         self.registry.mark_ready(key, worker_id)
+        self.first_ready_s.setdefault(worker_id, self.clock())
 
     def note_spilled(self, key: str, worker_id: str) -> None:
         self.registry.mark_spilled(key, worker_id)

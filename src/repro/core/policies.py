@@ -169,12 +169,19 @@ class WarmPoolPolicy:
     suspended requests already arrived.  Each preemption expected within
     the horizon counts as one task of backlog, so the pool grows where
     slots are being fought over.
+
+    ``forecast_horizon_s > 0`` reads ``ClusterView.forecast_rate`` — the
+    :class:`~repro.cluster.forecast.DemandForecaster`'s trend + burst
+    view — instead of waiting for the EWMA to catch up: during a burst
+    the forecast is pinned high, so the warm pool widens BEFORE the
+    backlog forms and stays wide through the burst's hold period.
     """
     tasks_per_replica: int = 8      # backlog one warm replica absorbs
     max_fraction: float = 0.5       # pool share one recipe may pre-claim
     min_replicas: int = 1           # keep-warm floor while demand exists
     arrival_horizon_s: float = 0.0  # EWMA look-ahead (0 = reactive only)
     preempt_horizon_s: float = 0.0  # preemption-storm look-ahead
+    forecast_horizon_s: float = 0.0  # trend/burst forecast look-ahead
 
     def target_replicas(self, demand_tasks: float, n_workers: int) -> int:
         if demand_tasks <= 0 or n_workers <= 0:
@@ -195,6 +202,9 @@ class WarmPoolPolicy:
             if self.preempt_horizon_s > 0:
                 demand += view.preempt_rate.get(key, 0.0) \
                     * self.preempt_horizon_s
+            if self.forecast_horizon_s > 0:
+                demand += view.forecast_rate.get(key, 0.0) \
+                    * self.forecast_horizon_s
             want = self.target_replicas(demand, view.n_workers)
             have = len(reg.ready_workers(key) | reg.staging_workers(key))
             if want > have:

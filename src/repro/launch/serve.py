@@ -26,7 +26,8 @@ import time
 
 from repro.cluster import (Application, Gateway, LiveExecutor, Scheduler,
                            Worker, format_class_latency, format_gateway,
-                           format_latency, format_zone_bytes)
+                           format_latency, format_pool, format_zone_bytes,
+                           pool_summary)
 from repro.cluster.hardware import GPU_CATALOG
 from repro.configs import get_smoke_config
 from repro.core import MODES
@@ -133,6 +134,9 @@ def main(argv=None) -> int:
     if args.stream:
         print(format_class_latency(app.class_latency_summary()))
         print(format_gateway(gw))
+        # supply-side view: per-class joins/evictions (no factory in the
+        # live path — target/lead-time rows appear only under one)
+        print(format_pool(pool_summary(sched)))
         print(f"  admissions into live batches: {sched.admissions}  "
               f"preemptions: {sched.preemptions}")
     # context-plane run summary: per-zone transfer bytes + op counters

@@ -1,0 +1,84 @@
+"""Hypothesis property tests on the elastic-supply contract.
+
+The policy's two guarantees (see ElasticPolicy's docstring) must hold
+for ANY arrival schedule and ceiling, not just the benchmark scenarios:
+pool targets stay within [0, ceiling] at every DES event, and the
+hysteresis/cooldown contract forbids acquire->release flip-flop on a
+boundary-oscillating demand signal.
+"""
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (see requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.cluster import (Application, ChurnInjector, ElasticPolicy,
+                           Storm, make_sim)
+
+from test_forecast import A10, AP, RECIPE, _FakeView
+
+schedules = st.lists(
+    st.tuples(st.integers(0, 60),               # arrival second
+              st.integers(1, 6)),               # decode steps
+    min_size=1, max_size=30)
+
+
+@given(schedules, st.integers(2, 8), st.booleans())
+@settings(max_examples=20, deadline=None)
+def test_target_and_pool_bounded_at_every_des_event(schedule, ceiling,
+                                                    with_storm):
+    """The decided target and the actual pool never leave
+    [0, availability ceiling], at any point in the run — including
+    through a mid-run eviction storm and its re-acquire suppression."""
+    policy = ElasticPolicy(signal="forecast", active_params=AP)
+    sched, ex, fac = make_sim(devices=[A10] * 4,
+                              trace=[(0.0, ceiling)],
+                              policy=policy, tick_s=5.0)
+    app = Application(sched)
+    key = app.register(RECIPE, active_params=AP)
+    app.submit_stream(ex, [dict(recipe_key=key, decode_steps=steps,
+                                arrival_s=float(t))
+                           for t, steps in schedule])
+    if with_storm:
+        inj = ChurnInjector(ex, [Storm(10.0, 2)], factory=fac,
+                            seed=0, suppress_s=15.0)
+        inj.arm()
+    ex.pump()
+    while ex.loop.step():
+        assert 0 <= fac.target <= ceiling, \
+            f"target {fac.target} outside [0, {ceiling}] " \
+            f"at t={ex.loop.now:.2f}"
+        assert len(sched.workers) <= ceiling, \
+            f"pool {len(sched.workers)} above ceiling {ceiling} " \
+            f"at t={ex.loop.now:.2f}"
+    assert sched.done, "run never drained"
+
+
+@given(st.lists(st.floats(0.1, 60.0), min_size=4, max_size=40),
+       st.floats(0.05, 0.5))
+@settings(max_examples=50, deadline=None)
+def test_no_flip_flop_within_cooldowns(rates, hysteresis):
+    """Whatever the demand oscillation, consecutive voluntary scale
+    actions respect the shared cooldown clock: an action following an
+    acquire waits at least acquire_cooldown_s, a release at least
+    release_cooldown_s — so a rate bouncing across a hysteresis
+    boundary cannot acquire-then-release in quick succession."""
+    pol = ElasticPolicy(supply=[A10], active_params=AP,
+                        hysteresis=hysteresis)
+    cur, t = 1, 0.0
+    events = []
+    for r in rates:
+        t += 5.0
+        new = pol.decide(_FakeView(r), current=cur, ceiling=1000, now=t)
+        assert new >= 0
+        if new != cur:
+            events.append((t, "up" if new > cur else "down"))
+            cur = new
+    for (t1, _), (t2, d2) in zip(events, events[1:]):
+        gap = t2 - t1
+        if d2 == "down":
+            assert gap >= pol.release_cooldown_s, \
+                f"release {gap:.0f}s after the previous scale action"
+        else:
+            assert gap >= pol.acquire_cooldown_s, \
+                f"acquire {gap:.0f}s after the previous scale action"

@@ -1,0 +1,357 @@
+"""Forecast-aware elastic supply: forecaster, policy, factory, storms."""
+import math
+
+import pytest
+
+from repro.core import PERVASIVE, WarmPoolPolicy
+from repro.cluster import (Application, ChurnInjector, DemandForecaster,
+                           ElasticPolicy, GPU_CATALOG, Scheduler, Storm,
+                           Worker, format_pool, make_sim, pool_summary,
+                           storm_schedule)
+from repro.cluster.scheduler import ARRIVAL_EWMA_TAU_S
+from repro.configs import get_config
+from repro.core import model_context_recipe
+
+CFG = get_config("smollm2-1.7b")
+RECIPE = model_context_recipe(CFG, include_compile=False)
+AP = CFG.n_active_params()
+A10 = GPU_CATALOG["NVIDIA A10"]
+
+
+def feed(fc, key, rate, t0, t1):
+    """Poisson-free steady arrivals at ``rate``/s over [t0, t1)."""
+    t = t0
+    while t < t1:
+        fc.note(key, t)
+        t += 1.0 / rate
+
+
+class TestDemandForecaster:
+    def test_steady_rate_forecast_tracks_rate(self):
+        fc = DemandForecaster()
+        feed(fc, "k", 5.0, 0.0, 120.0)
+        assert fc.trailing_rate("k", 120.0) == pytest.approx(5.0, rel=0.1)
+        assert fc.forecast("k", 120.0) == pytest.approx(5.0, rel=0.25)
+
+    def test_rising_trend_extrapolates_above_current(self):
+        fc = DemandForecaster(burst_factor=100.0)   # burst detector off
+        for i in range(12):                         # 1/s .. 12/s ramp
+            feed(fc, "k", float(i + 1), i * 10.0, (i + 1) * 10.0)
+        now = 120.0
+        assert fc.forecast("k", now) > fc.trailing_rate("k", now)
+
+    def test_burst_pins_forecast_then_expires(self):
+        fc = DemandForecaster(burst_hold_s=60.0)
+        feed(fc, "k", 1.0, 0.0, 100.0)
+        feed(fc, "k", 12.0, 100.0, 110.0)           # 12x jump
+        assert fc.burst_active("k", 110.0)
+        assert fc.forecast("k", 110.0) >= 10.0
+        # no further arrivals: the pin holds, then expires
+        assert fc.forecast("k", 150.0) >= 10.0
+        assert not fc.burst_active("k", 300.0)
+        assert fc.forecast("k", 300.0) < 2.0
+
+    def test_redetection_extends_and_raises_pin(self):
+        fc = DemandForecaster(burst_hold_s=60.0)
+        feed(fc, "k", 1.0, 0.0, 100.0)
+        n0 = fc.bursts_detected          # cold start may count as one
+        feed(fc, "k", 10.0, 100.0, 104.0)
+        assert fc.bursts_detected == n0 + 1
+        hold0 = fc._burst["k"][0]
+        feed(fc, "k", 20.0, 104.0, 108.0)           # raise mid-burst
+        assert fc.bursts_detected == n0 + 1         # same burst, extended
+        assert fc._burst["k"][0] > hold0
+        assert fc.forecast("k", 108.0) >= 15.0
+
+    def test_min_burst_events_guards_fresh_window(self):
+        fc = DemandForecaster(min_burst_events=4)
+        # long steady feed so the cold-start pin (0 -> 1/s is a jump
+        # too) has expired by the probe time
+        feed(fc, "k", 1.0, 0.0, 300.0)
+        assert not fc.burst_active("k", 300.0)
+        n0 = fc.bursts_detected
+        fc.note("k", 300.0)                         # 1 event, new window
+        assert not fc.burst_active("k", 300.1)
+        assert fc.bursts_detected == n0
+
+    def test_idle_recipe_decays_to_zero(self):
+        fc = DemandForecaster()
+        feed(fc, "k", 8.0, 0.0, 60.0)
+        assert fc.forecast("k", 60.0) > 4.0
+        # 12 empty windows later the series is all zeros
+        assert fc.forecast("k", 60.0 + 12 * 10.0 + 5.0) == 0.0
+
+    def test_snapshot_covers_all_keys(self):
+        fc = DemandForecaster()
+        feed(fc, "a", 2.0, 0.0, 50.0)
+        feed(fc, "b", 4.0, 0.0, 50.0)
+        snap = fc.snapshot(50.0)
+        assert set(snap) == {"a", "b"}
+        assert snap["b"] > snap["a"]
+
+
+class TestEwmaStaleness:
+    """Satellite: ClusterView EWMAs decay to the read time — a recipe
+    that stopped arriving no longer reports its last-event rate."""
+
+    def _sched_with_arrivals(self):
+        sched = Scheduler()
+        key = sched.register_context(RECIPE)
+        app = Application(sched)
+        for i in range(60):
+            sched.submit(app.make_request(key, decode_steps=1,
+                                          arrival_s=i * 0.5))
+        return sched, key
+
+    def test_view_rate_decays_without_new_events(self):
+        sched, key = self._sched_with_arrivals()
+        at_end = sched.view(30.0).arrival_rate[key]
+        later = sched.view(30.0 + ARRIVAL_EWMA_TAU_S).arrival_rate[key]
+        much_later = sched.view(30.0 + 5 * ARRIVAL_EWMA_TAU_S) \
+            .arrival_rate[key]
+        assert at_end > 1.0
+        assert later == pytest.approx(at_end * math.exp(-1.0), rel=1e-6)
+        assert much_later < 0.02 * at_end
+
+    def test_read_is_pure(self):
+        sched, key = self._sched_with_arrivals()
+        first = sched.view(100.0).arrival_rate[key]
+        again = sched.view(100.0).arrival_rate[key]
+        assert first == again
+        # reading at a later time did not corrupt the stored snapshot
+        sched.view(1000.0)
+        assert sched.view(100.0).arrival_rate[key] == first
+
+    def test_view_publishes_forecast_and_units(self):
+        sched, key = self._sched_with_arrivals()
+        v = sched.view(30.0)
+        assert v.forecast_rate[key] > 0
+        prompt_mean, decode_mean = v.request_units[key]
+        assert prompt_mean >= 0.0 and decode_mean == 1.0
+        assert v.backlog_units[key] > 0          # nothing ran yet
+
+
+class _FakeView:
+    def __init__(self, rate, *, backlog=0.0, units=(1.0, 6.0)):
+        self.forecast_rate = {"k": rate}
+        self.arrival_rate = {"k": rate}
+        self.backlog_units = {"k": backlog}
+        self.request_units = {"k": units}
+        self.demand = {"k": 1}
+
+
+class TestElasticPolicy:
+    def _policy(self, **kw):
+        return ElasticPolicy(supply=[A10], active_params=AP, **kw)
+
+    def test_target_scales_with_demand(self):
+        pol = self._policy()
+        lo = pol.target_workers(_FakeView(2.0))
+        hi = pol.target_workers(_FakeView(20.0))
+        assert 0 < lo < hi
+
+    def test_backlog_adds_capacity(self):
+        pol = self._policy()
+        assert pol.target_workers(_FakeView(2.0, backlog=5000.0)) \
+            > pol.target_workers(_FakeView(2.0))
+
+    def test_decide_never_exceeds_ceiling(self):
+        pol = self._policy()
+        assert pol.decide(_FakeView(1000.0), current=4, ceiling=10,
+                          now=0.0) <= 10
+
+    def test_ceiling_breach_sheds_immediately(self):
+        pol = self._policy()
+        pol.decide(_FakeView(1000.0), current=4, ceiling=50, now=0.0)
+        # a ceiling drop below the pool size bypasses band AND cooldown
+        assert pol.decide(_FakeView(1000.0), current=40, ceiling=8,
+                          now=1.0) == 8
+
+    def test_hysteresis_dead_band_holds(self):
+        pol = self._policy(hysteresis=0.5)
+        view = _FakeView(2.0)
+        want = pol.target_workers(view)
+        cur = want + 1                   # within 50% of the raw target
+        assert pol.decide(view, current=cur, ceiling=100,
+                          now=1000.0) == cur
+
+    def test_shared_cooldown_blocks_flip_flop(self):
+        pol = self._policy(hysteresis=0.0)
+        up = pol.decide(_FakeView(50.0), current=1, ceiling=100, now=0.0)
+        assert up > 1
+        # demand collapses right after the acquire: release must wait a
+        # full release_cooldown_s from the acquire
+        t = pol.release_cooldown_s - 1.0
+        assert pol.decide(_FakeView(0.01), current=up, ceiling=100,
+                          now=t) == up
+        assert pol.decide(_FakeView(0.01), current=up, ceiling=100,
+                          now=pol.release_cooldown_s + 1.0) < up
+
+    def test_rejects_unknown_signal(self):
+        with pytest.raises(ValueError):
+            ElasticPolicy(signal="oracle")
+
+    def test_ewma_signal_reads_arrival_rate(self):
+        pol = self._policy(signal="ewma")
+        v = _FakeView(10.0)
+        v.forecast_rate = {"k": 0.0}     # forecast says idle; EWMA not
+        assert pol.target_workers(v) > 1
+
+
+def run_elastic(arrival_rate=10.0, n=300, ceiling=12, until=None,
+                storms=(), suppress_s=0.0, **policy_kw):
+    policy = ElasticPolicy(signal="forecast", active_params=AP,
+                           **policy_kw)
+    sched, ex, fac = make_sim(devices=[A10] * 4, trace=[(0.0, ceiling)],
+                              warm_pool=WarmPoolPolicy(),
+                              policy=policy, tick_s=5.0)
+    app = Application(sched)
+    key = app.register(RECIPE, active_params=AP)
+    app.submit_stream(ex, [dict(recipe_key=key, decode_steps=4,
+                                arrival_s=i / arrival_rate)
+                           for i in range(n)])
+    inj = ChurnInjector(ex, storms, factory=fac, seed=7,
+                        suppress_s=suppress_s)
+    inj.arm()
+    ex.run(until=until)
+    return sched, ex, fac, inj
+
+
+class TestFactoryElasticMode:
+    def test_pool_sized_by_demand_within_ceiling(self):
+        sched, ex, fac, _ = run_elastic(ceiling=6)
+        assert sched.done
+        assert fac.scale_log, "the policy never scaled the pool"
+        assert 0 < len(sched.workers) <= 6
+        assert fac.acquire_log, "acquires were not stamped"
+
+    def test_pool_releases_when_demand_decays(self):
+        # a dense burst then a sparse trickle: the forecast decays, the
+        # policy releases mid-run (the trickle keeps the sim alive)
+        policy = ElasticPolicy(signal="forecast", active_params=AP)
+        sched, ex, fac = make_sim(devices=[A10] * 4,
+                                  trace=[(0.0, 12)],
+                                  warm_pool=WarmPoolPolicy(),
+                                  policy=policy, tick_s=5.0)
+        app = Application(sched)
+        key = app.register(RECIPE, active_params=AP)
+        specs = [dict(recipe_key=key, decode_steps=4, arrival_s=i / 10.0)
+                 for i in range(300)]
+        specs += [dict(recipe_key=key, decode_steps=1,
+                       arrival_s=100.0 + 60.0 * i) for i in range(8)]
+        app.submit_stream(ex, specs)
+        ex.run()
+        assert sched.done
+        peak = max(to for (_, _, to) in fac.scale_log)
+        assert fac.target < peak, "pool never released after the burst"
+        assert any(to < frm for (_, frm, to) in fac.scale_log)
+
+    def test_restriction_lowers_effective_ceiling_until_expiry(self):
+        sched, ex, fac, _ = run_elastic(until=1.0, ceiling=10)
+        fac.restrict(4, until_s=50.0)
+        assert fac.effective_ceiling(10.0) == 6
+        assert fac.effective_ceiling(60.0) == 10   # lapsed
+
+    def test_storm_recovers_without_leaks(self):
+        sched, ex, fac, inj = run_elastic(
+            n=600, storms=[Storm(20.0, 3, zone_correlated=True)],
+            suppress_s=10.0)
+        assert inj.killed == 3
+        assert sched.done
+        plane = sched.plane
+        assert plane.inflight_ops == 0
+        assert plane.planned.as_dict() == plane.moved.as_dict()
+        for w in sched.workers.values():
+            for lib in w.libraries.values():
+                assert not lib.batch
+
+    def test_legacy_trace_mode_unchanged(self):
+        # no policy: the factory tracks the trace exactly as before
+        sched, ex, fac = make_sim(devices=[A10] * 4,
+                                  trace=[(0.0, 3), (50.0, 1)])
+        key = sched.register_context(RECIPE)
+        sched.submit_sweep(key, 500, 50, PERVASIVE, active_params=AP)
+        ex.run()
+        assert sched.done
+        assert fac.policy is None and fac.scale_log == []
+
+
+class TestChurnInjector:
+    def _pool(self, n, workers_per_zone=4):
+        sched, ex, fac = make_sim(devices=[A10] * 4,
+                                  workers_per_zone=workers_per_zone)
+        fac.reconcile(n)
+        return sched, ex
+
+    def test_zone_correlated_drains_one_zone_first(self):
+        sched, ex = self._pool(12, workers_per_zone=4)   # z0 z1 z2
+        inj = ChurnInjector(ex, [Storm(0.0, 4)], seed=0)
+        victims = inj._pick_victims(Storm(0.0, 4))
+        assert len(victims) == 4
+        assert len({w.zone for w in victims}) == 1, \
+            "4 victims from a 4-per-zone pool must share one zone"
+
+    def test_zone_spill_by_population(self):
+        sched, ex = self._pool(6, workers_per_zone=4)    # z0 x4, z1 x2
+        inj = ChurnInjector(ex, [], seed=1)
+        victims = inj._pick_victims(Storm(0.0, 6))
+        assert len(victims) == 6                         # whole pool
+
+    def test_revoke_staging_picks_staging_first(self):
+        sched, ex = self._pool(6)
+        staged = list(sched.workers.values())[2]
+        staged.staging = True
+        inj = ChurnInjector(ex, [], seed=0)
+        victims = inj._pick_victims(Storm(0.0, 1, revoke_staging=True))
+        assert victims == [staged]
+
+    def test_fire_evicts_and_logs(self):
+        sched, ex = self._pool(8)
+        inj = ChurnInjector(ex, [Storm(5.0, 3)], seed=0)
+        inj.arm()
+        ex.loop.run(until=10.0)
+        assert inj.killed == 3
+        assert len(sched.workers) == 5
+        assert inj.storm_log == [(5.0, 3)]
+
+    def test_arm_twice_rejected(self):
+        sched, ex = self._pool(2)
+        inj = ChurnInjector(ex, [], seed=0)
+        inj.arm()
+        with pytest.raises(AssertionError):
+            inj.arm()
+
+    def test_storm_schedule_builder(self):
+        train = storm_schedule(100.0, 50.0, 3, 8, revoke_staging=True)
+        assert [s.t_s for s in train] == [100.0, 150.0, 200.0]
+        assert all(s.n_workers == 8 and s.revoke_staging for s in train)
+
+
+class TestPoolObservability:
+    def test_join_evict_counters_by_class(self):
+        sched = Scheduler()
+        sched.add_worker(Worker(A10, zone="z0"))
+        w2 = Worker(A10, zone="z0")
+        sched.add_worker(w2)
+        sched.on_evict(w2.worker_id)
+        s = pool_summary(sched)
+        assert s["joins"] == {"NVIDIA A10": 2}
+        assert s["evictions"] == {"NVIDIA A10": 1}
+        assert s["by_class"]["NVIDIA A10"] == 1
+
+    def test_summary_with_factory_has_targets_and_lead(self):
+        sched, ex, fac, _ = run_elastic(ceiling=6)
+        s = pool_summary(sched, fac)
+        assert s["target"] == fac.target
+        assert s["ceiling"] == 6
+        assert s["n_acquired"] == len(fac.acquire_log)
+        assert s["n_warmed"] > 0
+        assert s["acquire_lead_p50_s"] >= 0.0
+        text = format_pool(s, label="t")
+        assert "target" in text and "NVIDIA A10" in text
+
+    def test_format_pool_without_factory(self):
+        sched = Scheduler()
+        sched.add_worker(Worker(A10, zone="z0"))
+        text = format_pool(pool_summary(sched))
+        assert "1 worker" in text and "target" not in text
