@@ -74,9 +74,10 @@ def main(n_total: int = 150_000):
     return results
 
 
-def main_storms(n_total: int = 150_000, batch: int = 10):
+def main_storms(n_total: int = 150_000, batch: int = 10, seed: int = 2):
     """pv6 trace ± correlated eviction storms (batch 10 → 10x the
-    request count of the Fig 7 runs above, all on the DES executor)."""
+    request count of the Fig 7 runs above, all on the DES executor).
+    ``seed`` fixes the storm victim sequence — same seed, same kills."""
     rep = Report("Fig 7b — pv6 availability + correlated eviction storms",
                  ["exp", "makespan_s", "killed", "goodput inf/s"])
     trace = traces.diurnal(10)
@@ -89,7 +90,7 @@ def main_storms(n_total: int = 150_000, batch: int = 10):
         key = sched.register_context(RECIPE)
         sched.submit_sweep(key, n_total, batch, PERVASIVE,
                            active_params=ACTIVE_PARAMS)
-        inj = ChurnInjector(ex, get_storms(), seed=2)
+        inj = ChurnInjector(ex, get_storms(), seed=seed)
         inj.arm()
         ex.pump()
         ex.loop.run(stop=lambda: sched.done)
@@ -121,5 +122,10 @@ def main_storms(n_total: int = 150_000, batch: int = 10):
 
 
 if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seed", type=int, default=2,
+                    help="storm victim-selection seed (reproducible runs)")
+    args = ap.parse_args()
     main()
-    main_storms()
+    main_storms(seed=args.seed)

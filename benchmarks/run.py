@@ -27,7 +27,7 @@ def main(argv=None) -> int:
                    bench_fig7_resilience, bench_claims, bench_roofline,
                    bench_batch_policy, bench_context_plane,
                    bench_continuous_batching, bench_disagg, bench_elastic,
-                   bench_gateway, bench_live_decode)
+                   bench_faults, bench_gateway, bench_live_decode)
 
     t0 = time.time()
     if args.smoke:
@@ -52,6 +52,12 @@ def main(argv=None) -> int:
         # reactive EWMA baseline on goodput under burst-then-storm at
         # equal completed work, with zero slot/byte leaks after storms
         bench_elastic.main(smoke=True)
+        # asserts checkpointed resume strictly beats restart-fresh on
+        # goodput AND wasted decode tokens under a seeded crash storm at
+        # equal completed work, crash detection within one lease, zero
+        # slot/page/byte leaks, and token-exact checkpoint/adopt resume
+        # on both KV layouts
+        bench_faults.main(smoke=True)
         bench_roofline.main()
         print(f"\nsmoke benchmarks done in {time.time()-t0:.1f}s")
         return 0
@@ -72,6 +78,7 @@ def main(argv=None) -> int:
     bench_gateway.main()
     bench_disagg.main()
     bench_elastic.main()
+    bench_faults.main()
     bench_live_decode.main()
     bench_roofline.main()
     print(f"\nall benchmarks done in {time.time()-t0:.1f}s")

@@ -50,15 +50,18 @@ from .observability import (ProgressMonitor, Snapshot,
                             format_latency, format_pool, format_snapshot,
                             format_zone_bytes, latency_summary, percentile,
                             pool_summary, zone_byte_summary)
-from .traces import Storm, storm_schedule
+from .traces import (FAULT_KINDS, Fault, Storm, fault_schedule,
+                     storm_schedule)
+from .faults import FailureDetector, FaultInjector
 from . import traces
 
 __all__ = [
     "Application", "Assignment", "BATCH", "ChurnInjector", "ClassPolicy",
     "ClusterSpec",
     "DECODE", "DECODE_FIXED_FRAC", "DemandForecaster", "DeviceModel",
-    "ElasticPolicy", "EventLoop", "Factory",
-    "PREFILL",
+    "ElasticPolicy", "EventLoop", "FAULT_KINDS", "Factory",
+    "FailureDetector", "Fault", "FaultInjector", "PREFILL",
+    "fault_schedule",
     "GPU_CATALOG", "Gateway", "INTERACTIVE", "LiveExecutor",
     "PAPER_CLUSTER", "REF_ACTIVE_PARAMS", "REJECTED", "Request",
     "RequestRecord", "SLOClass", "Scheduler", "SimExecutor", "Storm",

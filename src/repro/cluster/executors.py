@@ -23,6 +23,7 @@ benchmark baseline continuous admission is measured against.
 """
 from __future__ import annotations
 
+import random
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -102,7 +103,8 @@ class _PlanOpExecution:
         plane.op_started(op)
         self._materialize_op(op, w, recipe)
 
-    def _materialize_op(self, op: PlanOp, w: Worker, recipe) -> None:
+    def _materialize_op(self, op: PlanOp, w: Worker, recipe,
+                        attempt: int = 0) -> None:
         raise NotImplementedError
 
 
@@ -130,6 +132,9 @@ class _StreamRun:
         self.step_s = 0.0
         self.begun = False
         self._timer = None
+        # steps_done at each member's last checkpoint ATTEMPT (landed or
+        # budget-deferred) — the cadence counter for ckpt_every_steps
+        self._ckpt_mark: Dict[int, int] = {}
 
     # -- lifecycle ------------------------------------------------------
     def alive(self) -> bool:
@@ -179,6 +184,9 @@ class _StreamRun:
         if self._timer is not None:
             self._timer.cancel()
             self._timer = None
+        if self.w.frozen_s is not None:
+            return              # crashed/hung: no future step completes;
+                                # the FailureDetector's eviction requeues
         if not self.lib.batch:
             self.close()
             return
@@ -231,7 +239,19 @@ class _StreamRun:
         at the boundaries in between.  A joiner is due only at
         boundaries at/after its admission time — lazily settled PAST
         boundaries must never retro-activate it (it would be credited
-        with steps it never ran)."""
+        with steps it never ran).
+
+        With ``Scheduler.ckpt_every_steps`` set, segments are ALSO
+        clamped at each member's next checkpoint-cadence boundary, where
+        the member's KV snapshot is exported to another failure zone as
+        a KV_CKPT plane op — keeping the event count O(membership
+        changes + checkpoints), never O(steps).  A frozen (crashed or
+        hung) worker settles only up to the instant it died: a dead GPU
+        completes nothing, however late the detector notices."""
+        fz = self.w.frozen_s
+        if fz is not None:
+            t = min(t, fz)
+        every = self.ex.sched.ckpt_every_steps
         while self.lib.stepping > 0 and self.step_s > 0:
             span = (t - self.t_boundary) + _EPS
             if span < self.step_s:
@@ -243,6 +263,13 @@ class _StreamRun:
             if self._due_joiners(self.t_boundary + self.step_s):
                 k = 1                 # membership changes next boundary
             k = max(1, min(k, min_rem))
+            if every:
+                to_ckpt = min(
+                    every - (r.steps_done - self._ckpt_mark.setdefault(
+                        rid, r.steps_done))
+                    for rid, r in self.lib.batch.items()
+                    if rid not in self.lib.joining)
+                k = max(1, min(k, to_ckpt))
             stepping = [r for rid, r in self.lib.batch.items()
                         if rid not in self.lib.joining]
             t_seg0 = self.t_boundary
@@ -254,11 +281,24 @@ class _StreamRun:
                 if r.t_first_step is None:
                     r.t_first_step = t_seg0 + self.step_s
             for r in finished:
+                self._ckpt_mark.pop(r.request_id, None)
+                # a finished request needs no checkpoint: refund any
+                # still-in-flight one so drained runs meter to parity
+                self.ex.sched.plane.kv_ckpt_aborted(r.request_id,
+                                                    self.t_boundary)
                 a = self.assign.pop(r.request_id, None)
                 if a is not None:
                     self.ex.sched.on_complete(a, a.t_dispatch,
                                               self.t_boundary,
                                               t_first_step=r.t_first_step)
+            if every:
+                for rid, r in list(self.lib.batch.items()):
+                    if rid in self.lib.joining:
+                        continue
+                    mark = self._ckpt_mark.setdefault(rid, r.steps_done)
+                    if r.steps_done - mark >= every:
+                        self._ckpt_mark[rid] = r.steps_done
+                        self.ex._fire_ckpt(self, r, self.t_boundary)
             due = self._due_joiners(self.t_boundary)
             if due:                   # joiners enter at this boundary
                 self.lib.activate(due)
@@ -283,7 +323,8 @@ class SimExecutor(_PlanOpExecution):
 
     def __init__(self, scheduler: Scheduler, loop: Optional[EventLoop] = None,
                  *, prestage: bool = False, fanout_cap: int = 3,
-                 warm_pool: Optional[WarmPoolPolicy] = None):
+                 warm_pool: Optional[WarmPoolPolicy] = None,
+                 retry_seed: int = 0):
         self.sched = scheduler
         self.loop = loop or EventLoop()
         scheduler.clock = lambda: self.loop.now
@@ -295,6 +336,17 @@ class SimExecutor(_PlanOpExecution):
         self._fs_streams = 0
         self._peer_streams: Dict[str, int] = {}   # outbound per source
         self._streams: Dict[Tuple[str, str], _StreamRun] = {}
+        # transfer retry-with-backoff (docs/failure-model.md): an acquire
+        # op whose SOURCE died (or a FaultInjector transfer fault hit) is
+        # aborted-refunded and retried against an alternate source under
+        # capped exponential backoff with seeded jitter
+        self.retry_base_s = 0.5
+        self.retry_cap_s = 30.0
+        self.retry_jitter = 0.25
+        self._retry_rng = random.Random(retry_seed)
+        self._failed_transfers: set = set()   # (recipe_key, dst_worker)
+        self.transfer_retries = 0
+        self._ckpt_rr = 0               # round-robin ckpt-host cursor
         self._budget_retry = None       # pending deferred-replication timer
         self._prestage_retry = None     # deferred prestage-edge timer
         self._prestage_pending: set = set()   # recipes with deferred edges
@@ -367,7 +419,7 @@ class SimExecutor(_PlanOpExecution):
 
             def arrive(wid=edge.dst, src=edge.src):
                 w = self.sched.workers.get(wid)
-                if w is None:
+                if w is None or w.frozen_s is not None:
                     return                      # evicted while in flight
                 for k in w.make_room(recipe):
                     plane.note_spilled(k, wid)
@@ -381,7 +433,7 @@ class SimExecutor(_PlanOpExecution):
 
                 def ready_cb(wid=wid):
                     w = self.sched.workers.get(wid)
-                    if w is None:
+                    if w is None or w.frozen_s is not None:
                         return
                     w.staging = False
                     plane.note_ready(recipe_key, wid)
@@ -433,7 +485,8 @@ class SimExecutor(_PlanOpExecution):
         return len(plan.acquire_ops())
 
     # -- shared plan-op path: the sim's staging-time backend ---------------
-    def _materialize_op(self, op, w: Worker, recipe) -> None:
+    def _materialize_op(self, op, w: Worker, recipe,
+                        attempt: int = 0) -> None:
         lib = w.library_for(recipe)
         if op.kind is OpKind.PROMOTE:
             fetch_bw = None                     # promotion only, no fetch
@@ -454,11 +507,156 @@ class SimExecutor(_PlanOpExecution):
             w = self.sched.workers.get(wid)
             if w is None:
                 return                          # evicted: plane refunded
+            src = op.src_worker
+            src_w = self.sched.workers.get(src) if src is not None else None
+            failed = (op.recipe_key, wid) in self._failed_transfers
+            self._failed_transfers.discard((op.recipe_key, wid))
+            if failed or (src is not None and
+                          (src_w is None or src_w.frozen_s is not None)):
+                # the source died (or a transfer fault hit) mid-flight:
+                # abort-refund the op, then retry against an alternate
+                # source under capped backoff (never silently complete a
+                # copy whose bytes had no live origin)
+                self.sched.plane.op_aborted(op, self.loop.now)
+                self.transfer_retries += 1
+                self._retry_acquire(op.recipe_key, wid, recipe, attempt)
+                return
+            if w.frozen_s is not None:
+                return          # dest crashed silently: the detector's
+                                # eviction will refund this op
             w.staging = False
             self.sched.plane.op_completed(op, moved_bytes=cost.fetch_bytes)
             self.pump()
 
         self.loop.after(cost.total_s, ready_cb)
+
+    def _retry_acquire(self, key: str, wid: str, recipe,
+                       attempt: int) -> None:
+        """Re-attempt a failed acquire on ``wid`` after capped
+        exponential backoff with seeded jitter, against whatever source
+        the plane picks NOW (the dead one is tombstoned, so an alternate
+        ready peer or the shared fs wins)."""
+        delay = min(self.retry_base_s * (2 ** attempt), self.retry_cap_s)
+        delay *= 1.0 + self.retry_jitter * self._retry_rng.random()
+
+        def again():
+            sched = self.sched
+            w = sched.workers.get(wid)
+            if w is None or w.frozen_s is not None:
+                return                  # dest gone meanwhile
+            if w.has_ready(key):
+                return                  # another path already staged it
+            plane = sched.plane
+            view = sched.view(now=self.loop.now)
+            src = plane._pick_source(key, w, view)
+            nbytes = view.missing_bytes(w, recipe)
+            if src is None:
+                op = PlanOp(OpKind.FETCH, key, wid, nbytes=nbytes,
+                            dst_zone=w.zone)
+            else:
+                op = PlanOp(OpKind.PEER_COPY, key, wid, nbytes=nbytes,
+                            src_worker=src.worker_id, src_zone=src.zone,
+                            dst_zone=w.zone)
+            plane.commit(PlacementPlan(ops=[op]), now=self.loop.now)
+            plane.op_started(op)
+            self._materialize_op(op, w, recipe, attempt=attempt + 1)
+
+        self.loop.after(delay, again)
+
+    def fail_transfer(self, recipe_key: str, dst_worker: str) -> None:
+        """Mark the in-flight transfer for ``(recipe_key, dst_worker)``
+        as failed: its completion event aborts-refunds and retries with
+        backoff instead of landing (the FaultInjector's transfer
+        fault)."""
+        self._failed_transfers.add((recipe_key, dst_worker))
+
+    # -- crash safety: periodic KV checkpoint export -----------------------
+    def _ckpt_target(self, req, src: Worker) -> Optional[Worker]:
+        """A checkpoint host for ``req``: a live worker with the recipe
+        warm, preferring a DIFFERENT failure zone than the decode worker
+        (a zone-correlated storm must not take both copies)."""
+        sched = self.sched
+        ready = sched.registry.ready_workers(req.recipe_key)
+        # creation order, not lexical: worker ids come from a
+        # process-global counter, so lexical order (or anything keyed on
+        # raw id/request numbers) would make placement depend on how
+        # many workers unrelated runs in this process created first
+        cands = [sched.workers[wid]
+                 for wid in sorted(ready, key=lambda i: (len(i), i))
+                 if wid != src.worker_id and wid in sched.workers
+                 and sched.workers[wid].frozen_s is None]
+        if not cands:
+            return None
+        other_zone = [w for w in cands if w.zone != src.zone]
+        pool = other_zone or cands
+        # sticky while eligible: each landed snapshot then supersedes
+        # the previous one in place on the same host
+        for w in pool:
+            if w.worker_id == req.ckpt_worker:
+                return w
+        self._ckpt_rr += 1
+        return pool[self._ckpt_rr % len(pool)]
+
+    def _fire_ckpt(self, run: _StreamRun, req, t: float) -> None:
+        """Export one settled member's KV snapshot to a checkpoint host:
+        price it as a KV_CKPT plane op, admission-check the budget
+        window (a checkpoint the window cannot absorb is DEFERRED to the
+        next cadence boundary, never dropped), occupy an outbound peer
+        stream for the transfer, and record the landed checkpoint on the
+        request.  Stale-safe: an eviction of either endpoint aborts the
+        in-flight op and the landed event becomes a no-op."""
+        sched = self.sched
+        plane = sched.plane
+        w = run.w
+        rid = req.request_id
+        if rid in plane._inflight_ckpts:
+            return                  # previous snapshot still in transit
+        dst = self._ckpt_target(req, w)
+        if dst is None:
+            sched.kv_ckpts_deferred += 1
+            return
+        recipe = sched.registry.recipes[req.recipe_key]
+        nbytes = recipe.decode_slot_bytes(req.active_params)
+        op = plane.kv_ckpt_op(req.recipe_key, w.worker_id, dst.worker_id,
+                              nbytes, src_zone=w.zone, dst_zone=dst.zone)
+        if not plane.ckpt_admits(op, t):
+            sched.kv_ckpts_deferred += 1   # window full: next boundary
+            return
+        plane.commit_kv_ckpt(rid, op, now=t)
+        sched.kv_ckpts += 1
+        base = (self.cluster.peer_bw_cross if op.cross_zone
+                else self.cluster.peer_bw_local)
+        bw = base / (self._peer_streams.get(w.worker_id, 0) + 1)
+        delay = op.nbytes / bw if op.nbytes > 0 else 0.0
+        steps_at = req.steps_done
+        t_land = t + delay
+
+        def landed(op=op):
+            if plane._inflight_ckpts.get(rid) is not op:
+                return              # aborted (endpoint died): stale event
+            src_w = sched.workers.get(op.src_worker)
+            if src_w is None or src_w.frozen_s is not None:
+                # the source died mid-transfer: the bytes never all left
+                plane.kv_ckpt_aborted(rid, self.loop.now)
+                return
+            plane.kv_ckpt_completed(rid)
+            req.ckpt_worker = op.worker_id
+            req.ckpt_steps = steps_at
+            req.ckpt_nbytes = op.nbytes
+
+        if t_land <= self.loop.now:
+            # lazily settled history: this transfer already finished in
+            # simulated time (boundaries are materialised out of a bulk
+            # settle).  Completing it synchronously keeps chronology
+            # exact — the NEXT boundary in the same settle sees no
+            # in-flight snapshot and supersedes this one, so the last
+            # landed checkpoint is the newest whose transfer beat NOW
+            # (for a crashed worker: beat the crash instant).
+            landed()
+        else:
+            if delay > 0:
+                self._take_peer_stream(w.worker_id, delay)
+            self.loop.at(t_land, landed)
 
     # -- shared-filesystem contention (Challenge #5) -----------------------
     def _fs_bw(self) -> float:
@@ -629,13 +827,17 @@ class SimExecutor(_PlanOpExecution):
                                           req.prompt_units)
 
         def staged():
-            if wid in self.sched.workers and tid in self.sched.running:
+            if wid in self.sched.workers and tid in self.sched.running \
+                    and w.frozen_s is None:
                 self.sched.on_staged(a)
 
         def done():
             cur = self.sched.running.get(tid)
             if cur is None or cur[1] != wid:
                 return              # evicted mid-prefill: already requeued
+            if w.frozen_s is not None:
+                return              # crashed: nothing completed; the
+                                    # detector's eviction requeues
             self.sched.on_prefill_done(
                 a, t0, self.loop.now,
                 kv_nbytes=recipe.decode_slot_bytes(req.active_params))
@@ -679,7 +881,8 @@ class SimExecutor(_PlanOpExecution):
             self._streams[(wid, req.recipe_key)] = run
             if not a.warm:
                 def staged(run=run):
-                    if wid in self.sched.workers and run.alive():
+                    if wid in self.sched.workers and run.alive() \
+                            and run.w.frozen_s is None:
                         self.sched.on_staged(a)
                 self.loop.at(t0 + staging_s, staged)
             self.loop.at(t0 + staging_s + ship_s, run.begin)
@@ -692,7 +895,8 @@ class SimExecutor(_PlanOpExecution):
         tid = req.request_id
 
         def staged():
-            if wid in self.sched.workers and tid in self.sched.running:
+            if wid in self.sched.workers and tid in self.sched.running \
+                    and w.frozen_s is None:
                 self.sched.on_staged(a)
 
         def complete():
@@ -700,6 +904,8 @@ class SimExecutor(_PlanOpExecution):
             if cur is None or cur[1] != wid:
                 return                  # evicted mid-run; already requeued
                                         # (and possibly re-dispatched)
+            if w.frozen_s is not None:
+                return                  # crashed mid-run: no completion
             self.sched.on_complete(a, t0, self.loop.now,
                                    t_first_step=t0 + staging_s + ship_s
                                    + step_s)
@@ -780,7 +986,8 @@ class LiveExecutor(_PlanOpExecution):
         return len(plan.acquire_ops())
 
     # -- shared plan-op path: live staging really runs the loaders ---------
-    def _materialize_op(self, op, w: Worker, recipe) -> None:
+    def _materialize_op(self, op, w: Worker, recipe,
+                        attempt: int = 0) -> None:
         lib = w.library_for(recipe)
         if not lib.ready:
             lib.materialize()
@@ -904,6 +1111,7 @@ class LiveExecutor(_PlanOpExecution):
                if lib is not None and lib.context is not None else None)
         nbytes = dec.suspend(victim.request_id) if dec is not None else 0
         if nbytes:
+            victim.kv_nbytes = nbytes   # measured, not the sim estimate
             self.sched.plane.record_kv_spill(key, w.zone, nbytes)
         else:                           # nothing saved: back to scratch
             victim.suspended = False

@@ -223,11 +223,14 @@ def make_sim(devices: Optional[List[DeviceModel]] = None,
              link_budget: Optional[LinkBudget] = None,
              prestage: bool = False, disaggregate: bool = False,
              policy: Optional[ElasticPolicy] = None,
-             tick_s: float = 15.0):
+             tick_s: float = 15.0, ckpt_every_steps: Optional[int] = None,
+             retry_seed: int = 0):
     """Returns (scheduler, executor, factory) wired together."""
     sched = Scheduler(backfill=backfill, aging_bound=aging_bound,
                       link_budget=link_budget, disaggregate=disaggregate)
-    ex = SimExecutor(sched, prestage=prestage, warm_pool=warm_pool)
+    sched.ckpt_every_steps = ckpt_every_steps
+    ex = SimExecutor(sched, prestage=prestage, warm_pool=warm_pool,
+                     retry_seed=retry_seed)
     devices = devices if devices is not None else paper_20gpu_pool()
     fac = Factory(sched, ex, devices, workers_per_zone=workers_per_zone,
                   worker_shape=worker_shape, evict_priority=evict_priority,

@@ -1,0 +1,214 @@
+"""Failure detection and deterministic fault injection.
+
+The scheduler's eviction path (``Scheduler.on_evict``) was built for
+REVOKE — the cluster gives advance notice and the worker leaves cleanly.
+Opportunistic pools also fail silently: a node crash-stops (kernel
+panic, preempted VM, yanked power) or hangs (driver wedge, NIC brownout)
+with the process alive but decode frozen.  Neither announces itself, so
+both need a *detector* that converts silence into an eviction within a
+bounded window (docs/failure-model.md):
+
+* **CRASH** — the worker's heartbeat lease (renewed every ``lease_s``
+  since it joined) stops being renewed; the manager notices at the
+  first missed expiry, so detection latency is bounded by ``lease_s``.
+* **HANG / STRAGGLER** — the lease stays alive (the pilot process still
+  heartbeats) but the decode-step watchdog sees no step progress for
+  ``watchdog_s``; only then is the worker declared failed.
+
+Both funnel into the SAME ``on_evict`` path as a revocation — requeue,
+``plane.drop_worker`` refunds, recovery intents — with the failure
+class recorded in ``Scheduler.failure_log`` / ``evictions_by_cause``.
+
+:class:`FaultInjector` grows :class:`~repro.cluster.forecast.
+ChurnInjector` into a deterministic fault-schedule driver: seeded,
+reproducible :class:`~repro.cluster.traces.Fault` events firing crash /
+hang / clean-revoke / transfer-failure faults against a running sim.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .forecast import ChurnInjector
+from .traces import Fault
+
+
+class FailureDetector:
+    """Lease-based crash detection plus a decode-progress watchdog.
+
+    The sim models a crashed/hung worker by setting
+    ``Worker.frozen_s`` — the executor stops crediting progress past
+    that instant, but the SCHEDULER keeps routing to the worker until
+    this detector notices (exactly the realism the paper's opportunistic
+    setting demands: you cannot avoid dispatching to a node you do not
+    yet know is dead).
+
+    * :meth:`crash` freezes the worker and schedules the eviction at the
+      worker's next lease expiry — leases renew every ``lease_s``
+      seconds from ``joined_s``, so latency is in ``(0, lease_s]``.
+    * :meth:`hang` freezes the worker but keeps its lease alive; a
+      watchdog fires after ``watchdog_s`` and evicts only if no decode
+      step landed since the fault (a slow-but-alive worker survives).
+
+    ``detection_log`` records ``(worker_id, cause, t_fault, t_detect)``
+    for every conversion — tests assert the latency bound from it.
+    """
+
+    def __init__(self, executor, *, lease_s: float = 30.0,
+                 watchdog_s: Optional[float] = None):
+        if lease_s <= 0:
+            raise ValueError("lease_s must be positive")
+        self.ex = executor
+        self.sched = executor.sched
+        self.lease_s = lease_s
+        self.watchdog_s = watchdog_s if watchdog_s is not None \
+            else 2.0 * lease_s
+        self.detection_log: List[Tuple[str, str, float, float]] = []
+
+    # -- lease clock ----------------------------------------------------
+    def lease_expiry(self, worker, now: float) -> float:
+        """The first lease expiry AFTER ``now``: the earliest instant a
+        silent death at ``now`` becomes observable."""
+        since = max(0.0, now - worker.joined_s)
+        last_renewal = worker.joined_s + math.floor(
+            since / self.lease_s) * self.lease_s
+        return last_renewal + self.lease_s
+
+    # -- fault entry points ---------------------------------------------
+    def crash(self, worker_id: str, now: Optional[float] = None) -> None:
+        """Silent crash-stop: freeze the worker NOW; the eviction lands
+        at its next lease expiry (detection latency <= lease_s)."""
+        now = self.ex.loop.now if now is None else now
+        w = self.sched.workers.get(worker_id)
+        if w is None or w.frozen_s is not None:
+            return
+        # settle the worker's stream runs up to the crash instant FIRST:
+        # progress (and checkpoint exports) before the crash really
+        # happened, however lazily the sim was going to materialise them
+        self._settle_runs(worker_id, now)
+        w.frozen_s = now
+        t_detect = self.lease_expiry(w, now)
+
+        def expire():
+            if self.sched.workers.get(worker_id) is not w:
+                return              # revoked/detected through another path
+            self.detection_log.append(
+                (worker_id, "crash", now, self.ex.loop.now))
+            self.sched.on_evict(worker_id, self.ex.loop.now, cause="crash")
+            self.ex.pump()
+
+        self.ex.loop.at(max(t_detect, self.ex.loop.now), expire)
+
+    def hang(self, worker_id: str, now: Optional[float] = None) -> None:
+        """Hang/straggler: the worker stops stepping but its lease stays
+        renewed.  The step watchdog evicts after ``watchdog_s`` with no
+        progress; a worker that stepped in the window is left alone."""
+        now = self.ex.loop.now if now is None else now
+        w = self.sched.workers.get(worker_id)
+        if w is None or w.frozen_s is not None:
+            return
+        # settle the worker's stream runs up to NOW so the progress
+        # probe is not confused by lazily un-settled past boundaries
+        self._settle_runs(worker_id, now)
+        w.frozen_s = now
+        probe = self._progress(w)
+
+        def watchdog():
+            if self.sched.workers.get(worker_id) is not w:
+                return
+            if self._progress(w) != probe:
+                return              # stepped since the fault: not hung
+            self.detection_log.append(
+                (worker_id, "hang", now, self.ex.loop.now))
+            self.sched.on_evict(worker_id, self.ex.loop.now, cause="hang")
+            self.ex.pump()
+
+        self.ex.loop.after(self.watchdog_s, watchdog)
+
+    def _settle_runs(self, worker_id: str, now: float) -> None:
+        for (wid, _key), run in list(getattr(self.ex, "_streams",
+                                             {}).items()):
+            if wid == worker_id and run.alive():
+                run.settle(now)
+
+    def _progress(self, w) -> Tuple[int, int]:
+        """A monotone progress fingerprint: completions plus the decode
+        steps of every resident batch member."""
+        steps = sum(r.steps_done for lib in w.libraries.values()
+                    for r in lib.batch.values())
+        return (w.inferences_done, steps)
+
+
+class FaultInjector(ChurnInjector):
+    """Deterministic fault-schedule driver over a running sim.
+
+    Extends :class:`ChurnInjector` (which fires clean REVOKE storms)
+    with the full :data:`~repro.cluster.traces.FAULT_KINDS` taxonomy.
+    Victim selection reuses the parent's seeded storm machinery — zone
+    correlation and staging preference behave identically — so a crash
+    storm stresses the same correlated-loss paths a revocation storm
+    does, differing ONLY in how the loss becomes observable:
+
+    * ``revoke``   — immediate ``on_evict(cause="revoke")`` (parent path);
+    * ``crash``    — ``detector.crash``: silent freeze, lease-expiry evict;
+    * ``hang``     — ``detector.hang``: frozen but leased, watchdog evict;
+    * ``transfer`` — up to ``n_workers`` in-flight sourced acquires are
+      marked failed via ``executor.fail_transfer`` (abort-refund-retry
+      with backoff at their completion instant).
+
+    Same seed + same schedule => byte-identical victim sequence.
+    """
+
+    def __init__(self, executor, faults: Sequence[Fault], *,
+                 detector: Optional[FailureDetector] = None,
+                 factory=None, seed: int = 0, suppress_s: float = 0.0):
+        super().__init__(executor, faults, factory=factory, seed=seed,
+                         suppress_s=suppress_s)
+        if detector is None and any(f.kind in ("crash", "hang")
+                                    for f in faults):
+            raise ValueError(
+                "crash/hang faults need a FailureDetector "
+                "(silent failures are only observable through one)")
+        self.detector = detector
+        self.fault_log: List[Tuple[float, str, int]] = []  # (t, kind, n)
+
+    def _fire(self, fault: Fault) -> None:
+        now = self.ex.loop.now
+        if fault.kind == "transfer":
+            n = self._fail_transfers(fault.n_workers)
+            self.fault_log.append((now, "transfer", n))
+            return
+        victims = self._pick_victims(fault)
+        for w in victims:
+            if fault.kind == "revoke":
+                self.sched.on_evict(w.worker_id, now, cause="revoke")
+            elif fault.kind == "crash":
+                self.detector.crash(w.worker_id, now)
+            else:                           # hang
+                self.detector.hang(w.worker_id, now)
+        self.killed += len(victims)
+        self.fault_log.append((now, fault.kind, len(victims)))
+        self.storm_log.append((now, len(victims)))
+        if self.factory is not None and self.suppress_s > 0 and victims:
+            self.factory.restrict(len(victims),
+                                  until_s=now + self.suppress_s)
+        self.ex.pump()
+
+    def _fail_transfers(self, n: int) -> int:
+        """Mark up to ``n`` in-flight sourced transfers as failed (a
+        FETCH from the shared fs has no peer source to die, so only
+        peer-sourced ops are eligible)."""
+        plane = self.sched.plane
+        eligible = sorted(
+            (key_wid for key_wid, op in plane._inflight.items()
+             if op.src_worker is not None),
+            key=lambda kw: (kw[1], kw[0]))
+        hit = 0
+        for key, wid in eligible:
+            if hit >= n:
+                break
+            if (key, wid) in self.ex._failed_transfers:
+                continue
+            self.ex.fail_transfer(key, wid)
+            hit += 1
+        return hit

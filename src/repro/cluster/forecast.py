@@ -399,7 +399,9 @@ class ChurnInjector:
         now = self.ex.loop.now
         victims = self._pick_victims(storm)
         for w in victims:
-            self.sched.on_evict(w.worker_id, now)
+            # storms are clean advance-notice revocations; silent crash /
+            # hang faults route through repro.cluster.faults instead
+            self.sched.on_evict(w.worker_id, now, cause="revoke")
         self.killed += len(victims)
         self.storm_log.append((now, len(victims)))
         if self.factory is not None and self.suppress_s > 0 and victims:

@@ -216,13 +216,20 @@ def zone_byte_summary(plane) -> Dict[str, Dict[str, float]]:
     moved = plane.moved.as_dict()
     empty = {f: 0 for f in METER_FIELDS}
     shipped = getattr(plane, "kv_shipped", {}) or {}
-    for zone in sorted(set(planned) | set(moved) | set(shipped)):
+    ckpt = getattr(plane, "kv_ckpt", {}) or {}
+    lost = getattr(plane, "kv_lost", {}) or {}
+    for zone in sorted(set(planned) | set(moved) | set(shipped)
+                       | set(ckpt) | set(lost)):
         row = dict(empty, **moved.get(zone, {}))
         row["planned_minus_moved"] = sum(
             planned.get(zone, {}).get(f, 0) - row[f] for f in empty)
         # phase-attributable slice of the link bytes above: KV handoffs
         # that LANDED in this zone (already included in in_local/in_cross)
         row["kv_shipped"] = shipped.get(zone, 0)
+        # crash-safety slices: checkpoint snapshots that LANDED here, and
+        # parked/suspended KV voided because its holder died
+        row["kv_ckpt"] = ckpt.get(zone, 0)
+        row["kv_lost"] = lost.get(zone, 0)
         out[zone] = row
     return out
 
@@ -254,6 +261,14 @@ def format_zone_bytes(plane, label: str = "") -> str:
         lines.append(
             f"  kv disaggregation: shipped {kv['shipped_bytes']/gb:.2f} GB "
             f"({kv['ship_events']} handoff(s))")
+    if kv and kv.get("ckpt_events"):
+        lines.append(
+            f"  kv crash safety: checkpointed {kv['ckpt_bytes']/gb:.2f} GB "
+            f"({kv['ckpt_events']} snapshot(s))")
+    if kv and kv.get("lost_events"):
+        lines.append(
+            f"  kv lost: {kv['lost_bytes']/gb:.2f} GB voided with dead "
+            f"holders ({kv['lost_events']} snapshot(s))")
     return "\n".join(lines)
 
 

@@ -119,6 +119,10 @@ class Request:
     prefill_s: float = 0.0            # accumulated PREFILL phase seconds
     ship_s: float = 0.0               # accumulated KV handoff seconds
     cold_started: bool = False        # any phase paid a cold start
+    # -- crash safety (see docs/failure-model.md) ----------------------
+    ckpt_worker: Optional[str] = None  # host of the last landed checkpoint
+    ckpt_steps: int = 0               # steps_done the checkpoint captured
+    ckpt_nbytes: int = 0              # checkpoint snapshot size
 
     @property
     def n_units(self) -> int:
@@ -268,6 +272,11 @@ class Scheduler:
         self.clock: Callable[[], float] = lambda: 0.0
         # per-recipe FIFO lanes; global order recovered via request_id
         self.lanes: "OrderedDict[str, Deque[Request]]" = OrderedDict()
+        # upper bound on suspended requests queued in lanes: bumped on
+        # requeue, re-counted exactly whenever _heads() scans.  May go
+        # stale HIGH (a suspended head dispatched or voided) — never
+        # low — so a zero is trusted as the no-suspensions fast path
+        self._suspended_queued = 0
         self.workers: Dict[str, Worker] = {}
         self.running: Dict[int, Tuple[Request, str]] = {}
         # -- metrics -------------------------------------------------
@@ -285,6 +294,17 @@ class Scheduler:
         self.kv_ships = 0             # KV handoffs committed to the plane
         self.local_decodes = 0        # same-worker fast-path decodes
         self.prefills_done = 0        # PREFILL phases completed
+        # -- crash safety (docs/failure-model.md) --------------------
+        # decode-step checkpoint cadence: every N settled steps a batch
+        # member exports its KV snapshot to a host in another failure
+        # zone as an OpKind.KV_CKPT plane op (None disables)
+        self.ckpt_every_steps: Optional[int] = None
+        self.kv_ckpts = 0             # checkpoints committed to the plane
+        self.kv_ckpts_deferred = 0    # cadence boundaries the budget pushed
+        self.ckpt_resumes = 0         # crash victims resumed from a ckpt
+        # failure classes funneled through on_evict: (t, worker_id, cause)
+        self.failure_log: List[Tuple[float, str, str]] = []
+        self.evictions_by_cause: Dict[str, int] = {}
         # the serving gateway installs itself here (repro.cluster.gateway);
         # ingress() then routes submissions through its admission edge
         self.gateway = None
@@ -307,6 +327,10 @@ class Scheduler:
         # supply-side observability: joins/evictions per device class
         self.pool_joins: Dict[str, int] = {}
         self.pool_evictions: Dict[str, int] = {}
+        # zone of every worker EVER seen: a voided snapshot is metered
+        # (kv_lost) after its holder already left self.workers, so the
+        # holder's zone must outlive the membership entry
+        self._zone_of: Dict[str, str] = {}
         # the plane stamps first-READY ("warm") times with this clock
         self.plane.clock = lambda: self.clock()
 
@@ -474,6 +498,8 @@ class Scheduler:
         the head of the batch section (behind queued interactive work) —
         preserving the interactive-prefix lane invariant."""
         lane = self.lanes.setdefault(request.recipe_key, deque())
+        if request.suspended:
+            self._suspended_queued += 1
         if request.slo == "interactive":
             lane.appendleft(request)
         else:
@@ -485,19 +511,44 @@ class Scheduler:
     def add_worker(self, worker: Worker, now: float = 0.0) -> None:
         worker.joined_s = now
         self.workers[worker.worker_id] = worker
+        self._zone_of[worker.worker_id] = worker.zone
         self.worker_events.append((now, len(self.workers)))
         cls = worker.device.name
         self.pool_joins[cls] = self.pool_joins.get(cls, 0) + 1
 
-    def on_evict(self, worker_id: str, now: float = 0.0) -> List[Request]:
+    def _live_ckpt_holder(self, req: Request) -> Optional[Worker]:
+        """The worker holding ``req``'s last landed checkpoint, if it is
+        still pooled with the recipe warm — i.e. the snapshot is
+        adoptable right now."""
+        if req.ckpt_worker is None or req.exclusive:
+            return None
+        w = self.workers.get(req.ckpt_worker)
+        if w is None or not w.has_ready(req.recipe_key):
+            return None
+        return w
+
+    def on_evict(self, worker_id: str, now: float = 0.0,
+                 cause: str = "revoke") -> List[Request]:
         """Worker reclaimed with no grace period. Returns requeued requests.
+
+        ``cause`` records the failure class that funneled here — "revoke"
+        (advance-notice reclamation, the default), "crash" (silent death
+        the FailureDetector noticed on lease expiry) or "hang" (the
+        decode-progress watchdog fired).  IDEMPOTENT: a double eviction
+        of the same worker (a ChurnInjector storm racing an elastic
+        release or a factory drain) is a no-op — no double-requeue, no
+        double-refund, no double-counted metrics.
 
         Only UNFINISHED requests are requeued (members that already left
         the dynamic batch keep their completion records); an exclusive
-        task loses its whole batch, a stream member only its progress.
-        Covers eviction mid-staging/mid-batch: residencies (READY,
-        STAGING and SPILLED alike) vanish from the registry, so no later
-        routing decision can count on the lost copies.
+        task loses its whole batch, a stream member only its progress —
+        and a stream member with a LIVE CHECKPOINT on a surviving worker
+        loses only the steps since that checkpoint: it re-enters its
+        lane suspended on the checkpoint holder and resumes from the
+        snapshot there (see docs/failure-model.md).  Covers eviction
+        mid-staging/mid-batch: residencies (READY, STAGING and SPILLED
+        alike) vanish from the registry, so no later routing decision
+        can count on the lost copies.
         """
         worker = self.workers.pop(worker_id, None)
         if worker is None:
@@ -505,6 +556,9 @@ class Scheduler:
         self.worker_events.append((now, len(self.workers)))
         cls = worker.device.name
         self.pool_evictions[cls] = self.pool_evictions.get(cls, 0) + 1
+        self.failure_log.append((now, worker_id, cause))
+        self.evictions_by_cause[cause] = \
+            self.evictions_by_cause.get(cause, 0) + 1
         # the plane refunds the worker's in-flight staging ops and leaves
         # LOST tombstones it later turns into re-replication intents
         self.plane.drop_worker(worker_id, now)
@@ -515,6 +569,23 @@ class Scheduler:
             del self.running[req.request_id]
             req.attempts += 1
             self.evicted_tasks += 1
+            holder = self._live_ckpt_holder(req)
+            if holder is not None:
+                # crash-safe resume: only the decode since the last
+                # checkpoint is wasted; the request parks suspended on
+                # the checkpoint holder and adopts the snapshot there
+                self.evicted_inferences += max(
+                    0, req.steps_done - req.ckpt_steps)
+                req.steps_done = req.ckpt_steps
+                req.t_first_step = None
+                req.suspended = True
+                req.suspended_on = holder.worker_id
+                req.kv_nbytes = req.ckpt_nbytes
+                if req.phase == DECODE:
+                    req.prefill_worker = holder.worker_id
+                self.ckpt_resumes += 1
+                self._requeue(req)
+                continue
             self.evicted_inferences += (req.n_units if req.exclusive
                                         else req.steps_done)
             req.steps_done = 0        # decode state died with the worker
@@ -535,7 +606,39 @@ class Scheduler:
         return [w for w in self.workers.values() if w.idle]
 
     def _heads(self) -> List[Request]:
-        heads = [lane[0] for lane in self.lanes.values() if lane]
+        """Routable lane heads.  A lane contributes its head, and — when
+        suspended requests are queued (preemption victims, checkpoint
+        resumes) — one candidate per DISTINCT snapshot holder plus the
+        first non-suspended request.  A suspended request can only run
+        where its snapshot lives; without the extra candidates a
+        suspended head whose holder is momentarily full would stall the
+        whole lane (fresh work AND victims pinned to other holders).
+
+        The full-lane scan only runs while suspensions are queued
+        (`_suspended_queued` upper bound, re-counted exactly here);
+        otherwise heads are the lane fronts — O(#lanes), which matters
+        because _dispatch ages heads on EVERY dispatch."""
+        if self._suspended_queued == 0:
+            heads = [lane[0] for lane in self.lanes.values() if lane]
+            heads.sort(key=lambda r: r.request_id)
+            return heads
+        heads: List[Request] = []
+        suspended = 0
+        for lane in self.lanes.values():
+            if not lane:
+                continue
+            holders: set = set()
+            fresh = False
+            for r in lane:
+                if r.suspended:
+                    suspended += 1
+                    if r.suspended_on not in holders:
+                        holders.add(r.suspended_on)
+                        heads.append(r)
+                elif not fresh:
+                    fresh = True
+                    heads.append(r)
+        self._suspended_queued = suspended
         heads.sort(key=lambda r: r.request_id)
         return heads
 
@@ -543,7 +646,12 @@ class Scheduler:
         """Could ``w`` (eventually) serve ``req``?  The reservation
         predicate: capacity-only (`could_host`), because a stream worker
         that keeps admitting is never idle yet must still be reservable
-        for an aged head it could serve once its batch drains."""
+        for an aged head it could serve once its batch drains.  A
+        suspended request is usable ONLY by its snapshot holder — a
+        starved suspended head must reserve that one worker's slots,
+        not idle the rest of the pool."""
+        if req.suspended:
+            return w.worker_id == req.suspended_on
         if not req.exclusive and \
                 w.stream_slots_free(req.recipe_key, req.active_params) > 0:
             return True
@@ -584,28 +692,44 @@ class Scheduler:
             self.gateway.expire(now)
         # a suspended request whose snapshot died (worker evicted, or the
         # library spilled — payloads cleared) restarts from scratch; a
-        # decode-phase request whose prefill KV holder died re-prefills
-        for lane in self.lanes.values():
-            for r in lane:
-                if r.suspended:
-                    w = self.workers.get(r.suspended_on)
-                    if w is None or not w.has_ready(r.recipe_key):
-                        r.suspended = False
-                        r.suspended_on = None
-                        r.steps_done = 0
-                        r.t_first_step = None
-                        if r.phase == DECODE:
+        # decode-phase request whose prefill KV holder died re-prefills.
+        # Either way the voided snapshot is METERED on the plane as
+        # kv_lost in the dead holder's zone — a crash destroyed bytes the
+        # spill/ship meters recorded as saved.  Only suspended or
+        # DECODE-phase entries can need voiding, so the lane scan is
+        # skipped entirely when neither can exist
+        if self._suspended_queued > 0 or self.disaggregate:
+            for lane in self.lanes.values():
+                for r in lane:
+                    if r.suspended:
+                        w = self.workers.get(r.suspended_on)
+                        if w is None or not w.has_ready(r.recipe_key):
+                            if r.kv_nbytes > 0:
+                                self.plane.record_kv_lost(
+                                    r.recipe_key,
+                                    self._zone_of.get(r.suspended_on, "z0"),
+                                    r.kv_nbytes)
+                            r.suspended = False
+                            r.suspended_on = None
+                            r.steps_done = 0
+                            r.t_first_step = None
+                            r.kv_nbytes = 0
+                            if r.phase == DECODE:
+                                r.phase = PREFILL
+                                r.prefill_worker = None
+                    elif r.phase == DECODE:
+                        w = self.workers.get(r.prefill_worker)
+                        if w is None or not w.has_ready(r.recipe_key):
+                            if r.kv_nbytes > 0:
+                                self.plane.record_kv_lost(
+                                    r.recipe_key,
+                                    self._zone_of.get(r.prefill_worker, "z0"),
+                                    r.kv_nbytes)
                             r.phase = PREFILL
                             r.prefill_worker = None
                             r.kv_nbytes = 0
-                elif r.phase == DECODE:
-                    w = self.workers.get(r.prefill_worker)
-                    if w is None or not w.has_ready(r.recipe_key):
-                        r.phase = PREFILL
-                        r.prefill_worker = None
-                        r.kv_nbytes = 0
-                        r.steps_done = 0
-                        r.t_first_step = None
+                            r.steps_done = 0
+                            r.t_first_step = None
         heads = self._heads()
         if not heads:
             return None
@@ -682,7 +806,10 @@ class Scheduler:
                 backlog = len(self.lanes[key])
                 free = sum(w.stream_slots_free(key, req.active_params)
                            for w in joinable)
-                can_found = backlog > free and any(
+                # a suspended request can ONLY run where its snapshot
+                # lives — "found elsewhere instead" is never an option
+                # for it, so the backlog heuristic must not defer it
+                can_found = not req.suspended and backlog > free and any(
                     w.can_host(recipe) and foundable(req, w)
                     and allowed(req, w) for w in idle)
                 if not can_found:
@@ -853,6 +980,12 @@ class Scheduler:
         w.running_by_recipe[victim.recipe_key] = max(0, n - 1)
         victim.suspended = True
         victim.suspended_on = w.worker_id
+        if victim.kv_nbytes <= 0:
+            # price the parked snapshot (the same per-slot estimate the
+            # spill meters use) so a holder death can meter what it
+            # destroyed; live mode overwrites with the measured size
+            victim.kv_nbytes = self.registry.recipes[
+                victim.recipe_key].decode_slot_bytes(victim.active_params)
         victim.preemptions += 1
         self.preemptions += 1
         self._note_event(self._preempts, victim.recipe_key, self.clock())
@@ -863,8 +996,14 @@ class Scheduler:
                   preempt: Optional[Request] = None,
                   kv_ship: Optional[PlanOp] = None) -> Assignment:
         lane = self.lanes[req.recipe_key]
-        assert lane and lane[0] is req
-        lane.popleft()
+        assert lane and req in lane
+        if lane[0] is req:
+            lane.popleft()
+        else:
+            # a non-front head (see _heads): a suspended request pinned
+            # to a different holder, or fresh work jumping a blocked
+            # suspended prefix — removal preserves lane order
+            lane.remove(req)
         # age every older head this dispatch jumped past
         jumped = False
         for other in self._heads():

@@ -50,6 +50,43 @@ def storm_schedule(first_s: float, every_s: float, n_storms: int,
             for i in range(n_storms)]
 
 
+# fault kinds a Fault event may carry (see docs/failure-model.md):
+#   revoke   — advance-notice clean eviction (the Storm path)
+#   crash    — silent crash-stop; only the FailureDetector's lease
+#              expiry notices, bounding detection latency by lease_s
+#   hang     — worker stays leased but decode stops making progress;
+#              the detector's step watchdog converts it to an eviction
+#   transfer — one in-flight context-plane transfer sourced from the
+#              victim fails; exercises abort-refund-retry with backoff
+FAULT_KINDS = ("revoke", "crash", "hang", "transfer")
+
+
+@dataclass(frozen=True)
+class Fault:
+    """One scheduled fault event: ``n_workers`` hit by ``kind`` at
+    ``t_s``.  Victim selection reuses the Storm machinery (zone
+    correlation, staging preference) so crash storms stress the same
+    correlated-loss paths clean revocations do."""
+    t_s: float
+    kind: str
+    n_workers: int = 1
+    zone_correlated: bool = True
+    revoke_staging: bool = False
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+
+
+def fault_schedule(first_s: float, every_s: float, n_faults: int,
+                   kind: str, n_workers: int = 1, *,
+                   zone_correlated: bool = True) -> List[Fault]:
+    """A regular train of ``n_faults`` identical fault events."""
+    return [Fault(first_s + i * every_s, kind, n_workers,
+                  zone_correlated=zone_correlated)
+            for i in range(n_faults)]
+
+
 def constant(n: int) -> Trace:
     return [(0.0, n)]
 

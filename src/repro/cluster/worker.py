@@ -49,6 +49,12 @@ class Worker:
         self.running_by_recipe: Dict[str, int] = {}   # in-flight REQUESTS
         self.open_streams: Set[str] = set()   # recipes with a live batch
         self.staging: bool = False            # context materialising
+        # crash/hang fault marker (repro.cluster.faults): the wall time
+        # the worker silently stopped executing.  The SCHEDULER cannot
+        # see this — only the FailureDetector's lease/watchdog converts
+        # it into an eviction — but the sim executor must stop crediting
+        # progress past this instant (a dead GPU completes nothing).
+        self.frozen_s: Optional[float] = None
         self.tasks_done: int = 0
         self.inferences_done: int = 0
         self._use_seq = itertools.count()

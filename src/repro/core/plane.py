@@ -90,17 +90,19 @@ class OpKind(str, Enum):
     SPILL = "spill"            # co-resident library demoted to local disk
     EVICT = "evict"            # residency record dropped (spilled copy)
     KV_SHIP = "kv_ship"        # prefill KV snapshot -> decode worker
+    KV_CKPT = "kv_ckpt"        # periodic KV snapshot -> other-zone host
 
 
 ACQUIRE_KINDS = (OpKind.FETCH, OpKind.PEER_COPY, OpKind.PROMOTE)
 
 # op kinds that move bytes over the peer links (NIC in-zone, DCN cross-
 # zone) and therefore ride the zone meters and the LinkBudget window.
-# KV_SHIP is the disaggregation handoff: unlike PEER_COPY it moves
-# REQUEST state (a KV snapshot), not a recipe residency, so it never
-# touches the registry — but its bytes are priced and admission-checked
-# exactly like replication traffic.
-PEER_LINK_KINDS = (OpKind.PEER_COPY, OpKind.KV_SHIP)
+# KV_SHIP is the disaggregation handoff and KV_CKPT the crash-safety
+# checkpoint: unlike PEER_COPY they move REQUEST state (a KV snapshot),
+# not a recipe residency, so they never touch the registry — but their
+# bytes are priced and admission-checked exactly like replication
+# traffic.
+PEER_LINK_KINDS = (OpKind.PEER_COPY, OpKind.KV_SHIP, OpKind.KV_CKPT)
 
 
 @dataclass
@@ -390,6 +392,18 @@ class ContextPlane:
         # is the phase-attributable view kv_summary() reports.
         self.kv_shipped: Dict[str, int] = {}      # dst zone -> bytes shipped
         self.kv_ship_events = 0
+        # crash-safety KV checkpoints (decode worker -> other-zone host):
+        # request state over the peer links again, so they ride the
+        # planned/moved meters and the budget window like KV_SHIP.  A
+        # request can have a ship AND a checkpoint in flight at once, so
+        # checkpoints get their own request-keyed table.
+        self._inflight_ckpts: Dict[int, PlanOp] = {}
+        self.kv_ckpt: Dict[str, int] = {}         # dst zone -> ckpt bytes
+        self.kv_ckpt_events = 0
+        # KV snapshots voided because their holder died before resume:
+        # bytes the crash DESTROYED (vs moved), metered per holder zone.
+        self.kv_lost: Dict[str, int] = {}         # holder zone -> bytes lost
+        self.kv_lost_events = 0
 
     # -- registration ------------------------------------------------------
     def register(self, recipe) -> str:
@@ -663,14 +677,86 @@ class ContextPlane:
         self.budget.refund(op, now)
         self.ops_aborted += 1
 
+    # -- crash safety: KV_CKPT lifecycle -----------------------------------
+    def kv_ckpt_op(self, key: str, src_worker: str, dst_worker: str,
+                   nbytes: int, *, src_zone: str, dst_zone: str) -> PlanOp:
+        """Price one periodic KV checkpoint (decode worker -> a host in a
+        different failure zone) as a plan op.  Pure, like
+        :meth:`kv_ship_op`: nothing is charged until
+        :meth:`commit_kv_ckpt`."""
+        return PlanOp(OpKind.KV_CKPT, key, dst_worker, nbytes=int(nbytes),
+                      src_worker=src_worker, src_zone=src_zone,
+                      dst_zone=dst_zone)
+
+    def ckpt_admits(self, op: PlanOp, now: float) -> bool:
+        """Would this checkpoint fit the involved zones' budget windows?
+        A checkpoint the window cannot absorb is DEFERRED to the next
+        cadence boundary — never dropped, never jumping the queue ahead
+        of demand traffic."""
+        return self.budget.admits(op, now)
+
+    def commit_kv_ckpt(self, request_id: int, op: PlanOp,
+                       now: float = 0.0) -> None:
+        """Charge budget + planned meters for one KV checkpoint and
+        register it in flight.  Checkpoints never touch the registry:
+        only request state moves."""
+        assert op.kind is OpKind.KV_CKPT
+        assert request_id not in self._inflight_ckpts, \
+            f"request {request_id} already has a KV checkpoint in flight"
+        self.ops_committed += 1
+        self.planned.charge_op(op)
+        self.budget.charge(op, now)
+        self._inflight_ckpts[request_id] = op
+
+    def kv_ckpt_completed(self, request_id: int,
+                          moved_bytes: Optional[int] = None) -> None:
+        """The snapshot landed on the checkpoint host: charge moved
+        meters and the phase-attributable kv_ckpt view.  Stale-safe: a
+        completion firing after an eviction already aborted the
+        checkpoint is a no-op."""
+        op = self._inflight_ckpts.pop(request_id, None)
+        if op is None:
+            return
+        measured = op.nbytes if moved_bytes is None else int(moved_bytes)
+        self.moved.charge_op(PlanOp(op.kind, op.recipe_key, op.worker_id,
+                                    nbytes=measured,
+                                    src_worker=op.src_worker,
+                                    src_zone=op.src_zone,
+                                    dst_zone=op.dst_zone))
+        self.kv_ckpt[op.dst_zone] = \
+            self.kv_ckpt.get(op.dst_zone, 0) + measured
+        self.kv_ckpt_events += 1
+        self.ops_completed += 1
+
+    def kv_ckpt_aborted(self, request_id: int, now: float = 0.0) -> None:
+        """Checkpoint abandoned (an endpoint died mid-transfer): refund
+        budget and planned meters.  Idempotent."""
+        op = self._inflight_ckpts.pop(request_id, None)
+        if op is None:
+            return
+        self.planned.charge_op(op, sign=-1)
+        self.budget.refund(op, now)
+        self.ops_aborted += 1
+
+    def record_kv_lost(self, key: str, zone: str, nbytes: int) -> None:
+        """Meter a suspended request's KV snapshot voided because its
+        holder died before resume (the bytes a crash destroyed — the
+        decode that produced them must be repeated)."""
+        self.kv_lost[zone] = self.kv_lost.get(zone, 0) + int(nbytes)
+        self.kv_lost_events += 1
+
     def kv_summary(self) -> Dict[str, int]:
-        """Preemption + disaggregation KV movement totals."""
+        """Preemption + disaggregation + crash-safety KV movement totals."""
         return {"spilled_bytes": sum(self.kv_spilled.values()),
                 "resumed_bytes": sum(self.kv_resumed.values()),
                 "spill_events": self.kv_spill_events,
                 "resume_events": self.kv_resume_events,
                 "shipped_bytes": sum(self.kv_shipped.values()),
-                "ship_events": self.kv_ship_events}
+                "ship_events": self.kv_ship_events,
+                "ckpt_bytes": sum(self.kv_ckpt.values()),
+                "ckpt_events": self.kv_ckpt_events,
+                "lost_bytes": sum(self.kv_lost.values()),
+                "lost_events": self.kv_lost_events}
 
     # -- worker loss & recovery -------------------------------------------
     def drop_worker(self, worker_id: str, now: float = 0.0) -> List[str]:
@@ -688,6 +774,9 @@ class ContextPlane:
         for rid, op in list(self._inflight_ships.items()):
             if worker_id in (op.worker_id, op.src_worker):
                 self.kv_ship_aborted(rid, now)
+        for rid, op in list(self._inflight_ckpts.items()):
+            if worker_id in (op.worker_id, op.src_worker):
+                self.kv_ckpt_aborted(rid, now)
         reg = self.registry
         was_ready = {key for key, hosts in reg.hosts.items()
                      if hosts.get(worker_id) is HostState.READY}
@@ -718,7 +807,8 @@ class ContextPlane:
 
     @property
     def inflight_ops(self) -> int:
-        return len(self._inflight) + len(self._inflight_ships)
+        return (len(self._inflight) + len(self._inflight_ships)
+                + len(self._inflight_ckpts))
 
     # -- introspection -----------------------------------------------------
     def meters(self) -> Dict[str, Dict[str, Dict[str, int]]]:

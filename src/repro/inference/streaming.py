@@ -352,6 +352,7 @@ class StreamingDecoder:
         # not pollute the spill/resume parity meters
         self._adopted: set = set()
         self.kv_adopt_bytes_total = 0
+        self.kv_ckpt_bytes_total = 0              # non-destructive exports
 
     # -- membership -----------------------------------------------------
     def ensure(self, rid: int, claim) -> None:
@@ -517,6 +518,39 @@ class StreamingDecoder:
         self._adopted.add(rid)
         return int(sum(x.nbytes
                        for x in jax.tree_util.tree_leaves(snap["kv"])))
+
+    # -- crash safety: non-destructive KV checkpoint export -------------
+    def checkpoint(self, rid: int) -> Optional[dict]:
+        """Export a COPY of ``rid``'s current decode state (the KV_CKPT
+        path): the same host-side snapshot :meth:`suspend` builds, but
+        the request keeps decoding here — its slot, page mappings and
+        refcounts are untouched.  A checkpoint host parks the copy via
+        :meth:`adopt`; if this worker later dies, decode resumes
+        token-exactly from the snapshot there, losing only the steps
+        generated since the export.  Returns None when ``rid`` holds no
+        bound slot (nothing to snapshot)."""
+        slot = self.pool.slot_of.get(rid)
+        if slot is None or rid not in self._tokens or self._cache is None:
+            return None
+        snap: dict = {
+            "tokens": list(self._tokens[rid]),
+            "prompt_end": self._prompt_end[rid],
+            "truncated": self.truncated.get(rid, False),
+            "pos": int(np.asarray(self._cache["pos"])[slot]),
+        }
+        if self.paged:
+            mapped = [(pi, int(p)) for pi, p in enumerate(self._table[slot])
+                      if int(p) != PagePool.TRASH]
+            idx = np.asarray([p for _pi, p in mapped], np.int32)
+            snap["page_idx"] = [pi for pi, _p in mapped]
+            snap["kv"] = jax.tree_util.tree_map(
+                lambda x: np.asarray(x[:, idx]), self._cache["stages"])
+        else:
+            snap["kv"] = jax.tree_util.tree_map(
+                lambda x: np.asarray(x[:, slot]), self._cache["stages"])
+        self.kv_ckpt_bytes_total += int(sum(
+            x.nbytes for x in jax.tree_util.tree_leaves(snap["kv"])))
+        return snap
 
     # -- the step -------------------------------------------------------
     def step(self, rids: Sequence[int]) -> Dict[int, int]:

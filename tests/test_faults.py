@@ -1,0 +1,304 @@
+"""Crash-safe decode: failure taxonomy, lease detection, KV checkpoints.
+
+Covers the failure-domain contract (docs/failure-model.md):
+
+* ``Scheduler.on_evict`` is IDEMPOTENT and records the failure class;
+* the KV_CKPT plane-op lifecycle meters to parity (commit/complete/
+  abort/drop_worker) and is stale-safe;
+* :class:`FailureDetector` converts a silent crash into an eviction
+  within one lease interval, and a hang within the step watchdog;
+* a crash victim with a landed checkpoint resumes from it, wasting
+  strictly fewer decode tokens than the restart-fresh baseline at equal
+  completed work, with zero slot/byte leaks;
+* voided snapshots (holder died) are metered as ``kv_lost``;
+* :class:`FaultInjector` victim selection is seed-deterministic and its
+  transfer faults drive the abort-refund-retry path to completion.
+"""
+import pytest
+
+from repro.core import WarmPoolPolicy
+from repro.cluster import (Application, FailureDetector, FaultInjector,
+                           Scheduler, make_sim)
+from repro.cluster.traces import Fault, fault_schedule
+
+from test_forecast import A10, AP, RECIPE
+
+LEASE_S = 15.0
+
+
+def _pool(n, **kw):
+    sched, ex, fac = make_sim(devices=[A10] * 4, workers_per_zone=2, **kw)
+    fac.reconcile(n)
+    return sched, ex, fac
+
+
+class TestOnEvictIdempotent:
+    def test_double_eviction_is_a_noop(self):
+        sched, ex, fac = _pool(4)
+        wid = next(iter(sched.workers))
+        sched.on_evict(wid, 5.0, cause="crash")
+        log_n = len(sched.failure_log)
+        evi = dict(sched.pool_evictions)
+        causes = dict(sched.evictions_by_cause)
+        assert sched.on_evict(wid, 6.0, cause="crash") == []
+        assert len(sched.failure_log) == log_n
+        assert sched.pool_evictions == evi
+        assert sched.evictions_by_cause == causes
+
+    def test_double_eviction_mid_run_requeues_once(self):
+        sched, ex, fac = _pool(4, warm_pool=WarmPoolPolicy())
+        app = Application(sched)
+        key = app.register(RECIPE, active_params=AP)
+        app.submit_stream(ex, [dict(recipe_key=key, decode_steps=64,
+                                    arrival_s=0.0) for _ in range(4)])
+        ex.loop.run(until=30.0)
+        wid = next(wid for _, wid in sched.running.values())
+        first = sched.on_evict(wid, 30.0)
+        assert first, "eviction of the batch host requeued nothing"
+        lanes_n = sum(len(lane) for lane in sched.lanes.values())
+        assert sched.on_evict(wid, 31.0) == []
+        assert sum(len(lane) for lane in sched.lanes.values()) == lanes_n
+        ex.run()
+        assert sched.done
+
+    def test_cause_recorded(self):
+        sched, ex, fac = _pool(3)
+        wids = list(sched.workers)
+        sched.on_evict(wids[0], 1.0, cause="crash")
+        sched.on_evict(wids[1], 2.0, cause="hang")
+        sched.on_evict(wids[2], 3.0)                # default: revoke
+        assert sched.evictions_by_cause == {"crash": 1, "hang": 1,
+                                            "revoke": 1}
+        assert [c for _, _, c in sched.failure_log] == \
+            ["crash", "hang", "revoke"]
+
+
+class TestKvCkptPlane:
+    def test_lifecycle_meters_to_parity(self):
+        plane = Scheduler().plane
+        op = plane.kv_ckpt_op("k", "wA", "wB", 1000,
+                              src_zone="z0", dst_zone="z1")
+        assert plane.ckpt_admits(op, 0.0)
+        plane.commit_kv_ckpt(7, op)
+        assert plane.inflight_ops == 1
+        assert plane.planned.as_dict() != plane.moved.as_dict()
+        plane.kv_ckpt_completed(7)
+        assert plane.inflight_ops == 0
+        assert plane.kv_ckpt == {"z1": 1000}
+        assert plane.kv_ckpt_events == 1
+        assert plane.planned.as_dict() == plane.moved.as_dict()
+        plane.kv_ckpt_completed(7)                  # stale: no-op
+        assert plane.kv_ckpt_events == 1
+
+    def test_abort_refunds_and_is_idempotent(self):
+        plane = Scheduler().plane
+        op = plane.kv_ckpt_op("k", "wA", "wB", 500,
+                              src_zone="z0", dst_zone="z1")
+        plane.commit_kv_ckpt(8, op)
+        plane.kv_ckpt_aborted(8)
+        plane.kv_ckpt_aborted(8)
+        assert plane.inflight_ops == 0
+        assert plane.kv_ckpt == {}
+        assert plane.planned.as_dict() == plane.moved.as_dict()
+
+    def test_drop_worker_aborts_either_endpoint(self):
+        for dead in ("wA", "wB"):                   # src, then dst
+            plane = Scheduler().plane
+            op = plane.kv_ckpt_op("k", "wA", "wB", 500,
+                                  src_zone="z0", dst_zone="z1")
+            plane.commit_kv_ckpt(9, op)
+            plane.drop_worker(dead, 0.0)
+            assert plane.inflight_ops == 0, f"dead={dead}"
+            assert plane.planned.as_dict() == plane.moved.as_dict()
+
+    def test_duplicate_inflight_rid_rejected(self):
+        plane = Scheduler().plane
+        op = plane.kv_ckpt_op("k", "wA", "wB", 500,
+                              src_zone="z0", dst_zone="z1")
+        plane.commit_kv_ckpt(1, op)
+        with pytest.raises(AssertionError):
+            plane.commit_kv_ckpt(1, op)
+
+
+class TestFailureDetector:
+    def test_crash_detected_within_one_lease(self):
+        sched, ex, fac = _pool(4)
+        det = FailureDetector(ex, lease_s=LEASE_S)
+        wid = next(iter(sched.workers))
+        det.crash(wid, now=3.0)
+        assert wid in sched.workers, \
+            "a silent crash must not be visible before the lease expires"
+        ex.loop.run(until=3.0 + LEASE_S + 1.0)
+        assert wid not in sched.workers
+        (w, cause, t_fault, t_detect), = det.detection_log
+        assert (w, cause) == (wid, "crash")
+        assert 0.0 < t_detect - t_fault <= LEASE_S + 1e-9
+        assert sched.evictions_by_cause == {"crash": 1}
+
+    def test_hang_evicted_by_watchdog(self):
+        sched, ex, fac = _pool(4)
+        det = FailureDetector(ex, lease_s=LEASE_S)   # watchdog 2x lease
+        wid = next(iter(sched.workers))
+        det.hang(wid, now=0.0)
+        ex.loop.run(until=det.watchdog_s - 1.0)
+        assert wid in sched.workers, "watchdog fired early"
+        ex.loop.run(until=det.watchdog_s + 1.0)
+        assert wid not in sched.workers
+        assert sched.evictions_by_cause == {"hang": 1}
+        assert det.detection_log[0][1] == "hang"
+
+    def test_unknown_or_already_frozen_worker_noop(self):
+        sched, ex, fac = _pool(2)
+        det = FailureDetector(ex, lease_s=LEASE_S)
+        det.crash("w-not-there")
+        wid = next(iter(sched.workers))
+        det.crash(wid, now=0.0)
+        det.crash(wid, now=1.0)                      # already frozen
+        det.hang(wid, now=1.0)                       # likewise
+        ex.loop.run(until=5 * LEASE_S)
+        assert len(det.detection_log) == 1
+
+    def test_revoked_before_expiry_not_double_evicted(self):
+        sched, ex, fac = _pool(3)
+        det = FailureDetector(ex, lease_s=LEASE_S)
+        wid = next(iter(sched.workers))
+        det.crash(wid, now=0.0)
+        sched.on_evict(wid, 2.0)                     # storm got it first
+        ex.loop.run(until=3 * LEASE_S)
+        assert det.detection_log == []
+        assert sched.evictions_by_cause == {"revoke": 1}
+
+
+_CRASH_CACHE = {}
+
+
+def _crash_run(ckpt_every, *, seed=3):
+    if (ckpt_every, seed) in _CRASH_CACHE:
+        return _CRASH_CACHE[ckpt_every, seed]
+    trace = [(30.0 * i, 6) for i in range(40)]
+    sched, ex, fac = make_sim(devices=[A10] * 4, trace=trace,
+                              workers_per_zone=2,
+                              warm_pool=WarmPoolPolicy(),
+                              ckpt_every_steps=ckpt_every,
+                              retry_seed=seed)
+    app = Application(sched)
+    key = app.register(RECIPE, active_params=AP)
+    app.submit_stream(ex, [dict(recipe_key=key, decode_steps=256,
+                                arrival_s=i * 0.1) for i in range(48)])
+    det = FailureDetector(ex, lease_s=LEASE_S)
+    inj = FaultInjector(ex, fault_schedule(40.0, 60.0, 4, "crash", 3),
+                        detector=det, seed=seed)
+    inj.arm()
+    ex.run()
+    _CRASH_CACHE[ckpt_every, seed] = (sched, ex, det)
+    return sched, ex, det
+
+
+class TestCheckpointResume:
+    def test_crash_victims_resume_and_waste_less(self):
+        ckpt, ex1, det1 = _crash_run(8)
+        base, ex0, det0 = _crash_run(None)
+        assert ckpt.done and base.done
+        assert ckpt.completed_inferences == base.completed_inferences
+        assert ckpt.evictions_by_cause.get("crash", 0) > 0
+        assert ckpt.ckpt_resumes > 0, "no victim resumed from a ckpt"
+        assert ckpt.kv_ckpts > 0 and ckpt.plane.kv_ckpt_events > 0
+        assert ckpt.evicted_inferences < base.evicted_inferences
+        assert ckpt.makespan() <= base.makespan()
+        for sched, ex in ((ckpt, ex1), (base, ex0)):
+            assert not sched.running
+            assert sched.plane.inflight_ops == 0
+            assert sched.plane.planned.as_dict() == \
+                sched.plane.moved.as_dict()
+            for w in sched.workers.values():
+                for lib in w.libraries.values():
+                    assert not lib.batch
+        for _, cause, t_fault, t_detect in det1.detection_log:
+            if cause == "crash":
+                assert t_detect - t_fault <= LEASE_S + 1e-9
+
+    def test_checkpoint_plane_meters(self):
+        sched, ex, det = _crash_run(8)
+        kv = sched.plane.kv_summary()
+        assert kv["ckpt_bytes"] > 0 and kv["ckpt_events"] > 0
+        # attempts >= landed snapshots >= resumes actually consumed
+        assert sched.kv_ckpts >= kv["ckpt_events"] >= sched.ckpt_resumes
+        # observability surfaces the checkpoint traffic per zone
+        from repro.cluster import format_zone_bytes
+        txt = format_zone_bytes(sched.plane, label="t")
+        assert "kv crash safety" in txt
+
+
+class TestKvLostMetered:
+    def test_dead_suspension_holder_meters_kv_lost(self):
+        sched, ex, fac = _pool(4)
+        app = Application(sched)
+        key = app.register(RECIPE, active_params=AP)
+        r = app.make_request(key, decode_steps=4, arrival_s=0.0)
+        sched.submit(r)
+        w = next(iter(sched.workers.values()))
+        r.suspended, r.suspended_on, r.kv_nbytes = True, w.worker_id, 1234
+        # production suspensions enter lanes via _requeue, which bumps
+        # the scan gate; this white-box setup mutates in place, so
+        # mirror the bookkeeping
+        sched._suspended_queued += 1
+        sched.on_evict(w.worker_id, 1.0, cause="crash")
+        ex.pump()                       # route() voids the dead snapshot
+        assert sched.plane.kv_lost.get(w.zone) == 1234
+        assert sched.plane.kv_lost_events == 1
+        assert not r.suspended and r.kv_nbytes == 0
+        assert sched.plane.kv_summary()["lost_bytes"] == 1234
+
+    def test_dead_prefill_holder_meters_kv_lost(self):
+        from repro.cluster.scheduler import DECODE
+        sched, ex, fac = _pool(4, disaggregate=True)
+        app = Application(sched)
+        key = app.register(RECIPE, active_params=AP)
+        r = app.make_request(key, decode_steps=4, arrival_s=0.0)
+        sched.submit(r)
+        w = next(iter(sched.workers.values()))
+        r.phase, r.prefill_worker, r.kv_nbytes = DECODE, w.worker_id, 99
+        sched.on_evict(w.worker_id, 1.0)
+        ex.pump()
+        assert sched.plane.kv_lost.get(w.zone) == 99
+        assert r.kv_nbytes == 0
+
+
+class TestFaultInjector:
+    def test_victim_selection_is_seed_deterministic(self):
+        sched, ex, fac = _pool(8)
+        a = FaultInjector(ex, [], detector=None, seed=11)
+        b = FaultInjector(ex, [], detector=None, seed=11)
+        c = FaultInjector(ex, [], detector=None, seed=12)
+        f = Fault(0.0, "revoke", 4)
+        va = [w.worker_id for w in a._pick_victims(f)]
+        vb = [w.worker_id for w in b._pick_victims(f)]
+        c._pick_victims(f)             # different seed: must not raise
+        assert va == vb, "same seed must pick the same victims"
+        assert len(va) == 4
+
+    def test_crash_without_detector_rejected(self):
+        sched, ex, fac = _pool(2)
+        with pytest.raises(ValueError):
+            FaultInjector(ex, [Fault(1.0, "crash")], detector=None)
+        FaultInjector(ex, [Fault(1.0, "revoke")], detector=None)  # fine
+
+    def test_transfer_fault_aborts_and_retries_to_completion(self):
+        sched, ex, fac = _pool(3, warm_pool=WarmPoolPolicy())
+        app = Application(sched)
+        key = app.register(RECIPE, active_params=AP)
+        app.submit_stream(ex, [dict(recipe_key=key, decode_steps=32,
+                                    arrival_s=float(i)) for i in range(9)])
+        det = FailureDetector(ex, lease_s=LEASE_S)
+        inj = FaultInjector(ex, fault_schedule(2.0, 4.0, 30, "transfer",
+                                               2),
+                            detector=det, seed=0)
+        inj.arm()
+        ex.run()
+        assert sched.done
+        hit = sum(n for _, kind, n in inj.fault_log if kind == "transfer")
+        if hit:                         # a transfer was in flight to hit
+            assert ex.transfer_retries >= 1
+        assert sched.plane.inflight_ops == 0
+        assert sched.plane.planned.as_dict() == \
+            sched.plane.moved.as_dict()
